@@ -1,0 +1,84 @@
+"""Fig 13 — AlexNet per-layer latency/throughput across FF/BP/UP.
+
+The paper reports per-layer latency and TOPS for each training phase, with
+the conv weight-update lowered to matmul (Fig 6).  We reproduce the
+decomposition: per conv/FC layer, time FF, BP (vjp) and UP (the im2col
+lowering from models/cnn.py) on a reduced-resolution AlexNet, and derive
+each op's GFLOP so the phase balance can be compared with the paper's
+(FF ~4.4 TOPS vs BP/UP ~1.9-2.4 TOPS on NeuroTrainer = stable ratio 2:1
+from the 16- vs 32-bit datapath; our ratio comes from the measured times).
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs.paper_nets import ALEXNET
+from repro.models import cnn
+
+CFG = replace(ALEXNET, in_hw=64)     # reduced resolution for CPU timing
+BATCH = 4
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, CFG)
+    x = jax.random.normal(key, (BATCH, CFG.in_hw, CFG.in_hw, CFG.in_ch),
+                          jnp.float32)
+
+    # per-conv-layer FF / BP / UP
+    act = x
+    for i, (c, p) in enumerate(zip(CFG.convs, params["convs"])):
+        name = f"C{i+1}"
+        ff = jax.jit(lambda a, pp=p, cc=c: cnn._conv(a, cc, pp))
+        us_ff = time_fn(ff, act)
+        out = ff(act)
+        flops = 2 * out.size / (1 if c.pool == 0 else c.pool ** 2) \
+            * c.kernel * c.kernel * act.shape[-1]
+        rows.append(row(f"fig13/{name}_ff", us_ff, f"gflop={flops/1e9:.2f}"))
+
+        bp = jax.jit(lambda a, pp=p, cc=c: jax.vjp(
+            lambda aa: cnn._conv(aa, cc, pp), a)[1](
+                jnp.ones_like(cnn._conv(a, cc, pp)))[0])
+        rows.append(row(f"fig13/{name}_bp", time_fn(bp, act),
+                        f"gflop={2*flops/1e9:.2f}"))
+
+        # UP via the paper's im2col lowering (conv with near-input-size kernel)
+        pre_pool = jax.jit(lambda a, pp=p, cc=c: jax.lax.conv_general_dilated(
+            a, pp["w"].astype(a.dtype), (cc.stride, cc.stride), cc.pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC")))(act)
+        dy = jnp.ones_like(pre_pool)
+        if c.pad == "SAME" and c.stride == 1:
+            up = jax.jit(lambda a, d, cc=c: cnn.conv_up_as_matmul(
+                a, d, cc.kernel, cc.stride, cc.pad))
+            rows.append(row(f"fig13/{name}_up_lowered", time_fn(up, act, dy),
+                            f"gflop={flops/1e9:.2f}"))
+        act = ff(act)
+
+    # FC layers: FF + UP (vector-vector outer product, Fig 8)
+    flat = act.reshape(BATCH, -1)
+    for j, p in enumerate(params["fcs"]):
+        name = f"FC{j+1}"
+        ff = jax.jit(lambda a, pp=p: a @ pp["w"] + pp["b"])
+        us = time_fn(ff, flat)
+        rows.append(row(f"fig13/{name}_ff", us,
+                        f"gflop={2*flat.shape[0]*p['w'].size/1e9:.3f}"))
+        dy = jnp.ones((BATCH, p["w"].shape[1]), jnp.float32)
+        up = jax.jit(lambda a, d: jnp.einsum("td,tf->df", a, d) / BATCH)
+        rows.append(row(f"fig13/{name}_up_outer", time_fn(up, flat, dy),
+                        f"gflop={2*flat.shape[0]*p['w'].size/1e9:.3f}"))
+        flat = jax.nn.relu(ff(flat)) if j < len(params["fcs"]) - 1 else flat
+
+    # whole-model train step (inference vs training ratio, paper: 0.31/1.97ms)
+    batch = {"images": x, "labels": jnp.zeros((BATCH,), jnp.int32)}
+    fwd = jax.jit(lambda p: cnn.loss_fn(CFG, p, batch))
+    us_inf = time_fn(jax.jit(lambda p: cnn.forward(CFG, p, batch["images"])),
+                     params)
+    us_train = time_fn(jax.jit(lambda p: jax.grad(
+        lambda q: cnn.loss_fn(CFG, q, batch))(p)), params)
+    rows.append(row("fig13/full_inference", us_inf, "paper=0.31ms/img"))
+    rows.append(row("fig13/full_train", us_train,
+                    f"train/inf_ratio={us_train/us_inf:.2f};paper=6.3"))
+    return rows

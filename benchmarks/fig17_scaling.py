@@ -1,0 +1,41 @@
+"""Fig 17 — scaling to multiple modules (sync data parallelism).
+
+The paper models N NeuroTrainers + a central updater: per-minibatch time
+  T(N) = T_train + N * T_update + 2N * T_link,
+concluding scaling is off-chip-limited (13x at 64 modules vs one P100).
+
+We reproduce the PAPER's model with its constants (VGG16, 138M params,
+T_train 63.1 ms, K1 update 42.4 ms, link 4.61 ms) and then the TPU-pod
+analog where the update is itself data-parallel and dW moves over ICI
+as a ring all-reduce with optional bf16/int8 compression:
+  T(N) = T_train + 2 * dW_bytes * c / ici_bw   (N-independent ring!)
+— the structural reason pods scale where the hub-and-spoke K1 does not.
+"""
+from benchmarks.common import row
+
+PARAMS = 138e6
+T_TRAIN = 63.1e-3
+T_K1_UPDATE = 42.4e-3
+T_LINK = 4.61e-3
+BATCH = 32
+ICI_BW = 50e9
+
+
+def run() -> list:
+    rows = []
+    for n in (1, 4, 16, 64):
+        t = T_TRAIN + n * T_K1_UPDATE + 2 * n * T_LINK
+        ips = n * BATCH / t
+        rows.append(row(f"fig17/paper_hub_n{n}", t * 1e6,
+                        f"img_per_s={ips:.0f}"))
+    # paper reference point: 64 NT ~ 1900 img/s vs P100 150 img/s = 13x
+    rows.append(row("fig17/paper_claim", 0.0, "64xNT=1900img_s;P100=150img_s"))
+
+    for comp, cname in ((4, "f32"), (2, "bf16"), (1, "int8_ef")):
+        for n in (1, 4, 16, 64):
+            t_ar = 2 * PARAMS * comp / ICI_BW if n > 1 else 0.0
+            t = T_TRAIN + t_ar
+            ips = n * BATCH / t
+            rows.append(row(f"fig17/pod_ring_{cname}_n{n}", t * 1e6,
+                            f"img_per_s={ips:.0f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (also captured to
+bench_output.txt by the top-level run).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    from benchmarks import (fig10_precision, fig13_alexnet, fig16_suite,
+                            fig17_scaling, table1_mac, table6_efficiency)
+    suites = {
+        "table1": table1_mac, "fig10": fig10_precision,
+        "fig13": fig13_alexnet, "fig16": fig16_suite,
+        "table6": table6_efficiency, "fig17": fig17_scaling,
+    }
+    chosen = suites if args.only == "all" else {
+        k: suites[k] for k in args.only.split(",")}
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in chosen.items():
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness honest but resilient
+            failures.append((name, repr(e)))
+            print(f"{name}/ERROR,0.0,{type(e).__name__}", flush=True)
+    if failures:
+        for n, e in failures:
+            print(f"# FAILED {n}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

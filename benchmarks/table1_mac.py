@@ -1,0 +1,49 @@
+"""Table 1 — MAC design comparison (Float32 / Fixed / +SR / +SR LO).
+
+The paper synthesises four MAC datapaths and reports area/power.  The TPU
+analog is the *entropy cost of the SR writeback*: full SR consumes 16
+fresh random bits per element; SR-LO shares one 32-bit word per block (the
+single-LFSR trick).  We measure the SR-matmul wrapper under each mode and
+derive the entropy bytes moved — the quantity the paper's LO design
+eliminates — plus the paper's own synthesis numbers as reference constants.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops
+from repro.kernels.ref import sr_matmul_ref
+
+PAPER = {  # Table 1: area um^2, power mW @ 2.5 GHz, 15 nm
+    "float32": (2093.88, 5.37),
+    "fixed32_16": (986.23, 2.27),
+    "fixed32_16_sr": (2072.44, 5.79),
+    "fixed32_16_sr_lo": (1578.71, 3.78),
+}
+
+
+def run() -> list:
+    rows = []
+    m = n = k = 512
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k), jnp.bfloat16)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.bfloat16).T
+
+    # jnp reference paths (the kernels' oracles; interpret-mode Pallas is a
+    # Python emulator, so wall time is only meaningful for the jnp path)
+    f32 = jax.jit(lambda a, b: sr_matmul_ref(a, b))
+    us = time_fn(f32, a, b)
+    rows.append(row("table1/float32_matmul", us,
+                    f"paper_area={PAPER['float32'][0]}um2"))
+
+    for lo, tag in ((False, "sr"), (True, "sr_lo")):
+        fn = jax.jit(lambda a, b, key: sr_matmul_ref(
+            a, b, ops.make_rbits(key, (m, n), lo=lo)))
+        us = time_fn(fn, a, b, key)
+        entropy = m * n * 4 if not lo else (m * n // 256) * 4
+        pa, pp = PAPER[f"fixed32_16_{tag}"]
+        rows.append(row(f"table1/{tag}_matmul", us,
+                        f"entropy_bytes={entropy};paper_power={pp}mW"))
+    # derived headline: LO cuts entropy traffic 256x (paper: 64 RNGs -> 1)
+    rows.append(row("table1/entropy_reduction", 0.0, "sr_lo/sr=1/256"))
+    return rows

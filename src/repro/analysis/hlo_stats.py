@@ -1,0 +1,248 @@
+"""Static analyzer for compiled HLO text — the dry-run 'profiler'.
+
+XLA's ``cost_analysis()`` visits while-loop bodies ONCE (verified: a
+10-step scan reports 1 matmul of FLOPs), which silently undercounts every
+scan-over-layers model by ~n_layers x.  This module therefore re-derives
+the roofline numerators from ``compiled.as_text()`` directly:
+
+  * parses computations + per-computation symbol tables (instr -> shape),
+  * reads while trip counts from backend_config known_trip_count,
+  * multiplies per-computation dot/convolution FLOPs and collective bytes
+    through the call-graph multipliers.
+
+Validated against an unrolled compile in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_list_bytes(shapes: list) -> int:
+    return sum(_elems(d) * _DTYPE_BYTES.get(t, 0) for t, d in shapes)
+
+
+@dataclass
+class WhileEdge:
+    body: str
+    cond: str
+    trip: int
+
+
+@dataclass
+class Computation:
+    name: str
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = field(default_factory=lambda: defaultdict(int))
+    calls: list = field(default_factory=list)       # plain calls (x1)
+    whiles: list = field(default_factory=list)      # WhileEdge
+    shapes: dict = field(default_factory=dict)      # instr -> [(dtype, dims)]
+
+
+def _operands(body: str, op_start: int) -> list:
+    depth = 0
+    i = body.find("(", op_start)
+    start = i
+    while i < len(body):
+        if body[i] == "(":
+            depth += 1
+        elif body[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    return re.findall(r"%([\w\.\-]+)", body[start:i + 1])
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if line.endswith("{"):
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr:
+                cur = Computation(hdr.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = _OP_RE.search(rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        out_shapes = _SHAPE_RE.findall(rhs[:opm.start()])
+        cur.shapes[name] = out_shapes
+
+        if op == "dot":
+            out_elems = sum(_elems(d) for t, d in out_shapes
+                            if t in _DTYPE_BYTES)
+            ops_names = _operands(rhs, opm.start())
+            k = 1
+            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if cd is not None and ops_names:
+                lhs = cur.shapes.get(ops_names[0])
+                if lhs:
+                    dims = lhs[0][1].split(",") if lhs[0][1] else []
+                    for ci in (cd.group(1).split(",") if cd.group(1) else []):
+                        if int(ci) < len(dims):
+                            k *= int(dims[int(ci)])
+            cur.dot_flops += 2.0 * out_elems * k
+        elif op == "convolution":
+            out_elems = sum(_elems(d) for t, d in out_shapes
+                            if t in _DTYPE_BYTES)
+            ops_names = _operands(rhs, opm.start())
+            kelem = 1
+            if len(ops_names) >= 2:
+                ker = cur.shapes.get(ops_names[1])
+                if ker and ker[0][1]:
+                    kd = [int(x) for x in ker[0][1].split(",")]
+                    co = kd[-1] if kd else 1
+                    kelem = max(1, math.prod(kd) // max(co, 1))
+            cur.conv_flops += 2.0 * out_elems * kelem
+        elif op == "while":
+            b = re.search(r"body=%?([\w\.\-]+)", rhs)
+            c = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            t = _TRIP_RE.search(rhs)
+            trip = int(t.group(1)) if t else 1
+            if b and c:
+                cur.whiles.append(WhileEdge(b.group(1), c.group(1), trip))
+        else:
+            matched = False
+            for coll in COLLECTIVES:
+                if op.startswith(coll) and not op.endswith("-done"):
+                    ops_names = _operands(rhs, opm.start())
+                    by = sum(_shape_list_bytes(cur.shapes.get(o, []))
+                             for o in ops_names)
+                    if by == 0:
+                        by = _shape_list_bytes(out_shapes)
+                    cur.collective_bytes[coll] += by
+                    cur.collective_counts[coll] += 1
+                    matched = True
+                    break
+            if not matched:
+                for pat in (r"calls=%?([\w\.\-]+)", r"to_apply=%?([\w\.\-]+)",
+                            r"true_computation=%?([\w\.\-]+)",
+                            r"false_computation=%?([\w\.\-]+)"):
+                    for g in re.findall(pat, rhs):
+                        cur.calls.append(g)
+                bc = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if bc:
+                    for g in re.findall(r"[\w\.\-]+", bc.group(1)):
+                        cur.calls.append(g)
+    return comps
+
+
+@dataclass
+class HloStats:
+    flops: float
+    collective_bytes: dict
+    collective_bytes_total: float
+    collective_counts: dict
+    n_whiles: int
+    trip_counts: list
+
+    def describe(self) -> str:
+        cb = {k: f"{v/1e9:.3f}GB" for k, v in self.collective_bytes.items() if v}
+        return (f"flops={self.flops/1e12:.3f}T collectives={cb} "
+                f"(total {self.collective_bytes_total/1e9:.3f}GB, "
+                f"whiles={self.n_whiles} trips={self.trip_counts[:8]})")
+
+
+def analyze(text: str, entry_hint: str | None = None) -> HloStats:
+    comps = parse_hlo(text)
+    called: set = set()
+    for comp in comps.values():
+        called.update(comp.calls)
+        for w in comp.whiles:
+            called.update((w.body, w.cond))
+    roots = [n for n in comps if n not in called]
+    if entry_hint:
+        hinted = [n for n in comps if entry_hint in n]
+        roots = hinted or roots
+    if not roots:
+        roots = list(comps)[:1]
+
+    # call-graph edges with per-edge multipliers (while bodies x trip count)
+    edges: dict = {}
+    indeg: dict = defaultdict(int)
+    for name, comp in comps.items():
+        e = [(c, 1.0) for c in comp.calls if c in comps]
+        for w in comp.whiles:
+            if w.body in comps:
+                e.append((w.body, float(max(w.trip, 1))))
+            if w.cond in comps:
+                e.append((w.cond, float(max(w.trip, 1)) + 1.0))
+        edges[name] = e
+        for callee, _ in e:
+            indeg[callee] += 1
+
+    # Kahn topological propagation (HLO call graphs are DAGs)
+    mult: dict = defaultdict(float)
+    for r in roots:
+        mult[r] += 1.0
+    ready = [n for n in comps if indeg[n] == 0]
+    topo_seen = 0
+    while ready:
+        name = ready.pop()
+        topo_seen += 1
+        m = mult.get(name, 0.0)
+        for callee, k in edges.get(name, ()):
+            mult[callee] += m * k
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                ready.append(callee)
+
+    trips = []
+    n_whiles = 0
+    flops = 0.0
+    coll: dict = defaultdict(float)
+    ccnt: dict = defaultdict(float)
+    seen_pairs = set()
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        flops += m * (comp.dot_flops + comp.conv_flops)
+        for k, v in comp.collective_bytes.items():
+            coll[k] += m * v
+        for k, v in comp.collective_counts.items():
+            ccnt[k] += m * v
+        for w in comp.whiles:
+            n_whiles += 1
+            trips.append(w.trip)
+    return HloStats(flops=flops, collective_bytes=dict(coll),
+                    collective_bytes_total=sum(coll.values()),
+                    collective_counts=dict(ccnt), n_whiles=n_whiles,
+                    trip_counts=sorted(trips, reverse=True))

@@ -1,0 +1,118 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = ["rwkv6-1.6b", "minitron-4b", "qwen2-0.5b", "olmo-1b",
+              "deepseek-coder-33b", "granite-moe-1b-a400m", "arctic-480b",
+              "jamba-v0.1-52b", "llava-next-mistral-7b", "whisper-medium"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str) -> dict:
+    cells = {}
+    for f in glob.glob(os.path.join(dirpath, "*", "*.json")):
+        d = json.load(open(f))
+        cells[(d["mesh"], d["arch"], d["shape"])] = d
+    return cells
+
+
+def dryrun_table(cells: dict, mesh: str) -> str:
+    rows = ["| arch | shape | status | compile | bytes/dev | HLO GFLOP/dev | "
+            "collective GB/dev | collectives seen |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((mesh, a, s))
+            if d is None:
+                continue
+            if d["status"] == "skip":
+                rows.append(f"| {a} | {s} | SKIP | — | — | — | — | "
+                            f"{d['reason'].split(':')[0]} |")
+                continue
+            if d["status"] == "error":
+                rows.append(f"| {a} | {s} | **ERROR** | — | — | — | — | "
+                            f"{d['error'][:60]} |")
+                continue
+            coll = d["hlo"]["collective_bytes"]
+            seen = "+".join(sorted(k.replace("collective-", "c-")
+                                   for k, v in coll.items() if v > 0))
+            rows.append(
+                f"| {a} | {s} | ok | {d['compile_s']:.0f}s "
+                f"| {d['per_device_bytes']/1e9:.2f} GB "
+                f"| {d['hlo']['flops']/1e9:.0f} "
+                f"| {sum(coll.values())/1e9:.2f} | {seen} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: dict, mesh: str) -> str:
+    rows = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+            "dominant | MODEL/HLO flops | roofline |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((mesh, a, s))
+            if d is None or d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            rows.append(
+                f"| {a} | {s} | {r['t_compute']*1e3:.2f} "
+                f"| {r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} "
+                f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.1%} |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(cells: dict, mesh: str) -> str:
+    out = []
+    fixes = {
+        "collective": "cut the dominant collective (fuse AG/RS pairs, "
+                      "bf16 reduction, better op strategy)",
+        "memory": "raise arithmetic intensity (larger per-step tile reuse, "
+                  "fewer HBM round-trips, fused kernels)",
+        "compute": "remove non-useful FLOPs (causal-skip in attention, "
+                   "padding waste, remat recompute)",
+    }
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((mesh, a, s))
+            if d is None or d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            out.append(f"- **{a} x {s}**: {r['dominant']}-bound "
+                       f"(roofline {r['roofline_fraction']:.1%}); to improve: "
+                       f"{fixes[r['dominant']]}.")
+    return "\n".join(out)
+
+
+def summarize(dirpath: str = "artifacts/dryrun") -> str:
+    cells = load(dirpath)
+    meshes = sorted({m for (m, _, _) in cells})
+    parts = []
+    for mesh in meshes:
+        n_ok = sum(1 for (m, _, _), d in cells.items()
+                   if m == mesh and d["status"] == "ok")
+        n_skip = sum(1 for (m, _, _), d in cells.items()
+                     if m == mesh and d["status"] == "skip")
+        n_err = sum(1 for (m, _, _), d in cells.items()
+                    if m == mesh and d["status"] == "error")
+        parts.append(f"### Mesh `{mesh}` — {n_ok} ok / {n_skip} skip / "
+                     f"{n_err} error\n\n" + dryrun_table(cells, mesh))
+    parts.append("\n## Roofline (single pod)\n\n"
+                 + roofline_table(cells, "pod16x16"))
+    parts.append("\n### Dominant bottleneck per cell\n\n"
+                 + bottleneck_notes(cells, "pod16x16"))
+    return "\n\n".join(parts)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    print(summarize(args.dir))

@@ -1,0 +1,140 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e target).
+
+    compute    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective = collective_bytes / (chips x 50e9 B/s link)
+
+HLO_FLOPs and collective_bytes come from the static HLO analyzer
+(hlo_stats.py) — with while-trip multiplication, unlike cost_analysis().
+HLO_bytes (HBM traffic) is estimated as the max of cost_analysis()'s
+'bytes accessed' (loop-corrected via the flops ratio) and the unavoidable
+floor (arguments + outputs + temporaries from memory_analysis) — an
+approximation, flagged as such in EXPERIMENTS.md.
+
+MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) per training step,
+2 N D per forward-only token batch — the 'useful work' yardstick.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, asdict
+
+from repro.analysis.hlo_stats import HloStats, analyze
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (per the assignment's constant)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: dict
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    useful_ratio: float            # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float       # t_compute_ideal / max(t_*)
+    notes: str = ""
+
+    def describe(self) -> str:
+        return (f"{self.arch:<22} {self.shape:<12} {self.mesh:<10} "
+                f"comp={self.t_compute*1e3:8.2f}ms mem={self.t_memory*1e3:8.2f}ms "
+                f"coll={self.t_collective*1e3:8.2f}ms -> {self.dominant:<10} "
+                f"useful={self.useful_ratio:5.2f} roofline={self.roofline_fraction:5.1%}")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D training / 2*N*D forward, D = tokens processed per step."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch               # one token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def decode_state_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Irreducible per-step HBM traffic for decode: all weights + the
+    sequence state (KV cache / SSM state) are read once per token."""
+    w = 2.0 * cfg.param_count()                   # bf16 weights
+    b = shape.global_batch
+    cache = 0.0
+    for i in range(cfg.n_layers):
+        if cfg.is_attention_layer(i):
+            a = cfg.attention
+            s = min(shape.seq_len, a.window) if a.window else shape.seq_len
+            cache += b * s * a.n_kv_heads * a.head_dim * 2 * 2
+        elif cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+            d = cfg.d_model
+            cache += b * d * cfg.ssm.head_dim * 4
+        elif cfg.ssm is not None:
+            di = cfg.ssm.expand * cfg.d_model
+            cache += b * di * cfg.ssm.d_state * 4
+    if cfg.enc_layers:                            # whisper cross K/V
+        a = cfg.attention
+        cache += cfg.n_layers * b * cfg.enc_seq * a.n_kv_heads * a.head_dim * 4
+    return w + cache
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh_name: str, chips: int,
+          *, hlo_text: str | None = None, stats: HloStats | None = None,
+          cost: dict | None = None, memory: dict | None = None,
+          notes: str = "") -> Roofline:
+    """Post-SPMD HLO shapes are PER-DEVICE, so the analyzer's flops and
+    collective bytes are already per-chip quantities."""
+    if stats is None:
+        assert hlo_text is not None
+        stats = analyze(hlo_text)
+    mf = model_flops_per_step(cfg, shape)
+
+    # Per-device HBM traffic estimate from the memory schedule: arguments
+    # read once, outputs written once, temps written+read.  This is a
+    # lower-bound style estimate (fusion keeps many temps in registers/VMEM)
+    # but unlike cost_analysis it is loop-aware and per-device.
+    mem = memory or {}
+    args = float(mem.get("argument_size_in_bytes", 0.0))
+    outs = float(mem.get("output_size_in_bytes", 0.0))
+    temps = float(mem.get("temp_size_in_bytes", 0.0))
+    hbm = args + outs + 2.0 * temps
+    if shape.kind == "decode":
+        state_floor = decode_state_bytes(cfg, shape) / chips
+    else:
+        state_floor = 2.0 * cfg.param_count() / chips   # touch params once
+    hbm = max(hbm, state_floor)
+
+    flops_per_chip = stats.flops                     # per-device already
+    coll_per_chip = stats.collective_bytes_total
+
+    t_c = flops_per_chip / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll_per_chip / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    # the ideal step time is the unavoidable work at peak: useful FLOPs at
+    # peak compute AND the irreducible state traffic at peak HBM bandwidth
+    # (the latter is what bounds decode, where compute is negligible).
+    ideal = max((mf / chips) / PEAK_FLOPS, state_floor / HBM_BW)
+    frac = ideal / max(t_c, t_m, t_x, 1e-30)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_per_chip * chips, hbm_bytes=hbm * chips,
+        collective_bytes=coll_per_chip * chips,
+        collective_breakdown={k: v * chips
+                              for k, v in stats.collective_bytes.items()},
+        model_flops=mf, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        dominant=dom, useful_ratio=mf / max(flops_per_chip * chips, 1.0),
+        roofline_fraction=frac, notes=notes)

@@ -1,0 +1,31 @@
+"""Config registry: importing this package registers every assigned arch."""
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                SSMConfig, ShapeConfig, SHAPES, TrainConfig,
+                                config_summary, get_config, get_reduced,
+                                list_configs, register, shape_applicable)
+
+# Assigned architectures (importing registers them).
+from repro.configs import (arctic_480b, deepseek_coder_33b, granite_moe_1b,   # noqa: F401
+                           jamba_52b, llava_next_7b, minitron_4b, olmo_1b,
+                           qwen2_0p5b, rwkv6_1p6b, whisper_medium)
+from repro.configs.paper_nets import PAPER_NETS                               # noqa: F401
+
+ASSIGNED_ARCHS = [
+    "rwkv6-1.6b",
+    "minitron-4b",
+    "qwen2-0.5b",
+    "olmo-1b",
+    "deepseek-coder-33b",
+    "granite-moe-1b-a400m",
+    "arctic-480b",
+    "jamba-v0.1-52b",
+    "llava-next-mistral-7b",
+    "whisper-medium",
+]
+
+__all__ = [
+    "AttentionConfig", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "SHAPES", "TrainConfig", "config_summary", "get_config", "get_reduced",
+    "list_configs", "register", "shape_applicable", "ASSIGNED_ARCHS",
+    "PAPER_NETS",
+]

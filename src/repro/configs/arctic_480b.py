@@ -1,0 +1,23 @@
+"""arctic-480b — 128 experts top-2 + dense residual [hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2
+with a dense FFN residual in parallel (Arctic's dense-MoE hybrid).
+Largest arch in the pool (~0.5T params): weights are expert-dominated, so
+the *partition* (large-common-data) flow is mandatory, and SR-bf16
+optimizer state (the paper's §3.3.2 trick) is what makes the training
+state fit: 12 -> 6 bytes/param.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    d_ff=4864,
+    vocab_size=32000,
+    attention=AttentionConfig(n_heads=56, n_kv_heads=8, head_dim=128),
+    moe=MoEConfig(n_experts=128, top_k=2, d_expert=4864, dense_residual=True),
+    norm="rmsnorm",
+    act="swiglu",
+))

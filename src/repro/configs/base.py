@@ -1,0 +1,305 @@
+"""Config system: model/shape/train dataclasses + registry + CLI helpers.
+
+Every assigned architecture is a ``ModelConfig`` registered under its public
+id (e.g. ``--arch qwen2-0.5b``).  ``reduced()`` produces the CPU-smoke-test
+variant of the same family (small widths/layers/experts/vocab); the FULL
+configs are only ever lowered via the dry-run (ShapeDtypeStruct, no
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # sliding window used for attention layers at extreme context (jamba);
+    # None = full causal attention.
+    window: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden size
+    dense_residual: bool = False       # arctic: dense FFN in parallel with MoE
+    moe_period: int = 1                # MoE FFN every `period` layers (jamba: 2)
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "rwkv6"                # 'rwkv6' | 'mamba'
+    head_dim: int = 64                 # rwkv6 head size
+    d_state: int = 16                  # mamba SSM state
+    d_conv: int = 4                    # mamba local conv width
+    expand: int = 2                    # mamba inner expansion
+    dt_rank: int = 0                   # 0 -> ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense|moe|ssm|hybrid|vlm|audio|cnn|rnn
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    norm: str = "rmsnorm"              # rmsnorm|layernorm|nonparametric_ln
+    act: str = "swiglu"                # swiglu|gelu|relu_sq|geglu
+    tie_embeddings: bool = False
+    # --- hybrid interleave (jamba): layer i is attention iff
+    #     i % attn_period == attn_phase; all other layers use `ssm`.
+    attn_period: int = 1
+    attn_phase: int = 0
+    # --- encoder/decoder (whisper) ---
+    enc_layers: int = 0                # 0 = decoder-only
+    enc_seq: int = 0                   # fixed encoder length (whisper: 1500)
+    # --- modality frontend stubs ---
+    frontend: str = "none"             # none|vision_stub|audio_stub
+    n_vision_tokens: int = 0           # llava: patch embeddings prepended
+    # --- misc ---
+    max_seq_len: int = 1 << 20
+    notes: str = ""
+
+    # derived -------------------------------------------------------------
+    def is_attention_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.attn_period <= 1:
+            return True
+        return (i % self.attn_period) == self.attn_phase
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        return (i % self.moe.moe_period) == (self.moe.moe_period - 1)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can decode 500k context (SSM/hybrid/windowed)."""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid":
+            # attention layers must be windowed for long-context decode
+            return self.attention is not None and self.attention.window is not None
+        return False
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline + reports)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        n = 0
+        # embeddings (+ untied lm head)
+        n += v * d
+        if not self.tie_embeddings and self.family not in ("cnn", "rnn"):
+            n += v * d
+        n_norm = d if self.norm != "nonparametric_ln" else 0
+
+        def attn_params() -> int:
+            a = self.attention
+            assert a is not None
+            p = d * a.n_heads * a.head_dim            # q
+            p += 2 * d * a.n_kv_heads * a.head_dim    # k, v
+            p += a.n_heads * a.head_dim * d           # o
+            if a.qkv_bias:
+                p += (a.n_heads + 2 * a.n_kv_heads) * a.head_dim
+            return p
+
+        def ffn_dense(hidden: int) -> int:
+            if self.act in ("swiglu", "geglu"):
+                return 3 * d * hidden
+            return 2 * d * hidden
+
+        def ssm_params() -> int:
+            s = self.ssm
+            assert s is not None
+            if s.kind == "rwkv6":
+                # r,k,v,g,o projections + decay/tokenshift params (approx exact)
+                return 5 * d * d + 2 * d + 6 * d  # proj + ln + shift mixes
+            # mamba
+            di = s.expand * d
+            dt_rank = s.dt_rank or -(-d // 16)
+            p = d * 2 * di                       # in_proj (x, z)
+            p += di * s.d_conv                   # conv
+            p += di * (dt_rank + 2 * s.d_state)  # x -> dt, B, C
+            p += dt_rank * di + di               # dt proj
+            p += di * s.d_state + di             # A, D
+            p += di * d                          # out proj
+            return p
+
+        layers = 0
+        for i in range(L):
+            if self.is_attention_layer(i):
+                layers += attn_params() + n_norm
+            else:
+                layers += ssm_params() + n_norm
+            # FFN / MoE
+            if self.is_moe_layer(i):
+                m = self.moe
+                assert m is not None
+                moe_p = m.n_experts * (3 * d * m.d_expert if self.act in ("swiglu", "geglu")
+                                       else 2 * d * m.d_expert)
+                moe_p += d * m.n_experts          # router
+                if m.dense_residual:
+                    moe_p += ffn_dense(f)
+                layers += moe_p + n_norm
+            else:
+                layers += ffn_dense(f) + n_norm
+        n += layers
+        # encoder stack (whisper): same block params, MHA + cross-attn in dec
+        if self.enc_layers:
+            enc = (attn_params() + ffn_dense(f) + 2 * n_norm) * self.enc_layers
+            crs = attn_params() * L               # cross-attention in decoder
+            n += enc + crs
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        d = self.d_model
+        per_expert = (3 if self.act in ("swiglu", "geglu") else 2) * d * m.d_expert
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason when skipped."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return False, "SKIP(full-attn): 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Train / serve configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"           # sgdm|adamw|adagrad
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    precision: str = "paper_sr_bf16"   # see core/precision.py presets
+    microbatch: int = 0                # 0 = no microbatching
+    remat: str = "block"               # none|block|full
+    grad_compression: str = "none"     # none|bf16|int8_ef
+    zero1: bool = True                 # shard optimizer state over data axis
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ModelConfig] = {}
+_REDUCED: dict[str, Callable[[ModelConfig], ModelConfig]] = {}
+
+
+def register(cfg: ModelConfig,
+             reduced: Optional[Callable[[ModelConfig], ModelConfig]] = None) -> ModelConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate config {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    if reduced is not None:
+        _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _default_reduced(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving tiny variant for CPU smoke tests."""
+    kw: dict = dict(
+        n_layers=min(cfg.n_layers, 2 * max(1, cfg.attn_period)) if cfg.attn_period > 1
+        else min(cfg.n_layers, 2),
+        d_model=64,
+        d_ff=128,
+        vocab_size=256,
+        max_seq_len=1024,
+    )
+    if cfg.attention is not None:
+        kw["attention"] = replace(
+            cfg.attention, n_heads=4,
+            n_kv_heads=min(cfg.attention.n_kv_heads, 2)
+            if cfg.attention.n_kv_heads < cfg.attention.n_heads else 4,
+            head_dim=16)
+    if cfg.moe is not None:
+        kw["moe"] = replace(cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2),
+                            d_expert=32)
+    if cfg.ssm is not None:
+        kw["ssm"] = replace(cfg.ssm, head_dim=16, d_state=4, d_conv=2)
+    if cfg.enc_layers:
+        kw["enc_layers"] = 2
+        kw["enc_seq"] = 16
+    if cfg.n_vision_tokens:
+        kw["n_vision_tokens"] = 8
+    return replace(cfg, **kw)
+
+
+def get_reduced(name: str) -> ModelConfig:
+    cfg = get_config(name)
+    fn = _REDUCED.get(name, _default_reduced)
+    return fn(cfg)
+
+
+def config_summary(cfg: ModelConfig) -> str:
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    s = f"{cfg.name}: family={cfg.family} L={cfg.n_layers} d={cfg.d_model} params={n/1e9:.2f}B"
+    if na != n:
+        s += f" active={na/1e9:.2f}B"
+    return s

@@ -1,0 +1,20 @@
+"""deepseek-coder-33b — llama-arch dense [arXiv:2401.14196].
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+Largest dense arch in the pool: TP-heavy dataflow plans; long_500k is
+SKIPPED (pure full attention; see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    d_ff=19200,
+    vocab_size=32256,
+    attention=AttentionConfig(n_heads=56, n_kv_heads=8, head_dim=128,
+                              rope_theta=1e5),
+    norm="rmsnorm",
+    act="swiglu",
+))

@@ -1,0 +1,27 @@
+"""jamba-v0.1-52b — Mamba+attention 1:7 interleave, MoE 16e top-2 [arXiv:2403.19887].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.
+Layer pattern: blocks of 8 = 1 attention + 7 mamba (attn at in-block
+index 0 here); MoE FFN every 2nd layer (16 experts top-2), dense FFN on
+the others.  Attention layers carry a 4k sliding window so long_500k
+decode stays sub-quadratic (hybrid-family rule; noted in DESIGN.md).
+"""
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                SSMConfig, register)
+
+CONFIG = register(ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=65536,
+    attention=AttentionConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                              window=4096),
+    ssm=SSMConfig(kind="mamba", d_state=16, d_conv=4, expand=2),
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=14336, moe_period=2),
+    norm="rmsnorm",
+    act="swiglu",
+    attn_period=8,
+    attn_phase=0,
+))

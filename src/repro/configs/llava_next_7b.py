@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b — VLM backbone [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000 (Mistral-7B
+backbone). Per assignment the modality frontend is a STUB:
+``input_specs()`` provides precomputed patch embeddings (n_vision_tokens
+per image, anyres tiling out of scope) that are prepended to the token
+embeddings. Backbone dataflow/precision planning is identical to dense.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=32000,
+    attention=AttentionConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                              rope_theta=1e6),
+    norm="rmsnorm",
+    act="swiglu",
+    frontend="vision_stub",
+    n_vision_tokens=576,
+))

@@ -1,0 +1,21 @@
+"""rwkv6-1.6b — Finch, data-dependent decay [arXiv:2404.05892].
+
+24L d_model=2048 (attention-free) d_ff=7168 vocab=65536.
+RWKV6 head size 64 -> 32 heads. Channel-mix is a non-gated relu^2 FFN.
+Sub-quadratic: runs long_500k (WKV state is O(1) in sequence length).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    d_ff=7168,
+    vocab_size=65536,
+    ssm=SSMConfig(kind="rwkv6", head_dim=64),
+    norm="layernorm",
+    act="relu_sq",
+    attn_period=1,
+    notes="attention-free; WKV6 recurrence is the Pallas hot loop",
+))

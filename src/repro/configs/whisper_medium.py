@@ -1,0 +1,26 @@
+"""whisper-medium — encoder-decoder, conv frontend stub [arXiv:2212.04356].
+
+24L(per stack) d_model=1024 16H (MHA, kv=16) d_ff=4096 vocab=51865.
+The conv1d mel frontend is a STUB per assignment: ``input_specs()``
+provides precomputed frame embeddings (enc_seq=1500 = 30 s).  Decoder
+carries self-attn (causal, KV cache for decode shapes) + cross-attn to
+the fixed encoder output.  gelu MLP, parametric LayerNorm.
+Decode shapes drive the DECODER with a KV cache of the shape's seq_len.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,            # decoder stack
+    d_model=1024,
+    d_ff=4096,
+    vocab_size=51865,
+    attention=AttentionConfig(n_heads=16, n_kv_heads=16, head_dim=64),
+    norm="layernorm",
+    act="gelu",
+    tie_embeddings=True,
+    enc_layers=24,
+    enc_seq=1500,
+    frontend="audio_stub",
+))

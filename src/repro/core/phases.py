@@ -1,0 +1,27 @@
+"""Training phases, exactly the paper's decomposition (§2).
+
+FF  — feedforward (== inference forward)
+BP  — backpropagation of dX
+UP  — parameter update (dW generation + optimizer step)
+PREP — data preparation (re-layout between flow changes, §2.4/§3.2)
+
+NeuroTrainer programs a *different* memory mapping / data flow / precision
+per phase; we carry the same phase tag through the planner and the
+precision policy.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class Phase(str, enum.Enum):
+    FF = "FF"
+    BP = "BP"
+    UP = "UP"
+    PREP = "PREP"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+TRAINING_PHASES = (Phase.FF, Phase.BP, Phase.UP)

@@ -1,0 +1,96 @@
+"""PMAG — Programmable Memory Address Generation, TPU-native (§3.2).
+
+The paper's PMAG is a 7-level nested counter bank (r1..r7) plus a
+combinational address function; the host programs (Tables 2-3) which
+counters feed which address bits per kernel.  Transposition (W^T in BP) is
+"free": sweep the counters attached to the weight buffer in swapped order.
+
+The Pallas analogue is exact: the *grid* is the counter bank, and each
+operand's ``BlockSpec.index_map`` is the combinational address function.
+:class:`LoopNest` lets kernels declare the loop nest once and derive every
+operand's BlockSpec from an axis->counter wiring — including the
+counter-swept transpose.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class LoopDim:
+    """One nested counter: iterates ceil(size/tile) steps of width `tile`."""
+    name: str
+    size: int
+    tile: int
+
+    @property
+    def steps(self) -> int:
+        return math.ceil(self.size / self.tile)
+
+
+@dataclass(frozen=True)
+class LoopNest:
+    """Ordered counter bank, outermost first (paper's r1 -> r7)."""
+    dims: tuple
+
+    def __post_init__(self) -> None:
+        if len(self.dims) > 7:
+            raise ValueError("PMAG has 7 counter levels (r1..r7)")
+        names = [d.name for d in self.dims]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate loop dims {names}")
+
+    @property
+    def grid(self) -> tuple:
+        return tuple(d.steps for d in self.dims)
+
+    def _index(self, name: str) -> int:
+        for i, d in enumerate(self.dims):
+            if d.name == name:
+                return i
+        raise KeyError(f"no loop dim {name!r} in {[d.name for d in self.dims]}")
+
+    def dim(self, name: str) -> LoopDim:
+        return self.dims[self._index(name)]
+
+    def block_spec(self, wiring: Sequence[Optional[str]],
+                   block_shape: Optional[Sequence[int]] = None) -> pl.BlockSpec:
+        """BlockSpec for an operand.
+
+        wiring: one entry per operand axis — the loop-dim name driving that
+        axis's block index, or None for an axis loaded whole (address 0).
+        Counter-swept transpose == passing the wiring in swapped order.
+        block_shape: per-axis block sizes; defaults to the wired dim's tile
+        (None axes must then be given explicitly).
+        """
+        if block_shape is None:
+            block_shape = []
+            for w in wiring:
+                if w is None:
+                    raise ValueError("un-wired axes need an explicit block_shape")
+                block_shape.append(self.dim(w).tile)
+        idxs = [None if w is None else self._index(w) for w in wiring]
+
+        def index_map(*counters):
+            return tuple(0 if i is None else counters[i] for i in idxs)
+
+        return pl.BlockSpec(tuple(block_shape), index_map)
+
+    def describe(self) -> str:
+        rows = [f"  r{i+1}: {d.name:<8} size={d.size:<8} tile={d.tile:<6} steps={d.steps}"
+                for i, d in enumerate(self.dims)]
+        return "LoopNest(grid=%s)\n%s" % (self.grid, "\n".join(rows))
+
+
+def matmul_nest(m: int, n: int, k: int, *, tm: int, tn: int, tk: int) -> LoopNest:
+    """The canonical (i, j, l) matmul nest used by sr_matmul / outer_accum.
+
+    Grid order (i, j, l) puts the reduction innermost so the f32 partial-sum
+    tile stays resident in VMEM across l — the paper's 'output buffer holds
+    partial sums' rule (§3.3.1).
+    """
+    return LoopNest((LoopDim("i", m, tm), LoopDim("j", n, tn), LoopDim("l", k, tk)))

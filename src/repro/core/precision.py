@@ -1,0 +1,99 @@
+"""Phase-dependent precision policy — paper §3.3.2 and Table 4.
+
+The paper programs each PE per-kernel with a bit-precision mode:
+16-bit for Conv-FF/FC-FF (inference path), 32-bit (+SR) for every BP/UP
+kernel.  TPU adaptation (see DESIGN.md §2): the MXU natively computes
+bf16 x bf16 -> f32, so the ladder becomes
+
+  FF  : bf16 operands, f32 accumulation        (paper: Fixed-16)
+  BP  : bf16 operands, f32 gradient signal     (paper: Fixed-32)
+  UP  : f32 update math, **SR cast of persistent state to bf16**
+        (paper: Fixed-32 + SR / SR-LO)
+
+``PrecisionPolicy`` is consulted by the runtime at each phase boundary —
+it is the software analog of the 2-bit precision field in the PE program
+word (Table 4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.phases import Phase
+from repro.core.rounding import sr_by_name
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str
+    ff_dtype: jnp.dtype                 # activation/weight compute dtype in FF
+    bp_dtype: jnp.dtype                 # gradient signal dtype in BP
+    param_dtype: jnp.dtype              # persistent parameter storage
+    state_dtype: jnp.dtype              # optimizer state storage
+    update_rounding: str                # nearest | sr | sr_lo  (UP writeback)
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def compute_dtype(self, phase: Phase):
+        return self.ff_dtype if phase == Phase.FF else self.bp_dtype
+
+    def cast_for(self, phase: Phase, x: jax.Array) -> jax.Array:
+        dt = self.compute_dtype(phase)
+        return x.astype(dt) if x.dtype != dt else x
+
+    def writeback(self, x: jax.Array, key: jax.Array | None) -> jax.Array:
+        """UP-phase cast of persistent state to ``param_dtype``."""
+        if self.param_dtype == jnp.float32:
+            return x.astype(jnp.float32)
+        fn = sr_by_name(self.update_rounding)
+        if self.update_rounding == "nearest":
+            return fn(x)
+        if key is None:
+            raise ValueError(f"{self.name}: SR writeback requires a key")
+        return fn(x, key)
+
+    @property
+    def bytes_per_param_state(self) -> int:
+        """Training-state bytes/param (param + 2 Adam moments)."""
+        p = jnp.dtype(self.param_dtype).itemsize
+        s = jnp.dtype(self.state_dtype).itemsize
+        return p + 2 * s
+
+
+PRESETS: dict[str, PrecisionPolicy] = {
+    # Reference: everything f32 ("Float 32" row of Table 1).
+    "fp32": PrecisionPolicy(
+        name="fp32", ff_dtype=jnp.float32, bp_dtype=jnp.float32,
+        param_dtype=jnp.float32, state_dtype=jnp.float32,
+        update_rounding="nearest"),
+    # Standard mixed precision: bf16 compute, f32 master state (no SR).
+    "bf16_fp32": PrecisionPolicy(
+        name="bf16_fp32", ff_dtype=jnp.bfloat16, bp_dtype=jnp.bfloat16,
+        param_dtype=jnp.float32, state_dtype=jnp.float32,
+        update_rounding="nearest"),
+    # Paper-faithful analog: 16b FF / 32b BP / SR writeback of bf16 state.
+    # 6 bytes/param of training state instead of 12 — this is what lets
+    # arctic-480b fit a single pod (DESIGN.md §4).
+    "paper_sr_bf16": PrecisionPolicy(
+        name="paper_sr_bf16", ff_dtype=jnp.bfloat16, bp_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16, state_dtype=jnp.bfloat16,
+        update_rounding="sr"),
+    # The paper's preferred low-overhead entropy variant (Fig 11).
+    "paper_sr_lo_bf16": PrecisionPolicy(
+        name="paper_sr_lo_bf16", ff_dtype=jnp.bfloat16, bp_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16, state_dtype=jnp.bfloat16,
+        update_rounding="sr_lo"),
+    # Ablation: bf16 state with nearest rounding (expected to stall — the
+    # negative control that motivates SR, cf. Fig 10 'w/o SR' curve).
+    "bf16_nearest": PrecisionPolicy(
+        name="bf16_nearest", ff_dtype=jnp.bfloat16, bp_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16, state_dtype=jnp.bfloat16,
+        update_rounding="nearest"),
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    if name not in PRESETS:
+        raise KeyError(f"unknown precision preset {name!r}; known: {sorted(PRESETS)}")
+    return PRESETS[name]

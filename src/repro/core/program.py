@@ -1,0 +1,271 @@
+"""iBuffer: the compiled per-layer program for a model (§4, Fig 12).
+
+The paper's host compiles three tables (PMAG program, data-prep program,
+PE program) per layer x phase into an on-chip iBuffer; the module then runs
+autonomously.  Here :func:`compile_program` plays the host: it extracts the
+weight-bearing ops from a ``ModelConfig``, runs the dataflow planner
+(core/dataflow.py) for the given mesh x shape, attaches the precision
+policy (core/precision.py), and emits a :class:`Program` — the single
+artifact the runtime, the dry-run, and the roofline analysis consume.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.dataflow import (DataflowPlan, MeshSpec, OpSpec, Strategy,
+                                 plan_model)
+from repro.core.phases import Phase
+from repro.core.precision import PrecisionPolicy, get_policy
+
+# ---------------------------------------------------------------------------
+# Op extraction per model family
+# ---------------------------------------------------------------------------
+
+
+def _ffn_in_width(cfg: ModelConfig, hidden: int) -> int:
+    # swiglu/geglu fuse gate+up into one projection
+    return 2 * hidden if cfg.act in ("swiglu", "geglu") else hidden
+
+
+def _attn_ops(cfg: ModelConfig, n_layers: int, prefix: str = "") -> list:
+    a = cfg.attention
+    assert a is not None
+    d = cfg.d_model
+    q_out = a.n_heads * a.head_dim
+    kv_out = 2 * a.n_kv_heads * a.head_dim
+    return [
+        OpSpec(f"{prefix}attn_qkv", (d, q_out + kv_out), "proj_in",
+               n_layers=n_layers, act_in_features=d,
+               act_out_features=q_out + kv_out,
+               flops_per_token=2 * d * (q_out + kv_out)),
+        OpSpec(f"{prefix}attn_o", (q_out, d), "proj_out", n_layers=n_layers,
+               act_in_features=q_out, act_out_features=d,
+               flops_per_token=2 * q_out * d),
+    ]
+
+
+def _ffn_ops(cfg: ModelConfig, n_layers: int, prefix: str = "") -> list:
+    d, f = cfg.d_model, cfg.d_ff
+    fin = _ffn_in_width(cfg, f)
+    return [
+        OpSpec(f"{prefix}ffn_in", (d, fin), "proj_in", n_layers=n_layers,
+               act_in_features=d, act_out_features=fin,
+               flops_per_token=2 * d * fin),
+        OpSpec(f"{prefix}ffn_out", (f, d), "proj_out", n_layers=n_layers,
+               act_in_features=f, act_out_features=d,
+               flops_per_token=2 * f * d),
+    ]
+
+
+def _moe_ops(cfg: ModelConfig, n_layers: int) -> list:
+    m = cfg.moe
+    assert m is not None
+    d = cfg.d_model
+    fe = m.d_expert
+    frac = m.top_k / m.n_experts
+    ops = [
+        OpSpec("moe_router", (d, m.n_experts), "state", n_layers=n_layers,
+               act_in_features=d, act_out_features=m.n_experts,
+               flops_per_token=2 * d * m.n_experts),
+        # gate/up kept as separate ops so the TP shard of the expert hidden
+        # dim never splits a gate/up pair (elementwise gating stays local)
+        OpSpec("moe_experts_in", (m.n_experts, d, fe), "expert_in",
+               n_layers=n_layers, act_in_features=d, act_out_features=fe,
+               flops_per_token=2 * d * fe * m.n_experts * frac,
+               top_k=m.top_k),
+        OpSpec("moe_experts_out", (m.n_experts, fe, d), "expert_out",
+               n_layers=n_layers, act_in_features=fe, act_out_features=d,
+               flops_per_token=2 * fe * d * m.n_experts * frac,
+               top_k=m.top_k),
+    ]
+    if cfg.act in ("swiglu", "geglu"):
+        ops.append(OpSpec("moe_experts_gate", (m.n_experts, d, fe), "expert_in",
+                          n_layers=n_layers, act_in_features=d,
+                          act_out_features=fe,
+                          flops_per_token=2 * d * fe * m.n_experts * frac,
+                          top_k=m.top_k))
+    return ops
+
+
+def _ssm_ops(cfg: ModelConfig, n_layers: int) -> list:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    if s.kind == "rwkv6":
+        return [
+            # r, k, v, g fused projections feeding the WKV6 recurrence
+            OpSpec("rwkv_rkvg", (d, 4 * d), "proj_in", n_layers=n_layers,
+                   act_in_features=d, act_out_features=4 * d,
+                   flops_per_token=8 * d * d),
+            OpSpec("rwkv_decay", (d, d), "proj_in", n_layers=n_layers,
+                   act_in_features=d, act_out_features=d,
+                   flops_per_token=2 * d * d),
+            OpSpec("rwkv_o", (d, d), "proj_out", n_layers=n_layers,
+                   act_in_features=d, act_out_features=d,
+                   flops_per_token=2 * d * d),
+        ]
+    di = s.expand * d
+    dt_rank = s.dt_rank or -(-d // 16)
+    return [
+        OpSpec("mamba_in", (d, 2 * di), "proj_in", n_layers=n_layers,
+               act_in_features=d, act_out_features=2 * di,
+               flops_per_token=4 * d * di),
+        OpSpec("mamba_conv", (di, s.d_conv), "state", n_layers=n_layers),
+        OpSpec("mamba_xproj", (di, dt_rank + 2 * s.d_state), "proj_in",
+               n_layers=n_layers, act_in_features=di,
+               act_out_features=dt_rank + 2 * s.d_state,
+               flops_per_token=2 * di * (dt_rank + 2 * s.d_state)),
+        OpSpec("mamba_dt", (dt_rank, di), "proj_in", n_layers=n_layers,
+               act_in_features=dt_rank, act_out_features=di,
+               flops_per_token=2 * dt_rank * di),
+        OpSpec("mamba_out", (di, d), "proj_out", n_layers=n_layers,
+               act_in_features=di, act_out_features=d,
+               flops_per_token=2 * di * d),
+    ]
+
+
+def extract_ops(cfg: ModelConfig) -> list:
+    """Weight-bearing op list, one OpSpec per scanned layer-class."""
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    ops: list = [OpSpec("embed", (V, d), "embed", act_in_features=0,
+                        act_out_features=d, flops_per_token=0.0)]
+    if not cfg.tie_embeddings:
+        ops.append(OpSpec("lm_head", (d, V), "lm_head", act_in_features=d,
+                          act_out_features=V, flops_per_token=2 * d * V))
+
+    n_attn = sum(1 for i in range(L) if cfg.is_attention_layer(i))
+    n_ssm = L - n_attn
+    n_moe = sum(1 for i in range(L) if cfg.is_moe_layer(i))
+    n_dense_ffn = L - n_moe
+
+    if n_attn:
+        ops += _attn_ops(cfg, n_attn)
+    if n_ssm:
+        ops += _ssm_ops(cfg, n_ssm)
+    if n_moe:
+        ops += _moe_ops(cfg, n_moe)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            n_dense_ffn += n_moe          # arctic: dense FFN on MoE layers too
+    if n_dense_ffn:
+        ops += _ffn_ops(cfg, n_dense_ffn)
+
+    if cfg.enc_layers:                    # whisper encoder + cross attention
+        ops += _attn_ops(cfg, cfg.enc_layers, prefix="enc_")
+        ops += _ffn_ops(cfg, cfg.enc_layers, prefix="enc_")
+        a = cfg.attention
+        assert a is not None
+        ops.append(OpSpec("cross_qkv", (d, (a.n_heads + 2 * a.n_kv_heads) * a.head_dim),
+                          "proj_in", n_layers=L, act_in_features=d,
+                          act_out_features=(a.n_heads + 2 * a.n_kv_heads) * a.head_dim,
+                          flops_per_token=2 * d * (a.n_heads + 2 * a.n_kv_heads) * a.head_dim))
+        ops.append(OpSpec("cross_o", (a.n_heads * a.head_dim, d), "proj_out",
+                          n_layers=L, act_in_features=a.n_heads * a.head_dim,
+                          act_out_features=d,
+                          flops_per_token=2 * a.n_heads * a.head_dim * d))
+    if cfg.frontend == "vision_stub":
+        ops.append(OpSpec("vlm_proj", (d, d), "proj_in", act_in_features=d,
+                          act_out_features=d, flops_per_token=2 * d * d))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Program
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Program:
+    """Everything the runtime needs for one (model, mesh, shape) cell."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh_spec: MeshSpec
+    policy: PrecisionPolicy
+    plan: DataflowPlan
+    ops: list
+
+    def weight_spec(self, op_name: str, *, stacked: bool = True) -> P:
+        """PartitionSpec for a param; `stacked` adds the scan (L,) dim."""
+        op_plan = self.plan[op_name]
+        base = tuple(op_plan.weight_spec)
+        return P(None, *base) if stacked else P(*base)
+
+    def compute_spec(self, op_name: str, *, stacked: bool = True) -> Optional[P]:
+        op_plan = self.plan[op_name]
+        if op_plan.compute_spec is None:
+            return None
+        base = tuple(op_plan.compute_spec)
+        return P(None, *base) if stacked else P(*base)
+
+    def strategy(self, op_name: str) -> Strategy:
+        return self.plan[op_name].strategy
+
+    # --- reporting ---------------------------------------------------------
+
+    def ibuffer_entries(self) -> list:
+        """The per-(op x phase) program words — the iBuffer image."""
+        import jax.numpy as jnp
+        phases = ([Phase.FF, Phase.BP, Phase.UP] if self.shape.kind == "train"
+                  else [Phase.FF])
+        entries = []
+        for name in sorted(self.plan.ops):
+            p = self.plan.ops[name]
+            for ph in phases:
+                entries.append({
+                    "op": name, "phase": str(ph),
+                    "strategy": str(p.strategy),
+                    "weight_spec": str(p.weight_spec),
+                    "compute_spec": str(p.compute_spec),
+                    "dtype": jnp.dtype(self.policy.compute_dtype(ph)).name,
+                    "rounding": (self.policy.update_rounding
+                                 if ph == Phase.UP else "nearest"),
+                    "comm_bytes": float(p.comm_bytes.get(ph, 0.0)),
+                })
+        return entries
+
+    def ibuffer_size_bytes(self) -> int:
+        """Paper estimate: 22 B per program word (18 B PMAG + 4 B PE)."""
+        return 22 * len(self.ibuffer_entries())
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "arch": self.cfg.name, "shape": self.shape.name,
+            "mesh": self.mesh_spec.axis_sizes,
+            "precision": self.policy.name,
+            "batch_spec": list(self.plan.batch_spec),
+            "seq_spec": self.plan.seq_spec,
+            "ibuffer": self.ibuffer_entries(),
+            "ibuffer_bytes": self.ibuffer_size_bytes(),
+            "notes": self.plan.notes,
+        }, indent=1)
+
+    def describe(self) -> str:
+        return (f"Program[{self.cfg.name} x {self.shape.name} @ "
+                f"{self.mesh_spec.axis_sizes}] precision={self.policy.name}\n"
+                + self.plan.table()
+                + f"\niBuffer: {len(self.ibuffer_entries())} words, "
+                  f"{self.ibuffer_size_bytes()} bytes")
+
+
+def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
+                    *, precision: str = "paper_sr_bf16", microbatch: int = 1,
+                    overrides: Optional[dict] = None) -> Program:
+    """The 'host' step of Fig 12: DNN description -> loaded iBuffer."""
+    policy = get_policy(precision)
+    ops = extract_ops(cfg)
+    import jax.numpy as jnp
+    state_bytes = (policy.bytes_per_param_state if shape.kind == "train"
+                   else jnp.dtype(policy.param_dtype).itemsize)
+    plan = plan_model(
+        ops, mesh_spec, global_batch=shape.global_batch, seq_len=shape.seq_len,
+        kind=shape.kind, microbatch=microbatch,
+        state_bytes_per_param=state_bytes,
+        overrides={k: Strategy(v) if not isinstance(v, Strategy) else v
+                   for k, v in (overrides or {}).items()})
+    return Program(cfg=cfg, shape=shape, mesh_spec=mesh_spec, policy=policy,
+                   plan=plan, ops=ops)

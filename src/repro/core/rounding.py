@@ -1,0 +1,155 @@
+"""Stochastic rounding (SR) and fixed-point emulation — paper §3.3.2.
+
+The paper's MAC runs 16-bit fixed point in FF and 32-bit fixed point with
+stochastic rounding in BP/UP.  Two SR designs are compared:
+
+  * ``SR``    — one RNG per MAC (``Fixed 32/16 SR``, Table 1): full entropy,
+                +7% power over float.
+  * ``SR LO`` — a single LFSR shared by all 64 MACs, shifting one fresh bit
+                per clock into a 32-bit register (``Fixed 32/16 SR LO``):
+                32x entropy reduction, -30% power, *no accuracy loss*
+                (Fig 10: "no accuracy degradation between SR and SR LO").
+
+TPU adaptation: the MXU is bf16xbf16->f32, so the production precision
+ladder is bf16 FF / f32 BP / **SR-bf16 state writeback** — SR is what makes
+low-precision *persistent state* (weights, momentum) safe, exactly the
+paper's claim transplanted to floating point.  Both entropy regimes are
+implemented:
+
+  * :func:`stochastic_round_bf16`     — 16 fresh random bits per element.
+  * :func:`stochastic_round_bf16_lo`  — a shared bitstream of ``n/32`` random
+    words; element *i* reads a sliding 16-bit window at offset *i*, the exact
+    shift-register sharing of the paper's LO design.
+
+Fixed-point *emulation* (:func:`fixed_quantize`) backs the Fig 10
+reproduction (fp32 vs fx32 vs fx32+SR vs fx32+SR-LO on an RNN).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_MANT_BITS = 16          # f32 -> bf16 drops the low 16 mantissa bits
+_LOW_MASK = (1 << _MANT_BITS) - 1
+
+
+def _sr_from_bits(x: jax.Array, rbits: jax.Array) -> jax.Array:
+    """Core SR: add 16 random bits below the bf16 mantissa, truncate."""
+    assert x.dtype == jnp.float32
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    u = u + (rbits & _LOW_MASK).astype(jnp.uint32)   # carry == round up
+    u = u & jnp.uint32(~_LOW_MASK & 0xFFFFFFFF)       # truncate
+    y = jax.lax.bitcast_convert_type(u, jnp.float32)
+    # inf/nan must pass through untouched (bit-adding corrupts them)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    return y.astype(jnp.bfloat16)
+
+
+def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased f32 -> bf16: E[SR(x)] == x.  Full entropy (paper's ``SR``)."""
+    x = x.astype(jnp.float32)
+    rbits = jax.random.bits(key, x.shape, dtype=jnp.uint32)
+    return _sr_from_bits(x, rbits)
+
+
+def stochastic_round_bf16_lo(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Low-overhead SR (paper's ``SR LO``): shared sliding-window entropy.
+
+    A single random bitstream of ``ceil(n/32)+1`` words is generated; element
+    ``i`` uses the 16-bit window starting at bit ``i`` — neighbouring elements
+    share 15 of 16 bits, exactly like MACs reading a common shift register on
+    consecutive clocks.  Entropy cost: 1 fresh bit per element (vs 16).
+    """
+    x = x.astype(jnp.float32)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_words = (n + 31) // 32 + 1
+    stream = jax.random.bits(key, (n_words,), dtype=jnp.uint32)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    w = (idx >> 5).astype(jnp.int32)                  # word index
+    b = (idx & 31).astype(jnp.uint32)                 # bit offset in word
+    lo = stream[w] >> b
+    hi = jnp.where(b > 0, stream[w + 1] << (32 - b), jnp.uint32(0))
+    rbits = (lo | hi) & _LOW_MASK
+    return _sr_from_bits(flat, rbits).reshape(x.shape)
+
+
+def round_nearest_bf16(x: jax.Array) -> jax.Array:
+    """Deterministic round-to-nearest-even baseline."""
+    return x.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point emulation (Fig 10 / Table 1 reproduction)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FixedPointConfig:
+    total_bits: int = 32
+    frac_bits: int = 16
+    rounding: str = "nearest"      # nearest | sr | sr_lo
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac_bits)
+
+    @property
+    def qmax(self) -> float:
+        return float((1 << (self.total_bits - 1)) - 1)
+
+
+FX16 = FixedPointConfig(total_bits=16, frac_bits=8)
+FX32 = FixedPointConfig(total_bits=32, frac_bits=16)
+FX32_SR = FixedPointConfig(total_bits=32, frac_bits=16, rounding="sr")
+FX32_SR_LO = FixedPointConfig(total_bits=32, frac_bits=16, rounding="sr_lo")
+
+
+def fixed_quantize(x: jax.Array, cfg: FixedPointConfig,
+                   key: jax.Array | None = None) -> jax.Array:
+    """Quantize-dequantize through Qm.n fixed point (returns f32).
+
+    Emulates the paper's fixed-point MAC datapath: scale, round (nearest or
+    stochastic), saturate, de-scale.  Used by the Fig 10 experiment; the
+    production path uses the bf16 SR functions above.
+    """
+    x = x.astype(jnp.float32)
+    scaled = x * cfg.scale
+    if cfg.rounding == "nearest":
+        q = jnp.round(scaled)
+    else:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        if cfg.rounding == "sr":
+            u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        elif cfg.rounding == "sr_lo":
+            # shared sliding-window entropy, quantized to 16-bit resolution
+            flat_n = int(x.size)
+            n_words = (flat_n + 31) // 32 + 1
+            stream = jax.random.bits(key, (n_words,), dtype=jnp.uint32)
+            idx = jnp.arange(flat_n, dtype=jnp.uint32)
+            w = (idx >> 5).astype(jnp.int32)
+            b = (idx & 31).astype(jnp.uint32)
+            lo = stream[w] >> b
+            hi = jnp.where(b > 0, stream[w + 1] << (32 - b), jnp.uint32(0))
+            r16 = ((lo | hi) & 0xFFFF).astype(jnp.float32)
+            u = (r16 / 65536.0).reshape(x.shape)
+        else:
+            raise ValueError(f"unknown rounding {cfg.rounding!r}")
+        q = jnp.floor(scaled + u)
+    q = jnp.clip(q, -cfg.qmax - 1, cfg.qmax)
+    return q / cfg.scale
+
+
+def sr_by_name(name: str):
+    """Dispatch used by the precision policy: 'sr' | 'sr_lo' | 'nearest'."""
+    if name == "sr":
+        return stochastic_round_bf16
+    if name == "sr_lo":
+        return stochastic_round_bf16_lo
+    if name == "nearest":
+        return lambda x, key=None: round_nearest_bf16(x)
+    raise ValueError(f"unknown rounding mode {name!r}")

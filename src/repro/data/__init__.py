@@ -1,0 +1,1 @@
+from repro.data.pipeline import Prefetcher, PipelineConfig, SyntheticLM  # noqa: F401

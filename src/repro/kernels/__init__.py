@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+<name>.py — pl.pallas_call + BlockSpec bodies; ops.py — jit'd wrappers;
+ref.py — pure-jnp oracles.
+"""
+from repro.kernels.ops import make_rbits, outer_accum, sr_matmul, sr_round, wkv6  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pallas kernel: FC weight update — batched vector-vector outer product.
+
+Paper §3.2 Fig 8: dW = average over the minibatch of x (x) dy, which is
+X^T @ dY as a reduction over tokens.  Two PMAG tricks reproduced:
+
+  * the X operand is read TRANSPOSED purely through its BlockSpec wiring
+    (("l", "i") instead of ("i", "l")) — the paper's counter-swept W^T,
+    no materialised transpose;
+  * the minibatch average (1/N_I) and the SR writeback are fused into the
+    final reduction step, so dW makes exactly one HBM pass
+    ("written back to the dedicated vault").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pmag import LoopDim, LoopNest
+
+_LOW_MASK = 0xFFFF
+
+
+def _outer_kernel(x_ref, dy_ref, r_ref, o_ref, acc_ref, *,
+                  n_l: int, scale: float, sr: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # x tile arrives as (tl, ti): contract over tokens on the LEFT operand
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], dy_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_l - 1)
+    def _write():
+        acc = acc_ref[...] * scale
+        if sr:
+            u = jax.lax.bitcast_convert_type(acc, jnp.uint32)
+            u = u + (r_ref[...] & _LOW_MASK)
+            hi = (u >> 16).astype(jnp.uint16)
+            y = jax.lax.bitcast_convert_type(hi, jnp.bfloat16)
+            o_ref[...] = jnp.where(jnp.isfinite(acc), y,
+                                   acc.astype(jnp.bfloat16))
+        else:
+            o_ref[...] = acc
+
+
+def outer_accum(x: jax.Array, dy: jax.Array, *, scale: float = 1.0,
+                rbits: Optional[jax.Array] = None,
+                block: tuple = (256, 256, 512),
+                interpret: bool = False) -> jax.Array:
+    """x: (T, D); dy: (T, F) -> dW (D, F): scale * X^T dY (+ SR cast)."""
+    t, d = x.shape
+    t2, f = dy.shape
+    assert t == t2
+    bd, bf, bt = min(block[0], d), min(block[1], f), min(block[2], t)
+    nest = LoopNest((LoopDim("i", d, bd), LoopDim("j", f, bf),
+                     LoopDim("l", t, bt)))
+    sr = rbits is not None
+    if not sr:
+        rbits = jnp.zeros((d, f), jnp.uint32)
+    kernel = functools.partial(_outer_kernel, n_l=nest.dim("l").steps,
+                               scale=scale, sr=sr)
+    return pl.pallas_call(
+        kernel,
+        grid=nest.grid,
+        in_specs=[
+            nest.block_spec(("l", "i")),     # X read transposed by wiring
+            nest.block_spec(("l", "j")),
+            nest.block_spec(("i", "j")),
+        ],
+        out_specs=nest.block_spec(("i", "j")),
+        out_shape=jax.ShapeDtypeStruct(
+            (d, f), jnp.bfloat16 if sr else jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, dy, rbits)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each oracle is bit-exact w.r.t. its kernel's rounding semantics: SR uses
+the same add-random-bits-and-truncate on the f32 accumulator, with the
+random bits passed in explicitly (so kernel and oracle consume identical
+entropy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LOW_MASK = jnp.uint32(0xFFFF)
+
+
+def sr_cast_bf16(x_f32: jax.Array, rbits: jax.Array) -> jax.Array:
+    """f32 -> bf16 stochastic rounding given explicit random bits."""
+    u = jax.lax.bitcast_convert_type(x_f32.astype(jnp.float32), jnp.uint32)
+    u = u + (rbits.astype(jnp.uint32) & _LOW_MASK)
+    hi = (u >> 16).astype(jnp.uint16)
+    y = jax.lax.bitcast_convert_type(hi, jnp.bfloat16)
+    return jnp.where(jnp.isfinite(x_f32), y,
+                     x_f32.astype(jnp.bfloat16))
+
+
+def sr_round_ref(x: jax.Array, rbits: jax.Array) -> jax.Array:
+    return sr_cast_bf16(x, rbits)
+
+
+def sr_matmul_ref(a: jax.Array, b: jax.Array,
+                  rbits: jax.Array | None = None) -> jax.Array:
+    """A @ B with f32 accumulation; SR-cast to bf16 when rbits given."""
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if rbits is None:
+        return acc
+    return sr_cast_bf16(acc, rbits)
+
+
+def outer_accum_ref(x: jax.Array, dy: jax.Array, *,
+                    scale: float = 1.0,
+                    rbits: jax.Array | None = None) -> jax.Array:
+    """FC weight update (paper Fig 8): dW = scale * X^T dY.
+
+    x: (T, D); dy: (T, F) -> (D, F) f32 (or SR-bf16 when rbits given).
+    """
+    acc = jnp.einsum("td,tf->df", x.astype(jnp.float32),
+                     dy.astype(jnp.float32)) * scale
+    if rbits is None:
+        return acc
+    return sr_cast_bf16(acc, rbits)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state0: jax.Array | None = None):
+    """Sequential WKV6 oracle.  r,k,v,w: (BH, S, hd); u: (BH, hd).
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t ;  y_t = r_t . (S_{t-1} + u k_t (x) v_t)
+    Returns (y (BH,S,hd) f32, final state (BH, hd, hd) f32).
+    """
+    BH, S, hd = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((BH, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                              # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]              # (BH, hd, hd)
+        y = jnp.einsum("bk,bkv->bv", rt, s + u[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2).astype(jnp.float32) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), state

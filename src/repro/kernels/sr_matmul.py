@@ -1,0 +1,77 @@
+"""Pallas kernel: tiled MAC array with f32 accumulation + fused SR cast.
+
+This is the PE of §3.3 mapped onto the MXU: bf16 operand tiles stream
+HBM -> VMEM under BlockSpec index maps generated from a PMAG LoopNest
+(core/pmag.py), the f32 partial-sum tile stays resident in VMEM across the
+reduction (the paper's double-buffered output buffer), and the writeback
+applies stochastic rounding (Fig 11) in the same pass — no extra HBM
+round-trip for the quantizer.
+
+Grid order (i, j, l): the reduction l is innermost so `acc` lives across
+exactly the l-steps of one (i, j) tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pmag import matmul_nest
+
+_LOW_MASK = 0xFFFF
+
+
+def _mm_kernel(a_ref, b_ref, r_ref, o_ref, acc_ref, *, n_l: int, sr: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_l - 1)
+    def _write():
+        acc = acc_ref[...]
+        if sr:
+            u = jax.lax.bitcast_convert_type(acc, jnp.uint32)
+            u = u + (r_ref[...] & _LOW_MASK)
+            hi = (u >> 16).astype(jnp.uint16)
+            y = jax.lax.bitcast_convert_type(hi, jnp.bfloat16)
+            o_ref[...] = jnp.where(jnp.isfinite(acc), y,
+                                   acc.astype(jnp.bfloat16))
+        else:
+            o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def sr_matmul(a: jax.Array, b: jax.Array,
+              rbits: Optional[jax.Array] = None, *,
+              block: tuple = (256, 256, 512),
+              interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> bf16 with SR (rbits given) or f32 without."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
+    nest = matmul_nest(m, n, k, tm=bm, tn=bn, tk=bk)
+    sr = rbits is not None
+    if not sr:
+        rbits = jnp.zeros((m, n), jnp.uint32)
+    out_dtype = jnp.bfloat16 if sr else jnp.float32
+    kernel = functools.partial(_mm_kernel, n_l=nest.dim("l").steps, sr=sr)
+    return pl.pallas_call(
+        kernel,
+        grid=nest.grid,
+        in_specs=[
+            nest.block_spec(("i", "l")),     # A tile walks (i, l)
+            nest.block_spec(("l", "j")),     # B tile walks (l, j)
+            nest.block_spec(("i", "j")),     # entropy tile mirrors the output
+        ],
+        out_specs=nest.block_spec(("i", "j")),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, rbits)

@@ -1,0 +1,43 @@
+"""Pallas kernel: stochastic-rounding f32 -> bf16 quantizer (paper Fig 11).
+
+The hardware being modelled is the paper's "Fixed 32/16 + SR (LO)" MAC
+writeback: the f32 value gets 16 random bits added below the bf16 mantissa
+boundary, then truncates.  Entropy arrives as an explicit uint32 operand so
+full-SR (fresh bits per element) and SR-LO (one word per tile, broadcast —
+the paper's single-LFSR sharing) use the same kernel body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pmag import LoopDim, LoopNest
+
+_LOW_MASK = 0xFFFF
+
+
+def _sr_round_kernel(x_ref, r_ref, o_ref):
+    x = x_ref[...]
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    u = u + (r_ref[...] & _LOW_MASK)
+    hi = (u >> 16).astype(jnp.uint16)
+    y = jax.lax.bitcast_convert_type(hi, jnp.bfloat16)
+    o_ref[...] = jnp.where(jnp.isfinite(x), y, x.astype(jnp.bfloat16))
+
+
+def sr_round(x: jax.Array, rbits: jax.Array, *,
+             block: tuple = (256, 256), interpret: bool = False) -> jax.Array:
+    """x: (M, N) f32; rbits: (M, N) uint32 -> (M, N) bf16."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    nest = LoopNest((LoopDim("i", m, bm), LoopDim("j", n, bn)))
+    spec = nest.block_spec(("i", "j"))
+    return pl.pallas_call(
+        _sr_round_kernel,
+        grid=nest.grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        interpret=interpret,
+    )(x, rbits)

@@ -1,0 +1,110 @@
+"""Pallas kernel: chunked WKV6 recurrence (RWKV6's attention-free mixer).
+
+TPU adaptation of the sequential recurrence: a token-sequential scan is
+VPU-bound (rank-1 updates), so the kernel processes the sequence in chunks
+of C tokens, converting the inner work to three MXU matmuls per chunk
+(the standard chunked linear-attention identity):
+
+  within chunk, with q_t = cumprod decay up to t (log-space cumsum):
+    y = ((r * P_prev) @ (k / P)^T  masked-lower) @ v
+        + diag(r . (u * k)) v                      (current-token bonus)
+        + (r * P_prev) @ S_0
+    S' = diag(P_C) S_0 + ((k / P) * P_C)^T @ v
+
+The (hd x hd) state tile stays in VMEM scratch across the chunk grid
+(sequential innermost grid dimension) — the PE's resident partial-sum
+buffer.  Decay ratios are computed in log space and the exponent clamped,
+so strong decays underflow to zero instead of producing inf/nan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CLAMP = 80.0      # per-factor |log| bound (centred at the chunk midpoint)
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sf_ref, s_ref,
+                 *, n_chunks: int, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (hd,)
+    s0 = s_ref[...]                           # (hd, hd)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)            # log P_t   (C, hd)
+    cum_prev = cum - logw                     # log P_{t-1}
+
+    # Centre the factored exponents at the chunk midpoint so neither factor
+    # overflows f32 for any kept (t > j) pair: the kept ratio
+    # exp(cum_prev[t] - cum[j]) <= 1 because cum is monotone decreasing.
+    # Masked (t <= j) entries may saturate but are zeroed by `where`.
+    c0 = cum[chunk // 2]                                   # (hd,)
+    r_c = r * jnp.exp(jnp.clip(cum_prev - c0, -_CLAMP, _CLAMP))
+    k_c = k * jnp.exp(jnp.clip(c0 - cum, -_CLAMP, _CLAMP))
+
+    # strictly-lower-triangular inter-token term + diagonal u-bonus
+    att = jax.lax.dot_general(r_c, k_c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(ti > tj, att, 0.0)
+    bonus = jnp.sum(r * (u[None, :] * k), axis=1)          # (C,)
+    att = att + jnp.where(ti == tj, bonus[:, None], 0.0)
+
+    y = jnp.dot(att, v, preferred_element_type=jnp.float32)
+    # state-read term uses the ABSOLUTE decay (<= 1, underflows to 0)
+    r_abs = r * jnp.exp(cum_prev)
+    y = y + jnp.dot(r_abs, s0, preferred_element_type=jnp.float32)
+    y_ref[0] = y
+
+    p_c = jnp.exp(cum[-1])                                 # (hd,) <= 1
+    end_fac = jnp.exp(jnp.clip(cum[-1] - c0, -_CLAMP, _CLAMP))
+    k_scaled = k_c * end_fac[None, :]          # == k * exp(cum[-1] - cum[j])
+    s_new = p_c[:, None] * s0 + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        sf_ref[0] = s_new
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (BH, S, hd); u: (BH, hd).
+
+    Returns (y (BH, S, hd) f32, final state (BH, hd, hd) f32).
+    S must be divisible by `chunk`.
+    """
+    bh, s, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_wkv6_kernel, n_chunks=nc, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0))
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, hd), lambda b, c: (b, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, sf

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+# the production mesh built from 512 placeholder host devices, and record
+# memory_analysis / cost_analysis / static-HLO roofline terms.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+#
+# Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import roofline as RL                        # noqa: E402
+from repro.analysis.hlo_stats import analyze                     # noqa: E402
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,   # noqa: E402
+                           shape_applicable)
+from repro.configs.base import TrainConfig                       # noqa: E402
+from repro.core import compile_program                           # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_spec_for  # noqa: E402
+from repro.runtime import train_loop as tl                       # noqa: E402
+from repro.runtime.inputs import input_specs, key_spec           # noqa: E402
+
+
+def _named(mesh, specs):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
+               train_cfg: TrainConfig, overrides=None):
+    """Build program + jit + lower for one cell.  Returns (lowered, program,
+    extra) without compiling (so callers can reuse for perf iteration)."""
+    from jax.sharding import PartitionSpec as P
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    program = compile_program(cfg, shape, mesh_spec_for(mesh),
+                              precision=precision, overrides=overrides,
+                              microbatch=max(1, train_cfg.microbatch))
+    batch_specs = _named(mesh, tl.batch_pspecs(cfg, shape, program))
+    bshapes = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step_fn, opt = tl.make_train_step(cfg, program, train_cfg, mesh)
+        sshapes = tl.state_shapes(cfg, program, train_cfg)
+        sspecs = _named(mesh, tl.state_shardings(cfg, program, train_cfg,
+                                                 mesh, opt))
+        jitted = jax.jit(step_fn,
+                         in_shardings=(sspecs, batch_specs, None),
+                         out_shardings=(sspecs, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(sshapes, bshapes, key_spec())
+    elif shape.kind == "prefill":
+        step_fn = tl.make_prefill_step(cfg, program, mesh)
+        pshapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+            tl.model_module(cfg).param_shapes(cfg))
+        pspecs = _named(mesh, tl.param_pspecs(cfg, program))
+        jitted = jax.jit(step_fn, in_shardings=(pspecs, batch_specs))
+        lowered = jitted.lower(pshapes, bshapes)
+    else:  # decode
+        step_fn = tl.make_decode_step(cfg, program, mesh)
+        pshapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+            tl.model_module(cfg).param_shapes(cfg))
+        pspecs = _named(mesh, tl.param_pspecs(cfg, program))
+        cshapes = tl.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+        cspecs = _named(mesh, tl.cache_pspecs(cfg, program,
+                                              shape.global_batch, shape.seq_len))
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pspecs, cspecs, batch_specs["tokens"],
+                                       batch_specs["pos"]),
+                         out_shardings=(None, cspecs),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(pshapes, cshapes, bshapes["tokens"],
+                               bshapes["pos"])
+    return lowered, program
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
+             precision: str, train_cfg: TrainConfig, overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": why}
+    t0 = time.monotonic()
+    lowered, program = lower_cell(arch, shape_name, mesh, precision=precision,
+                                  train_cfg=train_cfg, overrides=overrides)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    stats = analyze(text)
+    chips = mesh.devices.size
+    mem_d = {k: int(getattr(mem, k)) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")}
+    roof = RL.build(cfg, shape, mesh_name, chips, stats=stats, cost=cost,
+                    memory=mem_d, notes="; ".join(program.plan.notes))
+    per_dev_bytes = (mem_d["argument_size_in_bytes"]
+                     + mem_d["temp_size_in_bytes"])
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "per_device_bytes": per_dev_bytes,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if k in ("flops", "bytes accessed",
+                                   "transcendentals")},
+        "hlo": {"flops": stats.flops,
+                "collective_bytes": stats.collective_bytes,
+                "collective_counts": stats.collective_counts,
+                "trip_counts": stats.trip_counts[:16]},
+        "roofline": roof.to_dict(),
+        "plan": [program.plan.ops[k].describe()
+                 for k in sorted(program.plan.ops)],
+        "plan_notes": program.plan.notes,
+        "precision": precision,
+        "ibuffer_bytes": program.ibuffer_size_bytes(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--precision", default="paper_sr_bf16")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    train_cfg = TrainConfig(precision=args.precision, remat=args.remat,
+                            microbatch=args.microbatch)
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(outdir, f"{arch}__{shape_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {mesh_name} {arch} {shape_name}")
+                    continue
+                try:
+                    r = run_cell(arch, shape_name, mesh, mesh_name,
+                                 precision=args.precision,
+                                 train_cfg=train_cfg)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(r, f, indent=1)
+                if r["status"] == "ok":
+                    roof = r["roofline"]
+                    print(f"[ok] {mesh_name} {arch:<24} {shape_name:<12} "
+                          f"compile={r['compile_s']:6.1f}s "
+                          f"mem/dev={r['per_device_bytes']/1e9:6.2f}GB "
+                          f"dom={roof['dominant']:<10} "
+                          f"roofline={roof['roofline_fraction']:.1%}",
+                          flush=True)
+                elif r["status"] == "skip":
+                    print(f"[skip] {mesh_name} {arch:<24} {shape_name:<12} "
+                          f"{r['reason']}", flush=True)
+                else:
+                    print(f"[ERR] {mesh_name} {arch:<24} {shape_name:<12} "
+                          f"{r['error'][:200]}", flush=True)
+                results.append(r)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skip")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"\nDry-run: {n_ok} ok, {n_skip} skip, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

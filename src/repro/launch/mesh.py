@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.dataflow import MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_spec_for(mesh) -> MeshSpec:
+    """Planner-facing description of a jax Mesh."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    return MeshSpec(axis_sizes=axis_sizes, batch_axes=batch_axes,
+                    tp_axis="model")
+
+
+def make_host_mesh(n_devices: int | None = None, *, data: int | None = None,
+                   model: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    if data is None or model is None:
+        model = 1
+        data = n
+    return jax.make_mesh((data, model), ("data", "model"))

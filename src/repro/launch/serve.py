@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill + decode loop with KV/SSM caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import compile_program
+from repro.launch.mesh import make_host_mesh, mesh_spec_for
+from repro.models import encdec
+from repro.models import transformer as tfm
+from repro.models.layers import Sharder
+from repro.runtime import train_loop as tl
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=B, kind="decode")
+    mesh = make_host_mesh()
+    use_mesh = mesh if mesh.devices.size > 1 else None
+    program = compile_program(cfg, shape, mesh_spec_for(mesh))
+    decode = jax.jit(tl.make_decode_step(cfg, program, use_mesh),
+                     donate_argnums=(1,))
+
+    key = jax.random.PRNGKey(args.seed)
+    mm = tl.model_module(cfg)
+    params = tl.cast_params(mm.init(key, cfg), jnp.bfloat16)
+    sh = Sharder(use_mesh, program)
+
+    # ---- prefill ----
+    t0 = time.monotonic()
+    if cfg.family == "audio":
+        audio = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+        enc_out = encdec.encode(cfg, params, audio, sh)
+        cache = encdec.init_cache(cfg, params, B, max_len)
+        cache["cross"] = encdec.precompute_cross_kv(cfg, params, enc_out, sh)
+        tok = jnp.ones((B, 1), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+    else:
+        prompt = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+        cache = tfm.init_cache(cfg, B, max_len)
+        tok = prompt[:, :1]
+        pos = jnp.zeros((B,), jnp.int32)
+        # teacher-forced prefill through the decode path (exercises the
+        # cache exactly as production does)
+        for t in range(P):
+            logits, cache = decode(params, cache, prompt[:, t:t + 1], pos)
+            pos = pos + 1
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_prefill = time.monotonic() - t0
+
+    # ---- decode ----
+    out_tokens = []
+    t0 = time.monotonic()
+    for _ in range(G):
+        logits, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(jax.device_get(tok)[:, 0])
+        pos = pos + 1
+    t_decode = time.monotonic() - t0
+    tps = B * G / t_decode
+    print(f"arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"prefill {t_prefill*1e3:.0f}ms  decode {t_decode*1e3:.0f}ms "
+          f"({tps:.1f} tok/s aggregate)")
+    print("sample token ids:", [int(t[0]) for t in out_tokens][:16])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

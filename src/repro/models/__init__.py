@@ -1,0 +1,2 @@
+"""Model zoo: assigned architectures + the paper's own baseline networks."""
+from repro.models.layers import Sharder  # noqa: F401

@@ -1,0 +1,234 @@
+"""GQA attention: flash-style chunked training/prefill + KV-cache decode.
+
+Memory discipline matters here: prefill_32k would materialise S^2 logits
+(32k^2 x batch) if written naively, and the dry-run's memory_analysis is
+the proof-of-fit.  ``flash_attention`` therefore computes an online-softmax
+over KV chunks (running max / denominator), i.e. the standard
+flash-attention recurrence expressed in jnp; the Pallas kernel path
+(kernels/) can replace the inner block later without changing callers.
+
+Sliding-window masks (jamba) and non-causal mode (whisper encoder,
+cross-attention) are handled by the same code path.  Decode uses a
+single-token attend against the cache; windowed layers keep a ring-buffer
+cache (O(window) memory at 500k context).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.models.layers import Sharder, apply_rope
+
+NEG_INF = -1e30
+
+
+def split_qkv(cfg: AttentionConfig, qkv: jax.Array,
+              bias: Optional[jax.Array]) -> tuple:
+    """qkv: (B, S, (H+2K)*hd) -> q (B,S,K,G,hd), k/v (B,S,K,hd)."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if bias is not None:
+        qkv = qkv + bias.astype(qkv.dtype)
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    B, S = q.shape[:2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    return q, k, v
+
+
+def _pick_chunk(s: int, target: int = 1024) -> int:
+    if s <= target:
+        return s
+    c = target
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, K, G, hd); k, v: (B, Skv, K, hd).  Returns (B, Sq, K, G, hd).
+    q_offset: absolute position of q[0] relative to k[0] (cross/prefill=0).
+    """
+    B, Sq, K, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = _pick_chunk(Sq)
+    ck = _pick_chunk(Skv)
+    nq, nk = Sq // cq, Skv // ck
+
+    q = q.astype(jnp.bfloat16) if q.dtype == jnp.bfloat16 else q
+    qpos_all = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kpos_all = jnp.arange(Skv, dtype=jnp.int32)
+
+    # (nq, B, cq, K, G, hd)
+    qc = q.reshape(B, nq, cq, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def one_q_chunk(args):
+        # checkpointed: backward re-runs the kv scan per q-chunk instead of
+        # storing the (cq x ck) probability tiles for the whole sequence.
+        qi, qb = args                                    # qb: (B, cq, K, G, hd)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, qi * cq, cq)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, kb, vb = kv
+            kpos = jax.lax.dynamic_slice_in_dim(kpos_all, ki * ck, ck)
+            # scores: (B, K, G, cq, ck) in f32
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk, dtype=jnp.int32), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,K,G,cq,hd)
+        return out.transpose(0, 3, 1, 2, 4)              # (B,cq,K,G,hd)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(nq, dtype=jnp.int32), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  kv_pos: jax.Array, pos: jax.Array, *,
+                  window: Optional[int] = None) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: (B, K, G, hd); k_cache/v_cache: (B, S, K, hd);
+    kv_pos: (B, S) logical position of each slot (-1 = empty);
+    pos: (B,) current absolute position.  Returns (B, K, G, hd).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kv_pos >= 0) & (kv_pos[:, :] <= pos[:, None])
+    if window is not None:
+        valid &= (pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def init_kv_cache(cfg: AttentionConfig, batch: int, length: int,
+                  dtype=jnp.bfloat16) -> dict:
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    size = min(length, cfg.window) if cfg.window else length
+    return {
+        "k": jnp.zeros((batch, size, K, hd), dtype),
+        "v": jnp.zeros((batch, size, K, hd), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def update_cache(cache: dict, k1: jax.Array, v1: jax.Array,
+                 pos: jax.Array) -> dict:
+    """Insert one token at logical position `pos` (ring-buffered if windowed).
+
+    k1/v1: (B, K, hd); pos: (B,) — same position across batch in practice,
+    but kept per-row for generality.
+    """
+    size = cache["k"].shape[1]
+    slot = pos % size                                     # ring index (B,)
+    b = jnp.arange(k1.shape[0])
+    k = cache["k"].at[b, slot].set(k1.astype(cache["k"].dtype))
+    v = cache["v"].at[b, slot].set(v1.astype(cache["v"].dtype))
+    kv_pos = cache["pos"].at[b, slot].set(pos)
+    return {"k": k, "v": v, "pos": kv_pos}
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (norm -> qkv -> rope -> attend -> out proj)
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg: ModelConfig, key, prefix: str = "",
+                cross: bool = False) -> dict:
+    a = cfg.attention
+    assert a is not None
+    d = cfg.d_model
+    q_out = a.n_heads * a.head_dim
+    kv_out = 2 * a.n_kv_heads * a.head_dim
+    k1, k2 = jax.random.split(key)
+    p = {
+        f"{prefix}qkv": jax.random.normal(k1, (d, q_out + kv_out), jnp.float32) * d ** -0.5,
+        f"{prefix}o": jax.random.normal(k2, (q_out, d), jnp.float32) * q_out ** -0.5,
+    }
+    if a.qkv_bias:
+        p[f"{prefix}qkv_bias"] = jnp.zeros((q_out + kv_out,), jnp.float32)
+    return p
+
+
+def attention_block(cfg: ModelConfig, x: jax.Array, params: dict,
+                    sh: Sharder, *, positions: jax.Array,
+                    causal: bool = True, rope: bool = True,
+                    op_prefix: str = "attn",
+                    kv_source: Optional[jax.Array] = None) -> jax.Array:
+    """Training/prefill attention (full sequence).  x: (B, S, d)."""
+    a = cfg.attention
+    assert a is not None
+    w_qkv = sh.weight(params["qkv"], f"{op_prefix}_qkv")
+    w_o = sh.weight(params["o"], f"{op_prefix}_o")
+    src = x if kv_source is None else kv_source
+    if kv_source is None:
+        qkv = x @ w_qkv.astype(x.dtype)
+        q, k, v = split_qkv(a, qkv, params.get("qkv_bias"))
+    else:
+        # cross attention: q from x, k/v from the encoder output
+        H, K, hd = a.n_heads, a.n_kv_heads, a.head_dim
+        wq, wkv = jnp.split(w_qkv.astype(x.dtype), [H * hd], axis=-1)
+        q = (x @ wq).reshape(*x.shape[:2], K, H // K, hd)
+        kv = src.astype(x.dtype) @ wkv
+        k, v = jnp.split(kv, 2, axis=-1)
+        k = k.reshape(*src.shape[:2], K, hd)
+        v = v.reshape(*src.shape[:2], K, hd)
+    if rope and kv_source is None:
+        B, S = x.shape[:2]
+        K_, G, hd = q.shape[2:]
+        qf = q.reshape(B, S, K_ * G, hd)
+        q = apply_rope(qf, positions, a.rope_theta).reshape(B, S, K_, G, hd)
+        k = apply_rope(k, positions, a.rope_theta)
+    if sh.mesh is not None:
+        # Megatron layout: expand KV to full heads and shard the head dim
+        # over `model` (GSPMD pads non-divisible head counts).  Keeps every
+        # flash-chunk head-local — no per-chunk resharding.
+        B, S = x.shape[:2]
+        K_, G, hd = q.shape[2:]
+        H = K_ * G
+        q = sh.heads(q.reshape(B, S, H, hd)).reshape(B, S, H, 1, hd)
+        k = sh.heads(jnp.repeat(k, G, axis=2))
+        v = sh.heads(jnp.repeat(v, G, axis=2))
+    out = flash_attention(q, k, v, causal=causal,
+                          window=a.window if causal else None)
+    B, S = out.shape[:2]
+    out = out.reshape(B, S, -1)
+    return out @ w_o.astype(out.dtype)

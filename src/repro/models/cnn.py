@@ -1,0 +1,115 @@
+"""Paper-baseline CNNs (AlexNet / VGG-16) — the networks NeuroTrainer is
+evaluated on in Fig 13 / Fig 16 / Fig 17.
+
+Implemented in full JAX (lax.conv + reduce_window max pooling); the
+benchmark harness (benchmarks/fig13_alexnet.py) instruments the per-layer
+FF/BP/UP decomposition exactly as the paper reports it, including the
+conv-weight-update-as-matmul lowering (Fig 6) which is reproduced in
+kernels/ and analysed in the roofline.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_nets import CNNConfig, ConvSpec
+
+
+def init(key, cfg: CNNConfig) -> dict:
+    params: dict = {"convs": [], "fcs": []}
+    ch = cfg.in_ch
+    keys = jax.random.split(key, len(cfg.convs) + len(cfg.fcs) + 1)
+    hw = cfg.in_hw
+    for i, c in enumerate(cfg.convs):
+        fan_in = c.kernel * c.kernel * ch
+        params["convs"].append({
+            "w": jax.random.normal(keys[i], (c.kernel, c.kernel, ch, c.out_ch),
+                                   jnp.float32) * (2.0 / fan_in) ** 0.5,
+            "b": jnp.zeros((c.out_ch,), jnp.float32),
+        })
+        ch = c.out_ch
+        if c.pad == "VALID":
+            hw = (hw - c.kernel) // c.stride + 1
+        else:
+            hw = -(-hw // c.stride)
+        if c.pool:
+            hw //= c.pool
+    flat = hw * hw * ch
+    widths = [flat, *cfg.fcs, cfg.n_classes]
+    for j in range(len(widths) - 1):
+        k = keys[len(cfg.convs) + j]
+        params["fcs"].append({
+            "w": jax.random.normal(k, (widths[j], widths[j + 1]), jnp.float32)
+            * (2.0 / widths[j]) ** 0.5,
+            "b": jnp.zeros((widths[j + 1],), jnp.float32),
+        })
+    return params
+
+
+def _conv(x: jax.Array, c: ConvSpec, p: dict) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(c.stride, c.stride),
+        padding=c.pad, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + p["b"].astype(x.dtype)
+    y = jax.nn.relu(y)
+    if c.pool:
+        # max pooling; the paper's comparator unit returns (max, ID) — the ID
+        # for BP is what autodiff's reduce_window transpose reconstructs.
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, c.pool, c.pool, 1),
+            (1, c.pool, c.pool, 1), "VALID")
+    return y
+
+
+def forward(cfg: CNNConfig, params: dict, x: jax.Array,
+            *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    x = x.astype(compute_dtype)
+    for c, p in zip(cfg.convs, params["convs"]):
+        x = _conv(x, c, p)
+    x = x.reshape(x.shape[0], -1)
+    for j, p in enumerate(params["fcs"]):
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if j < len(params["fcs"]) - 1:
+            x = jax.nn.relu(x)
+    return x.astype(jnp.float32)
+
+
+def loss_fn(cfg: CNNConfig, params: dict, batch: dict,
+            *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    logits = forward(cfg, params, batch["images"], compute_dtype=compute_dtype)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def conv_up_as_matmul(x: jax.Array, dy: jax.Array, kernel: int,
+                      stride: int = 1, pad: str = "SAME") -> jax.Array:
+    """The paper's Fig 6 lowering: conv weight-update dW = X * dY computed
+    as im2col matmul ("similar to how cuDNN performs convolution").
+
+    x: (B, H, W, Ci); dy: (B, Ho, Wo, Co) -> dW (k, k, Ci, Co).
+    Used by benchmarks + validated against autodiff in tests.
+    """
+    B, H, W, Ci = x.shape
+    Ho, Wo, Co = dy.shape[1:]
+    if pad == "SAME":
+        ph = ((kernel - 1) // 2, kernel // 2)
+        x = jnp.pad(x, ((0, 0), ph, ph, (0, 0)))
+    patches = []
+    for i in range(kernel):
+        for j in range(kernel):
+            patches.append(
+                jax.lax.dynamic_slice(
+                    x, (0, i, j, 0), (B, (Ho - 1) * stride + 1,
+                                      (Wo - 1) * stride + 1, Ci)
+                )[:, ::stride, ::stride])
+    xm = jnp.stack(patches, axis=0)            # (k*k, B, Ho, Wo, Ci)
+    xm = xm.reshape(kernel * kernel, -1, Ci)   # (k*k, B*Ho*Wo, Ci)
+    dym = dy.reshape(-1, Co)                   # (B*Ho*Wo, Co)
+    dw = jnp.einsum("knc,no->kco", xm.astype(jnp.float32),
+                    dym.astype(jnp.float32))
+    return dw.reshape(kernel, kernel, Ci, Co)

@@ -1,0 +1,313 @@
+"""Shared layer primitives (pure functional JAX).
+
+Every model in the zoo is a pytree of arrays + an apply function.  A
+``Sharder`` threads the compiled dataflow program (core/program.py) through
+the forward pass: it applies ``with_sharding_constraint`` at the points the
+paper would re-program the PMAG (activation re-layout between flows), and
+is a no-op when no mesh is active (CPU smoke tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Sharding helper
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Sharder:
+    """Applies the dataflow program's activation/weight layouts.
+
+    mesh=None (smoke tests) makes every constraint the identity, so the same
+    model code runs single-device and multi-pod.
+    """
+    mesh: Optional[object] = None        # jax.sharding.Mesh
+    program: Optional[object] = None     # core.program.Program
+
+    def act(self, x: jax.Array, *spec) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def residual(self, x: jax.Array) -> jax.Array:
+        """(B, S, D) residual-stream layout between blocks."""
+        if self.mesh is None or self.program is None:
+            return x
+        plan = self.program.plan
+        return self.act(x, plan.batch_spec or None, plan.seq_spec, None)
+
+    def weight(self, w: jax.Array, op_name: str, *, stacked: bool = False) -> jax.Array:
+        """Constrain a weight to its *compute* layout (GATHER ops broadcast
+        here — the paper's just-in-time common-vault read), and program the
+        layout of its GRADIENT: the per-layer dW cotangent is cast to bf16
+        and constrained to the storage sharding INSIDE the backward scan.
+        Without this GSPMD emits the per-layer dW DP-sync as an f32
+        all-reduce-to-replicated (measured 1.14 TB/device/step on
+        deepseek-33b — EXPERIMENTS.md §Perf D2/D3)."""
+        if self.mesh is None or self.program is None:
+            return w
+        storage = self.program.weight_spec(op_name, stacked=stacked)
+        if storage is not None and jnp.issubdtype(w.dtype, jnp.floating):
+            w = _grad_layout(w, NamedSharding(self.mesh, storage))
+        spec = self.program.compute_spec(op_name, stacked=stacked)
+        if spec is None:
+            return w
+        return jax.lax.with_sharding_constraint(w, NamedSharding(self.mesh, spec))
+
+    @property
+    def batch_spec(self):
+        if self.program is None:
+            return None
+        return self.program.plan.batch_spec or None
+
+    @property
+    def seq_axis(self):
+        if self.program is None:
+            return None
+        return self.program.plan.seq_spec
+
+    @property
+    def n_chips(self) -> int:
+        if self.program is None:
+            return 1
+        return self.program.mesh_spec.n_devices
+
+    def heads(self, x: jax.Array) -> jax.Array:
+        """(B, S, H, hd) head-sharded over `model` (GSPMD pads when H % tp).
+
+        This is the Megatron attention layout: annotated explicitly so
+        sharding propagation never re-shards per flash-chunk (observed:
+        an involuntary 0.7 GB all-to-all PER kv-chunk without this)."""
+        if self.mesh is None or self.program is None:
+            return x
+        return self.act(x, self.batch_spec, None, "model", None)
+
+    def features(self, x: jax.Array) -> jax.Array:
+        """(B, S, F) with F sharded over `model` (mamba/rwkv inner dims)."""
+        if self.mesh is None or self.program is None:
+            return x
+        return self.act(x, self.batch_spec, None, "model")
+
+
+def _grad_layout(w: jax.Array, sharding) -> jax.Array:
+    """Identity whose transpose programs the cotangent's dtype + layout.
+
+    The paper programs the PMAG separately for FF and BP/UP; this is the
+    same move for autodiff: the forward value is untouched, the backward
+    value (dW) is emitted bf16 and shard-constrained at its creation site,
+    so the compiler reduces it sharded instead of replicated-f32."""
+
+    dtype = w.dtype     # cotangent dtype must match the primal: fp32
+                        # presets keep f32 grads (faithful reference path)
+
+    @jax.custom_vjp
+    def ident(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        g = g.astype(dtype)
+        g = jax.lax.with_sharding_constraint(g, sharding)
+        return (g,)
+
+    ident.defvjp(fwd, bwd)
+    return ident(w)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: Optional[jax.Array],
+              bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, params: Optional[dict]) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["scale"] if params else None,
+                         params.get("bias") if params else None)
+    if cfg.norm == "nonparametric_ln":          # olmo: no scale/bias
+        return layernorm(x, None, None)
+    raise ValueError(f"unknown norm {cfg.norm!r}")
+
+
+def norm_params(cfg: ModelConfig, key) -> Optional[dict]:
+    if cfg.norm == "nonparametric_ln":
+        return None
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu_sq":
+        r = jax.nn.relu(x)
+        return r * r
+    if name in ("swiglu", "geglu"):
+        raise ValueError("gated activations are applied inside mlp()")
+    raise ValueError(f"unknown act {name!r}")
+
+
+def mlp(cfg: ModelConfig, x: jax.Array, w_in: jax.Array, w_out: jax.Array,
+        sh: Sharder, prefix: str = "") -> jax.Array:
+    """FFN with fused gate+up for gated activations.
+
+    w_in: (d, 2f) for swiglu/geglu else (d, f);  w_out: (f, d).
+    """
+    w_in = sh.weight(w_in, f"{prefix}ffn_in").astype(x.dtype)
+    w_out = sh.weight(w_out, f"{prefix}ffn_out").astype(x.dtype)
+    h = x @ w_in
+    if cfg.act in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        gate = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = gate * u
+    else:
+        h = act_fn(cfg.act, h)
+    return h @ w_out
+
+
+def mlp_params(cfg: ModelConfig, key, hidden: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = hidden if hidden is not None else cfg.d_ff
+    fin = 2 * f if cfg.act in ("swiglu", "geglu") else f
+    k1, k2 = jax.random.split(key)
+    return {
+        "ffn_in": jax.random.normal(k1, (d, fin), jnp.float32) * (d ** -0.5),
+        "ffn_out": jax.random.normal(k2, (f, d), jnp.float32) * (f ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array, sh: Sharder) -> jax.Array:
+    table = sh.weight(table, "embed")
+    return table.astype(jnp.bfloat16)[tokens] if table.dtype == jnp.bfloat16 \
+        else table[tokens]
+
+
+def lm_logits(x: jax.Array, cfg: ModelConfig, params: dict, sh: Sharder) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = sh.weight(params["embed"]["table"], "embed")
+        return (x @ w.T.astype(x.dtype)).astype(jnp.float32)
+    w = sh.weight(params["lm_head"], "lm_head")
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; logits f32 (B, S, V), labels (B, S)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def lm_loss_chunked(cfg: ModelConfig, x: jax.Array, params: dict,
+                    labels: jax.Array, sh: Sharder,
+                    n_chunks: int = 0) -> jax.Array:
+    """Cross-entropy without materialising full (B, S, V) logits.
+
+    The LM head + softmax run per batch-chunk under jax.checkpoint, so both
+    forward AND backward hold at most one chunk of logits — the (B,S,V)
+    f32 tensor is the single largest training temp otherwise (e.g. 27 GB
+    per device for qwen2 train_4k measured in the dry-run).
+    """
+    B, S, _ = x.shape
+    V = cfg.vocab_size
+    if n_chunks == 0:
+        # target <= ~128 MB of f32 logits per device per chunk
+        total = B * S * V * 4.0
+        n_chunks = max(1, min(B, round(total / (sh.n_chips * 128e6))))
+        while B % n_chunks:
+            n_chunks -= 1
+    if cfg.tie_embeddings:
+        w = sh.weight(params["embed"]["table"], "embed").T
+    else:
+        w = sh.weight(params["lm_head"], "lm_head")
+
+    def piece(xc, lc):
+        # keep the logits (and therefore their cotangent — the per-chunk dx
+        # psum over `model`) in bf16; only the reductions run in f32.
+        # Halves the dominant all-reduce bytes (§Perf D1).
+        logits = xc @ w.astype(xc.dtype)
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None],
+                                   axis=-1)[..., 0].astype(jnp.float32)
+        return jnp.sum(lse - gold)
+
+    piece = jax.checkpoint(piece)
+    if n_chunks == 1:
+        return piece(x, labels) / (B * S)
+    # strided chunking: row r -> chunk r % n, so every data shard
+    # contributes equally to every chunk (no idle ranks / resharding)
+    xs = x.reshape(B // n_chunks, n_chunks, S, x.shape[-1]).swapaxes(0, 1)
+    ls = labels.reshape(B // n_chunks, n_chunks, S).swapaxes(0, 1)
+
+    def step(acc, t):
+        return acc + piece(t[0], t[1]), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)

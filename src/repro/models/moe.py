@@ -1,0 +1,226 @@
+"""Mixture-of-Experts with EP(data) x TP(model) sharding.
+
+The dataflow planner assigns expert tables the two-axis partition flow:
+expert dim sharded over the data axis (EP), expert hidden dim over the
+model axis (TP).  This block realises it with ``shard_map``:
+
+  1. SP -> TP boundary: all-gather the sequence-sharded residual over
+     `model` (the paper's broadcast-from-common-vault).
+  2. Local top-k routing + sort-based capacity dispatch.
+  3. all-to-all over `data`: tokens travel to their expert's owner
+     (the Fig 3 partition/merge bus traffic along the expert dimension).
+  4. Expert FFN with hidden dim TP-sharded over `model` (gate/up are
+     separate tables so the elementwise gating never crosses a shard),
+     partial sums merged with psum.
+  5. all-to-all back + combine (weighted sum over top-k).
+  6. psum_scatter back to the sequence-sharded residual (TP -> SP).
+
+dW for expert tables needs no data-axis reduction — every expert shard is
+wholly owned (paper: "written back to the dedicated vault").
+
+With mesh=None the same routing/dispatch code runs on one shard (smoke
+tests), so numerics are identical by construction.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Sharder
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_params(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, fe, E = cfg.d_model, m.d_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * d ** -0.5,
+        "experts_in": jax.random.normal(ks[1], (E, d, fe), jnp.float32) * d ** -0.5,
+        "experts_out": jax.random.normal(ks[2], (E, fe, d), jnp.float32) * fe ** -0.5,
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["experts_gate"] = jax.random.normal(ks[3], (E, d, fe), jnp.float32) * d ** -0.5
+    return p
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int) -> int:
+    c = math.ceil(tokens * top_k * CAPACITY_FACTOR / n_experts)
+    return max(8, -(-c // 8) * 8)                     # pad to 8 for layout
+
+
+def _route(x: jax.Array, router_w: jax.Array, top_k: int):
+    """x: (T, d).  Returns (probs (T,k), experts (T,k), aux_loss)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)           # (T, E)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    # Switch-style load balancing loss
+    E = router_w.shape[1]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return topv, topi, aux
+
+
+def _dispatch_indices(experts: jax.Array, n_experts: int, capacity: int):
+    """Sort-based capacity dispatch.  experts: (T*k,) expert id per slot.
+
+    Returns (slot (T*k,), keep (T*k,)) where slot indexes an (E*C,) buffer.
+    """
+    n = experts.shape[0]
+    order = jnp.argsort(experts, stable=True)         # tokens grouped by expert
+    e_sorted = experts[order]
+    first = jnp.searchsorted(e_sorted, e_sorted)      # index of expert's first
+    pos = jnp.arange(n) - first                       # position within expert
+    keep_sorted = pos < capacity
+    slot_sorted = e_sorted * capacity + jnp.minimum(pos, capacity - 1)
+    # dropped entries go to a trash slot so they never clobber a real one
+    slot_sorted = jnp.where(keep_sorted, slot_sorted, n_experts * capacity)
+    # un-sort back to (T*k,) order
+    inv = jnp.argsort(order, stable=True)
+    return slot_sorted[inv], keep_sorted[inv]
+
+
+def _expert_ffn(cfg: ModelConfig, xb: jax.Array, params: dict, sh: Sharder,
+                *, local: bool) -> jax.Array:
+    """xb: (E_loc, C', d) -> (E_loc, C', d).  TP over `model` when sharded."""
+    w_in = params["experts_in"]
+    w_out = params["experts_out"]
+    if not local:
+        w_in = sh.weight(w_in, "moe_experts_in")
+        w_out = sh.weight(w_out, "moe_experts_out")
+    h = jnp.einsum("ecd,edf->ecf", xb, w_in.astype(xb.dtype))
+    if cfg.act in ("swiglu", "geglu"):
+        w_g = params["experts_gate"]
+        if not local:
+            w_g = sh.weight(w_g, "moe_experts_gate")
+        g = jnp.einsum("ecd,edf->ecf", xb, w_g.astype(xb.dtype))
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
+    else:
+        r = jax.nn.relu(h)
+        h = r * r if cfg.act == "relu_sq" else jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(xb.dtype))
+
+
+def _moe_single(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder):
+    """Single-shard MoE (smoke tests / mesh=None): same dispatch math."""
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    topv, topi, aux = _route(xf, params["router"], m.top_k)
+    C = _capacity(T, m.top_k, m.n_experts)
+    slot, keep = _dispatch_indices(topi.reshape(-1), m.n_experts, C)
+    tok = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = jnp.zeros((m.n_experts * C + 1, d), xf.dtype)     # +1 trash row
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xf[tok], 0))
+    yb = _expert_ffn(cfg, buf[:-1].reshape(m.n_experts, C, d), params, sh,
+                     local=True).reshape(m.n_experts * C, d)
+    ybp = jnp.concatenate([yb, jnp.zeros((1, d), yb.dtype)])
+    y = (ybp[slot] * keep[:, None]).reshape(T, m.top_k, d)
+    out = jnp.einsum("tkd,tk->td", y.astype(jnp.float32),
+                     topv.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(B, S, d), aux
+
+
+def _moe_sharded(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder):
+    """shard_map EP(data) x TP(model) MoE.  x: (B, S, d) global."""
+    m = cfg.moe
+    assert m is not None and sh.mesh is not None and sh.program is not None
+    mesh = sh.mesh
+    plan = sh.program.plan
+    batch_spec = plan.batch_spec or ()
+    seq_axis = plan.seq_spec                         # 'model' under SP, else None
+    # read the planner's decision off the weight spec: EP axis (or axes —
+    # multi-pod) on the expert dim, TP on the hidden dim — or replicated
+    wspec = tuple(plan["moe_experts_in"].weight_spec) + (None, None, None)
+    ep_axis = wspec[0] if wspec[0] else None
+    tp_sharded = wspec[2] == "model"
+    E = m.n_experts
+    if isinstance(ep_axis, tuple):
+        ep = 1
+        for a in ep_axis:
+            ep *= mesh.shape[a]
+    else:
+        ep = mesh.shape[ep_axis] if ep_axis else 1
+    tp = mesh.shape["model"] if tp_sharded else 1
+    E_loc = E // ep
+    local_only = ep_axis is None and not tp_sharded
+    if local_only:
+        seq_axis_eff = None     # no SP->TP boundary: route per-shard tokens
+    else:
+        seq_axis_eff = seq_axis
+
+    x_spec = P(batch_spec or None, seq_axis, None)
+    w_specs = {k: sh.program.weight_spec(f"moe_{k}", stacked=False)
+               for k in (["experts_in", "experts_out", "router"]
+                         + (["experts_gate"] if "experts_gate" in params else []))}
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(x_spec, tuple(w_specs[k] for k in sorted(w_specs))),
+             out_specs=(x_spec, P()), check_vma=False)
+    def run(xl, wl):
+        prm = dict(zip(sorted(w_specs), wl))
+        # 1. SP -> full local tokens (skipped when tables are replicated:
+        # each shard runs its own dense-local MoE, zero collectives)
+        if seq_axis_eff is not None:
+            xl = jax.lax.all_gather(xl, seq_axis_eff, axis=1, tiled=True)
+        Bl, Sl, d = xl.shape
+        T = Bl * Sl
+        xf = xl.reshape(T, d)
+        topv, topi, aux = _route(xf, prm["router"], m.top_k)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        C = _capacity(T, m.top_k, E)
+        slot, keep = _dispatch_indices(topi.reshape(-1), E, C)
+        tok = jnp.repeat(jnp.arange(T), m.top_k)
+        buf = jnp.zeros((E * C + 1, d), xf.dtype)            # +1 trash row
+        buf = buf.at[slot].set(jnp.where(keep[:, None], xf[tok], 0))
+        buf = buf[:-1].reshape(E, C, d)
+        # 3. a2a over data: send each expert group to its owner
+        if ep_axis is not None:
+            buf = buf.reshape(ep, E_loc, C, d)
+            buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                                     tiled=False)     # (ep, E_loc, C, d) src-major
+            buf = buf.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, d)
+        yb = _expert_ffn(cfg, buf, params={k: prm[k] for k in prm}, sh=sh,
+                         local=True)
+        # TP partial sums over model (weights were sliced by shard_map)
+        yb = jax.lax.psum(yb, "model") if tp_sharded else yb
+        # 5. a2a back
+        if ep_axis is not None:
+            yb = yb.reshape(E_loc, ep, C, d).transpose(1, 0, 2, 3)
+            yb = jax.lax.all_to_all(yb, ep_axis, split_axis=0, concat_axis=0,
+                                    tiled=False)
+            yb = yb.reshape(E, C, d)
+        yb = yb.reshape(E * C, d)
+        ybp = jnp.concatenate([yb, jnp.zeros((1, d), yb.dtype)])
+        y = (ybp[slot] * keep[:, None]).reshape(T, m.top_k, d)
+        out = jnp.einsum("tkd,tk->td", y.astype(jnp.float32),
+                         topv.astype(jnp.float32)).astype(xl.dtype)
+        out = out.reshape(Bl, Sl, d)
+        # 6. back to SP layout
+        if seq_axis_eff is not None:
+            ntp = mesh.shape["model"]
+            out = out.reshape(Bl, ntp, Sl // ntp,
+                              d)[:, jax.lax.axis_index(seq_axis_eff)]
+        return out, aux
+
+    return run(x, tuple(params[k] for k in sorted(w_specs)))
+
+
+def moe_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder):
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    if sh.mesh is None:
+        return _moe_single(cfg, x, params, sh)
+    return _moe_sharded(cfg, x, params, sh)

@@ -1,0 +1,83 @@
+"""Paper-baseline GRU and MLP0 (Fig 10, Fig 14-16).
+
+The GRU carries an optional ``quant`` hook applied after every matmul and
+on the recurrent state — this is how the Fig 10 experiment injects the
+paper's fixed-point MAC datapath (fx16 / fx32 / fx32+SR / fx32+SR-LO,
+core/rounding.py) without forking the model.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_nets import GRUConfig, MLPConfig
+
+QuantFn = Optional[Callable[[jax.Array], jax.Array]]
+
+
+def gru_init(key, cfg: GRUConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    ni, nh, no = cfg.n_input, cfg.n_hidden, cfg.n_output
+    return {
+        "wx": jax.random.normal(ks[0], (ni, 3 * nh), jnp.float32) * ni ** -0.5,
+        "wh": jax.random.normal(ks[1], (nh, 3 * nh), jnp.float32) * nh ** -0.5,
+        "b": jnp.zeros((3 * nh,), jnp.float32),
+        "wo": jax.random.normal(ks[2], (nh, no), jnp.float32) * nh ** -0.5,
+    }
+
+
+def gru_forward(cfg: GRUConfig, params: dict, x: jax.Array,
+                quant: QuantFn = None, h0: Optional[jax.Array] = None):
+    """x: (B, T, n_input) -> (outputs (B, T, n_output), final h)."""
+    B = x.shape[0]
+    q = (lambda a: a) if quant is None else quant
+    wx, wh, b, wo = (params[k] for k in ("wx", "wh", "b", "wo"))
+    nh = cfg.n_hidden
+    h = jnp.zeros((B, nh), jnp.float32) if h0 is None else h0
+
+    def step(h, xt):
+        gx = q(xt @ wx)
+        gh = q(h @ wh)
+        r = jax.nn.sigmoid(gx[:, :nh] + gh[:, :nh] + b[:nh])
+        z = jax.nn.sigmoid(gx[:, nh:2*nh] + gh[:, nh:2*nh] + b[nh:2*nh])
+        n = jnp.tanh(gx[:, 2*nh:] + r * gh[:, 2*nh:] + b[2*nh:])
+        h = q((1 - z) * n + z * h)
+        y = q(h @ wo)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), h
+
+
+def gru_loss(cfg: GRUConfig, params: dict, batch: dict,
+             quant: QuantFn = None) -> jax.Array:
+    """Regression loss (the paper's Fig 10 trains an RNN to MSE)."""
+    y, _ = gru_forward(cfg, params, batch["x"], quant)
+    return jnp.mean((y - batch["y"]) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# MLP0
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: MLPConfig, n_in: int = 2560, n_out: int = 256) -> dict:
+    widths = [n_in, *cfg.widths, n_out]
+    keys = jax.random.split(key, len(widths) - 1)
+    return {"layers": [
+        {"w": jax.random.normal(keys[i], (widths[i], widths[i + 1]),
+                                jnp.float32) * widths[i] ** -0.5,
+         "b": jnp.zeros((widths[i + 1],), jnp.float32)}
+        for i in range(len(widths) - 1)]}
+
+
+def mlp_forward(cfg: MLPConfig, params: dict, x: jax.Array,
+                *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = x.astype(compute_dtype)
+    for i, p in enumerate(params["layers"]):
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+    return x.astype(jnp.float32)

@@ -1,0 +1,259 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba.
+
+Both are linear-state recurrences — O(1) state in sequence length — which
+is what makes the ``long_500k`` decode cell runnable for rwkv6-1.6b and
+jamba-v0.1-52b (DESIGN.md §Arch-applicability).
+
+Training/prefill run the recurrence with ``lax.scan`` over time (the
+pure-jnp oracle); the Pallas chunked WKV6 kernel (kernels/wkv6.py) is the
+TPU hot path and is validated against this implementation.  Decode is a
+single-step state update.
+
+RWKV6 specifics kept: token-shift mixing, **data-dependent decay**
+w_t = exp(-exp(w0 + x_w W_decay)) (the 'Finch' feature), per-head state
+S in R^{hd x hd}, first-token bonus u.  Mamba: depthwise causal conv,
+selective SSM (dt, B, C data-dependent), gated output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Sharder
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv_params(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    assert s is not None and s.kind == "rwkv6"
+    H = d // s.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "rkvg": jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * d ** -0.5,
+        "decay": jax.random.normal(ks[1], (d, d), jnp.float32) * 0.01,
+        "o": jax.random.normal(ks[2], (d, d), jnp.float32) * d ** -0.5,
+        "w0": jnp.full((d,), -2.0, jnp.float32),       # base decay (slow)
+        "u": jax.random.normal(ks[3], (H, s.head_dim), jnp.float32) * 0.1,
+        "mix": jnp.full((5, d), 0.5, jnp.float32),     # token-shift mixes r,k,v,g,w
+    }
+
+
+TIME_CHUNK = 64
+
+
+def _checkpointed_scan(step, carry0, xs, chunk: int = TIME_CHUNK):
+    """lax.scan over time with sqrt-style rematerialisation.
+
+    A plain scan's VJP stores every per-step residual — measured 48 GB/dev
+    for rwkv6 train_4k in the dry-run.  Chunking the scan and
+    jax.checkpoint-ing each chunk stores only chunk-boundary carries plus
+    one chunk's residuals during backward: O(sqrt(S)) memory at 2x forward
+    recompute (the classic tradeoff; EXPERIMENTS.md §Perf iteration).
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= chunk or S % chunk:
+        return jax.lax.scan(step, carry0, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(outer, carry0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(S, *a.shape[2:]), ys)
+    return carry, ys
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream; `prev` carries the last token across decode steps."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, state0: Optional[jax.Array] = None):
+    """The WKV6 recurrence (pure-jnp oracle for the Pallas kernel).
+
+    r,k,v: (B, S, H, hd); w: (B, S, H, hd) per-step decay in (0,1);
+    u: (H, hd) bonus.  Returns (out (B,S,H,hd) f32, final state (B,H,hd,hd)).
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t ;  y_t = (S_{t-1} + diag(u k_t)) r_t
+    """
+    B, S, H, hd = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                             # (B, H, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, w))
+    state, ys = _checkpointed_scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state               # (B,S,H,hd)
+
+
+def rwkv_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder,
+               state: Optional[dict] = None):
+    """RWKV6 time-mix.  x: (B, S, d).  Returns (out, new_state or None)."""
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    H, hd = d // s.head_dim, s.head_dim
+    B, S, _ = x.shape
+
+    prev = state["shift"][:, None] if state is not None else None
+    xs = _token_shift(x, prev)
+    mix = params["mix"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xs - x) * mix[i] for i in range(5))
+
+    w_rkvg = sh.weight(params["rkvg"], "rwkv_rkvg").astype(x.dtype)
+    w_decay = sh.weight(params["decay"], "rwkv_decay").astype(x.dtype)
+    r = xr @ w_rkvg[:, :d]
+    k = xk @ w_rkvg[:, d:2 * d]
+    v = xv @ w_rkvg[:, 2 * d:3 * d]
+    g = xg @ w_rkvg[:, 3 * d:]
+    # data-dependent decay (Finch): w_t in (0, 1)
+    wlog = params["w0"].astype(jnp.float32) + (xw @ w_decay).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))
+
+    shp = (B, S, H, hd)
+    out, new_wkv = wkv6_scan(
+        sh.heads(r.reshape(shp)), sh.heads(k.reshape(shp)),
+        sh.heads(v.reshape(shp)), sh.heads(w.reshape(shp)),
+        params["u"].astype(jnp.float32),
+        state["wkv"] if state is not None else None)
+    out = out.astype(x.dtype).reshape(B, S, d) * jax.nn.silu(g)
+    w_o = sh.weight(params["o"], "rwkv_o").astype(x.dtype)
+    out = out @ w_o
+    if state is None:
+        return out, None
+    return out, {"wkv": new_wkv, "shift": x[:, -1]}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    H, hd = cfg.d_model // s.head_dim, s.head_dim
+    return {"wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "shift": jnp.zeros((batch, cfg.d_model), jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(cfg: ModelConfig, key) -> dict:
+    s = cfg.ssm
+    assert s is not None and s.kind == "mamba"
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 5)
+    return {
+        "in": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * d ** -0.5,
+        "conv": jax.random.normal(ks[1], (di, s.d_conv), jnp.float32) * 0.2,
+        "xproj": jax.random.normal(ks[2], (di, dt_rank + 2 * s.d_state),
+                                   jnp.float32) * di ** -0.5,
+        "dt": jax.random.normal(ks[3], (dt_rank, di), jnp.float32) * dt_rank ** -0.5,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out": jax.random.normal(ks[4], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along S.  x: (B, S, di); w: (di, K)."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)                       # (B, K-1, di)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[:, i].astype(x.dtype)
+              for i in range(K))
+    return out
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                   Cm: jax.Array, D: jax.Array,
+                   state0: Optional[jax.Array] = None):
+    """x: (B,S,di); dt: (B,S,di); A: (di,N); Bm/Cm: (B,S,N); D: (di,).
+    h_t = exp(dt A) h_{t-1} + dt B_t x_t ;  y_t = C_t . h_t + D x_t"""
+    B, S, di = x.shape
+    N = A.shape[1]
+    if state0 is None:
+        state0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])            # (B,di,N)
+        h = dA * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = _checkpointed_scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2) + x.astype(jnp.float32) * D[None, None]
+    return y, h
+
+
+def mamba_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder,
+                state: Optional[dict] = None):
+    """Mamba mixer.  x: (B, S, d)."""
+    s = cfg.ssm
+    assert s is not None
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    w_in = sh.weight(params["in"], "mamba_in").astype(x.dtype)
+    xz = x @ w_in
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di)
+    xi, z = sh.features(xi), sh.features(z)
+    conv_state = state["conv"] if state is not None else None
+    xc = _causal_conv(xi, params["conv"], conv_state)
+    xc = sh.features(jax.nn.silu(xc))
+    w_xp = sh.weight(params["xproj"], "mamba_xproj").astype(x.dtype)
+    proj = xc @ w_xp
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    w_dt = sh.weight(params["dt"], "mamba_dt").astype(x.dtype)
+    dt = jax.nn.softplus((dt @ w_dt).astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+    y, h = selective_scan(xc, dt, A, Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), params["D"],
+                          state["ssm"] if state is not None else None)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    w_out = sh.weight(params["out"], "mamba_out").astype(x.dtype)
+    out = y @ w_out
+    if state is None:
+        return out, None
+    K = s.d_conv
+    new_conv = jnp.concatenate([conv_state, xi], axis=1)[:, -(K - 1):] \
+        if K > 1 else conv_state
+    return out, {"conv": new_conv, "ssm": h}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    di = s.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+            "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32)}

@@ -1,0 +1,361 @@
+"""Decoder-only LM assembly (dense / MoE / SSM / hybrid / VLM).
+
+Layers are grouped into scan groups: one *period* of the layer pattern
+(dense: 1 layer; jamba: 8 layers = 1 attn + 7 mamba, MoE every 2nd) is the
+scan body, with parameters stacked over ``n_layers // period`` — keeping
+the lowered HLO size O(period), not O(n_layers).
+
+Three entry points:
+  forward(...)              — training / prefill (full sequence; can return caches)
+  decode_step(...)          — one-token serve step against per-layer caches
+  init(...) / param_pspecs  — parameter pytree + dataflow-program layouts
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attention_block, attn_params,
+                                    decode_attend, init_kv_cache, split_qkv,
+                                    update_cache)
+from repro.models.layers import (Sharder, apply_norm, apply_rope,
+                                 cross_entropy, embed, lm_logits, mlp,
+                                 mlp_params, norm_params)
+from repro.models.moe import moe_block, moe_params
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class UnitDesc:
+    mixer: str            # 'attn' | 'rwkv6' | 'mamba'
+    ffn: str              # 'dense' | 'moe'
+
+
+def layer_pattern(cfg: ModelConfig) -> list:
+    m_period = cfg.moe.moe_period if cfg.moe is not None else 1
+    period = cfg.attn_period * m_period // math.gcd(cfg.attn_period, m_period)
+    if cfg.n_layers % period:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} not divisible "
+                         f"by pattern period {period}")
+    units = []
+    for i in range(period):
+        if cfg.is_attention_layer(i):
+            mixer = "attn"
+        else:
+            assert cfg.ssm is not None
+            mixer = cfg.ssm.kind
+        units.append(UnitDesc(mixer, "moe" if cfg.is_moe_layer(i) else "dense"))
+    return units
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(layer_pattern(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _unit_params(cfg: ModelConfig, key, unit: UnitDesc) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": norm_params(cfg, ks[0]), "norm2": norm_params(cfg, ks[1])}
+    if unit.mixer == "attn":
+        p["attn"] = attn_params(cfg, ks[2])
+    elif unit.mixer == "rwkv6":
+        p["rwkv"] = ssm_mod.rwkv_params(cfg, ks[2])
+    else:
+        p["mamba"] = ssm_mod.mamba_params(cfg, ks[2])
+    if unit.ffn == "moe":
+        p["moe"] = moe_params(cfg, ks[3])
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            p["ffn"] = mlp_params(cfg, jax.random.fold_in(ks[3], 1))
+    else:
+        p["ffn"] = mlp_params(cfg, ks[3])
+    # norms may be None (olmo): drop for a clean pytree
+    return {k: v for k, v in p.items() if v is not None}
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+    k_embed, k_head, k_groups, k_final = jax.random.split(key, 4)
+    params: dict = {
+        "embed": {"table": jax.random.normal(
+            k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+    fn = norm_params(cfg, k_final)
+    if fn is not None:
+        params["final_norm"] = fn
+    if cfg.frontend == "vision_stub":
+        params["vlm_proj"] = jax.random.normal(
+            jax.random.fold_in(k_head, 2), (cfg.d_model, cfg.d_model),
+            jnp.float32) * cfg.d_model ** -0.5
+
+    def one_group(gkey):
+        uks = jax.random.split(gkey, len(pattern))
+        return {f"u{i}": _unit_params(cfg, uks[i], u)
+                for i, u in enumerate(pattern)}
+
+    gkeys = jax.random.split(k_groups, ng)
+    params["groups"] = jax.vmap(one_group)(gkeys)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — the dry-run's no-allocation stand-in."""
+    return jax.eval_shape(lambda k: init(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Param -> dataflow-program layout
+# ---------------------------------------------------------------------------
+
+_LEAF_TO_OP = {
+    ("attn", "qkv"): "attn_qkv", ("attn", "o"): "attn_o",
+    ("rwkv", "rkvg"): "rwkv_rkvg", ("rwkv", "decay"): "rwkv_decay",
+    ("rwkv", "o"): "rwkv_o",
+    ("mamba", "in"): "mamba_in", ("mamba", "conv"): "mamba_conv",
+    ("mamba", "xproj"): "mamba_xproj", ("mamba", "dt"): "mamba_dt",
+    ("mamba", "out"): "mamba_out",
+    ("ffn", "ffn_in"): "ffn_in", ("ffn", "ffn_out"): "ffn_out",
+    ("moe", "router"): "moe_router",
+    ("moe", "experts_in"): "moe_experts_in",
+    ("moe", "experts_gate"): "moe_experts_gate",
+    ("moe", "experts_out"): "moe_experts_out",
+    ("enc_attn", "qkv"): "enc_attn_qkv", ("enc_attn", "o"): "enc_attn_o",
+    ("enc_ffn", "ffn_in"): "enc_ffn_in", ("enc_ffn", "ffn_out"): "enc_ffn_out",
+    ("cross", "qkv"): "cross_qkv", ("cross", "o"): "cross_o",
+}
+
+
+def param_pspecs(cfg: ModelConfig, program) -> dict:
+    """Same-structure pytree of PartitionSpecs from the compiled program."""
+    shapes = param_shapes(cfg)
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        stacked = "groups" in keys or "enc_groups" in keys or "dec_groups" in keys
+        if "embed" in keys:
+            return program.weight_spec("embed", stacked=False)
+        if "lm_head" in keys:
+            return program.weight_spec("lm_head", stacked=False)
+        if "vlm_proj" in keys:
+            return program.weight_spec("vlm_proj", stacked=False)
+        for (parent, name), op in _LEAF_TO_OP.items():
+            if parent in keys and keys[-1] == name and op in program.plan.ops:
+                return program.weight_spec(op, stacked=stacked)
+        return P()    # norms, biases, router state, mixes: replicated
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _unit_forward(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
+                  sh: Sharder, positions, collect_cache: bool):
+    """Returns (x, aux_loss, cache_contrib)."""
+    h = apply_norm(cfg, x, uparams.get("norm1"))
+    cache: dict = {}
+    if unit.mixer == "attn":
+        mix = attention_block(cfg, h, uparams["attn"], sh, positions=positions)
+        if collect_cache:
+            a = cfg.attention
+            qkv = h @ sh.weight(uparams["attn"]["qkv"], "attn_qkv").astype(h.dtype)
+            _, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
+            k = apply_rope(k, positions, a.rope_theta)
+            size = min(h.shape[1], a.window) if a.window else h.shape[1]
+            cache["attn"] = {
+                "k": k[:, -size:].astype(jnp.bfloat16),
+                "v": v[:, -size:].astype(jnp.bfloat16),
+                "pos": jnp.broadcast_to(
+                    positions[-size:][None].astype(jnp.int32),
+                    (h.shape[0], size)),
+            }
+    elif unit.mixer == "rwkv6":
+        if collect_cache:
+            st = ssm_mod.rwkv_init_state(cfg, x.shape[0])
+            mix, new_st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh, st)
+            cache["rwkv"] = new_st
+        else:
+            mix, _ = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh)
+    else:
+        if collect_cache:
+            st = ssm_mod.mamba_init_state(cfg, x.shape[0])
+            mix, new_st = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh, st)
+            cache["mamba"] = new_st
+        else:
+            mix, _ = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh)
+    x = x + mix
+    h2 = apply_norm(cfg, x, uparams.get("norm2"))
+    aux = jnp.zeros((), jnp.float32)
+    if unit.ffn == "moe":
+        y, aux = moe_block(cfg, h2, uparams["moe"], sh)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            y = y + mlp(cfg, h2, uparams["ffn"]["ffn_in"],
+                        uparams["ffn"]["ffn_out"], sh)
+    else:
+        y = mlp(cfg, h2, uparams["ffn"]["ffn_in"], uparams["ffn"]["ffn_out"], sh)
+    x = sh.residual(x + y)
+    return x, aux, cache
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
+            *, compute_dtype=jnp.bfloat16, vision_embeds=None,
+            return_cache: bool = False, remat: str = "none",
+            return_hidden: bool = False):
+    """tokens: (B, S_text).  Returns (logits f32 | hidden, aux[, caches])."""
+    pattern = layer_pattern(cfg)
+    x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
+    if cfg.frontend == "vision_stub":
+        assert vision_embeds is not None
+        v = vision_embeds.astype(compute_dtype) @ params["vlm_proj"].astype(compute_dtype)
+        x = jnp.concatenate([v, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = sh.residual(x)
+
+    def group_step(carry, gparams):
+        x, aux = carry
+        caches = {}
+        for i, u in enumerate(pattern):
+            x, a, c = _unit_forward(cfg, x, gparams[f"u{i}"], u, sh, positions,
+                                    return_cache)
+            aux = aux + a
+            if c:
+                caches[f"u{i}"] = c
+        return (x, aux), caches if return_cache else None
+
+    if remat == "block":
+        group_step = jax.checkpoint(group_step)
+
+    (x, aux), caches = jax.lax.scan(
+        group_step, (x, jnp.zeros((), jnp.float32)), params["groups"])
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    if return_hidden:
+        if return_cache:
+            return x, aux, caches
+        return x, aux
+    logits = lm_logits(x, cfg, params, sh)
+    if return_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, sh: Sharder,
+            *, compute_dtype=jnp.bfloat16, remat: str = "none",
+            aux_weight: float = 0.01):
+    hidden, aux = forward(cfg, params, batch["tokens"], sh,
+                          compute_dtype=compute_dtype,
+                          vision_embeds=batch.get("vision_embeds"),
+                          remat=remat, return_hidden=True)
+    if cfg.frontend == "vision_stub":
+        # loss on the text positions only
+        hidden = hidden[:, -batch["labels"].shape[1]:]
+    from repro.models.layers import lm_loss_chunked
+    return lm_loss_chunked(cfg, hidden, params, batch["labels"], sh) \
+        + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Per-group stacked caches for decode."""
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+
+    def one():
+        c = {}
+        for i, u in enumerate(pattern):
+            if u.mixer == "attn":
+                c[f"u{i}"] = {"attn": init_kv_cache(cfg.attention, batch, max_len)}
+            elif u.mixer == "rwkv6":
+                c[f"u{i}"] = {"rwkv": ssm_mod.rwkv_init_state(cfg, batch)}
+            else:
+                c[f"u{i}"] = {"mamba": ssm_mod.mamba_init_state(cfg, batch)}
+        return c
+
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (ng,) + x.shape), one())
+
+
+def _unit_decode(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
+                 sh: Sharder, cache: dict, pos: jax.Array):
+    """x: (B, 1, d); pos: (B,) absolute position.  Returns (x, new_cache)."""
+    h = apply_norm(cfg, x, uparams.get("norm1"))
+    new_cache = dict(cache)
+    if unit.mixer == "attn":
+        a = cfg.attention
+        w_qkv = sh.weight(uparams["attn"]["qkv"], "attn_qkv").astype(h.dtype)
+        qkv = h @ w_qkv
+        q, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
+        posb = pos[:, None]
+        B = h.shape[0]
+        K_, G, hd = q.shape[2:]
+        q = apply_rope(q.reshape(B, 1, K_ * G, hd), posb,
+                       a.rope_theta).reshape(B, 1, K_, G, hd)
+        k = apply_rope(k, posb, a.rope_theta)
+        c = update_cache(cache["attn"], k[:, 0], v[:, 0], pos)
+        out = decode_attend(q[:, 0], c["k"], c["v"], c["pos"], pos,
+                            window=a.window)
+        out = out.reshape(B, 1, -1)
+        mix = out @ sh.weight(uparams["attn"]["o"], "attn_o").astype(out.dtype)
+        new_cache["attn"] = c
+    elif unit.mixer == "rwkv6":
+        mix, st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh, cache["rwkv"])
+        new_cache["rwkv"] = st
+    else:
+        mix, st = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh, cache["mamba"])
+        new_cache["mamba"] = st
+    x = x + mix
+    h2 = apply_norm(cfg, x, uparams.get("norm2"))
+    if unit.ffn == "moe":
+        y, _ = moe_block(cfg, h2, uparams["moe"], sh)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            y = y + mlp(cfg, h2, uparams["ffn"]["ffn_in"],
+                        uparams["ffn"]["ffn_out"], sh)
+    else:
+        y = mlp(cfg, h2, uparams["ffn"]["ffn_in"], uparams["ffn"]["ffn_out"], sh)
+    return x + y, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                cache: dict, pos: jax.Array, sh: Sharder,
+                *, compute_dtype=jnp.bfloat16):
+    """One serve step.  tokens: (B, 1); pos: (B,).  Returns (logits, cache)."""
+    pattern = layer_pattern(cfg)
+    x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
+
+    def group_step(x, scanned):
+        gparams, gcache = scanned
+        new_c = {}
+        for i, u in enumerate(pattern):
+            x, c = _unit_decode(cfg, x, gparams[f"u{i}"], u, sh,
+                                gcache[f"u{i}"], pos)
+            new_c[f"u{i}"] = c
+        return x, new_c
+
+    x, new_caches = jax.lax.scan(group_step, x, (params["groups"], cache))
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = lm_logits(x, cfg, params, sh)
+    return logits, new_caches

@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod synchronisation (paper §5.3).
+
+The paper's own scaling analysis concludes that multi-module training is
+limited by off-chip bandwidth ("performance scaling ... is limited by the
+off-chip latency").  Two mitigations, both with error feedback so the
+compression bias does not accumulate:
+
+  * bf16 reduction — halves dW sync bytes; enacted structurally by keeping
+    the BP signal path in bf16 (PrecisionPolicy), so the compiler-inserted
+    all-reduce moves 2-byte words.  No explicit code needed beyond the
+    policy; the roofline collective term shows the halving.
+  * int8 + per-tensor scale (this module) — 4x vs f32.  ``compress`` /
+    ``decompress`` are pure functions; ``ef_update`` maintains the error
+    feedback residual.  The launcher applies them around the pod-axis sync
+    when TrainConfig.grad_compression == 'int8_ef'.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """g (f32/bf16) -> (int8 payload, f32 scale).  Symmetric per-tensor."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jax.Array, residual: jax.Array):
+    """Error-feedback compression step.
+
+    Returns (payload, scale, new_residual): the residual carries the
+    quantisation error into the next step, guaranteeing the *accumulated*
+    gradient signal is unbiased (Karimireddy et al.-style EF-SGD).
+    """
+    corrected = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    q, scale = compress_int8(corrected)
+    new_residual = corrected - decompress_int8(q, scale)
+    return q, scale, new_residual
+
+
+def ef_tree_compress(grads, residuals):
+    """Tree-mapped EF compression; returns (payloads, scales, residuals)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = ef_compress(g, r)
+        qs.append(q); ss.append(s); rs.append(nr)
+    unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    return unf(qs), unf(ss), unf(rs)
+
+
+def ef_tree_decompress(payloads, scales):
+    return jax.tree.map(decompress_int8, payloads, scales)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

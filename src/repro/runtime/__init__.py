@@ -1,0 +1,2 @@
+from repro.runtime import train_loop  # noqa: F401
+from repro.runtime import fault_tolerance  # noqa: F401

@@ -1,0 +1,43 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run; no allocation).
+
+Mirrors exactly what data/pipeline.py produces at runtime — weak-type
+correct, shardable, and shaped per (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text positions in a step (VLM reserves seq for vision tokens)."""
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        return shape.seq_len - cfg.n_vision_tokens
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    s = text_len(cfg, shape)
+    d = cfg.d_model
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, d), jnp.float32)
+    if cfg.frontend == "audio_stub":
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, d), jnp.float32)
+    if shape.kind == "prefill":
+        specs.pop("labels")
+    return specs
+
+
+def key_spec():
+    return jax.eval_shape(lambda: jax.random.key(0))

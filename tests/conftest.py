@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests see ONE device (the dry-run sets its own 512-device flag in a
+# subprocess).  Keep threads bounded for the single-core container.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

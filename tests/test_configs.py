@@ -1,0 +1,55 @@
+"""Config registry + analytic parameter counts vs published sizes."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, get_reduced,
+                           list_configs, shape_applicable)
+
+PUBLISHED_B = {
+    "rwkv6-1.6b": 1.6, "minitron-4b": 4.2, "qwen2-0.5b": 0.49,
+    "olmo-1b": 1.2, "deepseek-coder-33b": 33.3, "granite-moe-1b-a400m": 1.3,
+    "arctic-480b": 480.0, "jamba-v0.1-52b": 52.0,
+    "llava-next-mistral-7b": 7.2, "whisper-medium": 0.77,
+}
+
+ACTIVE_B = {"granite-moe-1b-a400m": 0.4, "arctic-480b": 17.0,
+            "jamba-v0.1-52b": 12.0}
+
+
+def test_all_assigned_registered():
+    for a in ASSIGNED_ARCHS:
+        assert a in list_configs()
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_count_matches_published(arch):
+    n = get_config(arch).param_count() / 1e9
+    ref = PUBLISHED_B[arch]
+    assert abs(n - ref) / ref < 0.20, f"{arch}: {n:.2f}B vs {ref}B"
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE_B))
+def test_active_params(arch):
+    n = get_config(arch).active_param_count() / 1e9
+    ref = ACTIVE_B[arch]
+    assert abs(n - ref) / ref < 0.35, f"{arch}: active {n:.2f}B vs {ref}B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_configs_are_small(arch):
+    r = get_reduced(arch)
+    assert r.d_model <= 128 and r.vocab_size <= 1024
+    assert r.param_count() < 5e6
+    # family preserved
+    assert r.family == get_config(arch).family
+
+
+def test_long_500k_applicability():
+    runs = {a for a in ASSIGNED_ARCHS
+            if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == {"rwkv6-1.6b", "jamba-v0.1-52b"}
+
+
+def test_cell_count_is_40():
+    n = sum(len(SHAPES) for _ in ASSIGNED_ARCHS)
+    assert n == 40

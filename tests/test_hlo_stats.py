@@ -1,0 +1,65 @@
+"""HLO static analyzer: scan-trip exactness vs unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_stats import analyze, parse_hlo
+
+
+def _text(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_equal_unrolled():
+    def scanned(x, ws):
+        def step(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(step, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(10):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    s1 = analyze(_text(scanned, (128, 128), (10, 128, 128)))
+    s2 = analyze(_text(unrolled, (128, 128), (10, 128, 128)))
+    assert s1.flops > 0
+    assert abs(s1.flops - s2.flops) / s2.flops < 1e-9
+    assert s1.trip_counts == [10]
+
+
+def test_nested_scan_multiplies():
+    def nested(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    s = analyze(_text(nested, (64, 64), (4, 64, 64)))
+    # 4 outer x 5 inner matmuls of 2*64^3
+    expect = 4 * 5 * 2 * 64 ** 3
+    assert abs(s.flops - expect) / expect < 1e-9
+
+
+def test_single_matmul_flops_exact():
+    s = analyze(_text(lambda a, b: a @ b, (64, 32), (32, 96)))
+    assert s.flops == 2 * 64 * 32 * 96
+
+
+def test_conv_flops_counted():
+    def conv(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    s = analyze(_text(conv, (1, 8, 8, 3), (3, 3, 3, 16)))
+    expect = 2 * (1 * 8 * 8 * 16) * (3 * 3 * 3)
+    assert abs(s.flops - expect) / expect < 0.05
+
+
+def test_parse_handles_tuples_and_regions():
+    txt = _text(lambda x, ws: jax.lax.scan(
+        lambda c, w: (jnp.tanh(c @ w), c.sum()), x, ws),
+        (32, 32), (3, 32, 32))
+    comps = parse_hlo(txt)
+    assert any(c.whiles for c in comps.values())

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret mode on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.outer_accum import outer_accum as k_outer
+from repro.kernels.sr_matmul import sr_matmul as k_mm
+from repro.kernels.sr_round import sr_round as k_round
+from repro.kernels.wkv6 import wkv6 as k_wkv
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (128, 384), (256, 256), (8, 512)])
+@pytest.mark.parametrize("block", [(64, 128), (256, 256)])
+def test_sr_round_bit_exact(shape, block):
+    x = jax.random.normal(KEY, shape, jnp.float32) * 7
+    rb = ops.make_rbits(KEY, shape)
+    y = k_round(x, rb, block=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(ref.sr_round_ref(x, rb)))
+
+
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (128, 192, 256), (256, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_sr_matmul_f32_path(mnk, dtype):
+    m, n, k = mnk
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    y = k_mm(a, b, None, block=(64, 64, 64), interpret=True)
+    # blocked accumulation order differs from a single dot: ~k ulps
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.sr_matmul_ref(a, b)),
+                               rtol=5e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (128, 192, 256)])
+def test_sr_matmul_sr_path(mnk):
+    m, n, k = mnk
+    a = jax.random.normal(KEY, (m, k), jnp.bfloat16)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.bfloat16)
+    rb = ops.make_rbits(KEY, (m, n))
+    y = k_mm(a, b, rb, block=(64, 64, 64), interpret=True)
+    yr = ref.sr_matmul_ref(a, b, rb)
+    # 1-ulp tolerance: blocked f32 accumulation order may differ by 1 ulp,
+    # which SR amplifies to one bf16 step on a handful of elements.
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=1.2e-2)
+
+
+@pytest.mark.parametrize("tdf", [(512, 96, 128), (256, 64, 64), (1024, 32, 96)])
+@pytest.mark.parametrize("scale", [1.0, 1.0 / 32])
+def test_outer_accum(tdf, scale):
+    t, d, f = tdf
+    x = jax.random.normal(KEY, (t, d), jnp.bfloat16)
+    dy = jax.random.normal(jax.random.fold_in(KEY, 2), (t, f), jnp.bfloat16)
+    y = k_outer(x, dy, scale=scale, block=(32, 64, 128), interpret=True)
+    yr = ref.outer_accum_ref(x, dy, scale=scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=1, S=64, H=1, hd=16, chunk=16),
+    dict(B=2, S=128, H=2, hd=16, chunk=32),
+    dict(B=2, S=128, H=2, hd=32, chunk=64),
+])
+def test_wkv6_vs_sequential_oracle(cfg):
+    B, S, H, hd, chunk = cfg["B"], cfg["S"], cfg["H"], cfg["hd"], cfg["chunk"]
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd), jnp.float32) * 0.1
+    y, s = ops.wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    yr, sr = ref.wkv6_ref(fold(r), fold(k), fold(v), fold(w),
+                          jnp.tile(u, (B, 1)))
+    yr = yr.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s),
+                               np.asarray(sr.reshape(B, H, hd, hd)),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_strong_decay_stable():
+    """Strong decays underflow gracefully (log-space clamp), no inf/nan."""
+    B, S, H, hd = 1, 64, 1, 16
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    w = jnp.full((B, S, H, hd), 1e-6, jnp.float32)      # near-total decay
+    u = jnp.zeros((H, hd), jnp.float32)
+    y, s = ops.wkv6(r, k, v, w, u, chunk=32, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_make_rbits_lo_entropy_reduction():
+    """LO mode spends ~1/lo_block of the entropy of full mode."""
+    full = ops.make_rbits(KEY, (1024,), lo=False)
+    lo = ops.make_rbits(KEY, (1024,), lo=True, lo_block=256)
+    assert len(np.unique(np.asarray(full))) > 1000
+    # 4 source words, rotations generate <= 32 variants each
+    assert len(np.unique(np.asarray(lo))) <= 4 * 32

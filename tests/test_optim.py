@@ -1,0 +1,97 @@
+"""Optimizers: convergence, SR-bf16 state fidelity, ZeRO-1 spec helper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.precision import get_policy
+from repro.optim import make_optimizer
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_tree_compress, init_residuals)
+
+
+def _quadratic(params):
+    return sum(jnp.sum((p - 3.0) ** 2) for p in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("name,lr,steps", [("sgdm", 0.05, 200),
+                                           ("adamw", 0.3, 80),
+                                           ("adagrad", 1.5, 200)])
+def test_optimizers_converge_fp32(name, lr, steps):
+    cfg = TrainConfig(optimizer=name, lr=lr, weight_decay=0.0)
+    opt = make_optimizer(cfg, get_policy("fp32"))
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    state = opt.init(params)
+    for step in range(steps):
+        g = jax.grad(_quadratic)(params)
+        params, state = opt.update(g, state, params,
+                                   jnp.asarray(step), None)
+    assert float(_quadratic(params)) < 0.3
+
+
+def test_sr_bf16_adam_tracks_fp32_adam():
+    """Paper claim (Fig 10): SR low-precision training ~= float training."""
+    cfg = TrainConfig(optimizer="adamw", lr=0.05, weight_decay=0.0)
+    opt32 = make_optimizer(cfg, get_policy("fp32"))
+    opt_sr = make_optimizer(cfg, get_policy("paper_sr_bf16"))
+    key = jax.random.PRNGKey(0)
+    p32 = {"w": jnp.zeros((32, 32))}
+    psr = {"w": jnp.zeros((32, 32), jnp.bfloat16)}
+    s32, ssr = opt32.init(p32), opt_sr.init(psr)
+    for step in range(120):
+        g = jax.grad(_quadratic)(jax.tree.map(
+            lambda x: x.astype(jnp.float32), p32))
+        gsr = jax.grad(_quadratic)(jax.tree.map(
+            lambda x: x.astype(jnp.float32), psr))
+        p32, s32 = opt32.update(g, s32, p32, jnp.asarray(step), None)
+        psr, ssr = opt_sr.update(gsr, ssr, psr, jnp.asarray(step),
+                                 jax.random.fold_in(key, step))
+    l32 = float(_quadratic(jax.tree.map(lambda x: x.astype(jnp.float32), p32)))
+    lsr = float(_quadratic(jax.tree.map(lambda x: x.astype(jnp.float32), psr)))
+    assert lsr < 1.0 and abs(lsr - l32) < 1.0
+    assert jax.tree.leaves(psr)[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(ssr["m"])[0].dtype == jnp.bfloat16
+
+
+def test_zero1_spec_adds_data_axis():
+    import os
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.train_loop import zero1_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    sp = zero1_spec(P(None, "model"), (64, 32), FakeMesh())
+    assert sp == P("data", "model")
+    # non-divisible dims stay untouched
+    sp2 = zero1_spec(P(None, "model"), (7, 32), FakeMesh())
+    assert sp2 == P(None, "model")
+    # already data-sharded: unchanged
+    sp3 = zero1_spec(P("data", None), (64, 32), FakeMesh())
+    assert sp3 == P("data", None)
+
+
+def test_int8_compression_roundtrip_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 5
+    q, s = compress_int8(g)
+    err = jnp.max(jnp.abs(decompress_int8(q, s) - g))
+    assert float(err) <= float(s) * 0.51 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """EF: the SUM of decompressed grads tracks the sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    grads = [jax.random.normal(jax.random.fold_in(key, i), (64,)) * 0.1
+             for i in range(50)]
+    res = init_residuals({"g": grads[0]})
+    acc_true = jnp.zeros((64,))
+    acc_comp = jnp.zeros((64,))
+    for g in grads:
+        q, s, res = ef_tree_compress({"g": g}, res)
+        acc_true += g
+        acc_comp += decompress_int8(q["g"], s["g"])
+    # residual bounds the accumulated error
+    gap = jnp.max(jnp.abs(acc_true - acc_comp - res["g"]))
+    assert float(gap) < 1e-4

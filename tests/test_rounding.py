@@ -1,0 +1,90 @@
+"""Stochastic rounding properties (paper §3.3.2 / Fig 10 foundations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rounding import (FX32, FX32_SR, FX32_SR_LO, fixed_quantize,
+                                 round_nearest_bf16, stochastic_round_bf16,
+                                 stochastic_round_bf16_lo)
+
+
+def _neighbors_bf16(x):
+    """The two adjacent bf16 values bracketing f32 x."""
+    lo = jnp.asarray(x, jnp.float32)
+    u = jax.lax.bitcast_convert_type(lo, jnp.uint32)
+    down = jax.lax.bitcast_convert_type(u & jnp.uint32(0xFFFF0000), jnp.uint32)
+    down_f = jax.lax.bitcast_convert_type(down, jnp.float32)
+    up = jax.lax.bitcast_convert_type((u & jnp.uint32(0xFFFF0000)) +
+                                      jnp.uint32(0x10000), jnp.float32)
+    return float(down_f), float(up)
+
+
+@given(st.floats(min_value=-1e30, max_value=1e30,
+                 allow_nan=False, allow_infinity=False),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_sr_lands_on_adjacent_bf16(x, seed):
+    """SR(x) is always one of the two bf16 values bracketing x."""
+    key = jax.random.PRNGKey(seed)
+    y = float(stochastic_round_bf16(jnp.full((1,), x, jnp.float32), key)[0])
+    down, up = _neighbors_bf16(x)
+    assert y == down or y == up or y == x
+
+
+@pytest.mark.parametrize("fn,label", [
+    (stochastic_round_bf16, "sr"),
+    (stochastic_round_bf16_lo, "sr_lo"),
+])
+def test_sr_unbiased(fn, label):
+    """E[SR(x)] == x to statistical precision; nearest rounding is biased."""
+    val = 1.0 / 3.0                                   # between bf16 points
+    x = jnp.full((1 << 16,), val, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    means = [float(jnp.mean(fn(x, k).astype(jnp.float32))) for k in keys]
+    err_sr = abs(np.mean(means) - val)
+    err_nearest = abs(float(jnp.mean(
+        round_nearest_bf16(x).astype(jnp.float32))) - val)
+    assert err_sr < 3e-5, f"{label} biased: {err_sr}"
+    assert err_nearest > 1e-4          # nearest is measurably biased here
+
+
+def test_sr_handles_nonfinite():
+    x = jnp.array([jnp.inf, -jnp.inf, jnp.nan, 0.0], jnp.float32)
+    y = stochastic_round_bf16(x, jax.random.PRNGKey(0))
+    assert jnp.isposinf(y[0]) and jnp.isneginf(y[1])
+    assert jnp.isnan(y[2]) and y[3] == 0
+
+
+def test_sr_lo_entropy_sharing_matches_full_sr_statistically():
+    """Paper Fig 10: SR and SR-LO give the same training statistics."""
+    x = jnp.linspace(-2, 2, 1 << 14).astype(jnp.float32)
+    k = jax.random.PRNGKey(3)
+    e_full = float(jnp.mean(
+        (stochastic_round_bf16(x, k).astype(jnp.float32) - x)))
+    e_lo = float(jnp.mean(
+        (stochastic_round_bf16_lo(x, k).astype(jnp.float32) - x)))
+    assert abs(e_full) < 3e-5 and abs(e_lo) < 3e-5
+
+
+@given(st.floats(min_value=-1000, max_value=1000, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_fixed_quantize_error_bound(x):
+    xq = float(fixed_quantize(jnp.float32(x), FX32))
+    # quantisation step + f32 representation error of the scaled value
+    assert abs(xq - x) <= 1.01 / FX32.scale + 1e-6 * abs(x)
+
+
+def test_fixed_quantize_sr_unbiased():
+    x = jnp.full((1 << 15,), 1.0 / 3.0, jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    for cfg in (FX32_SR, FX32_SR_LO):
+        m = np.mean([float(jnp.mean(fixed_quantize(x, cfg, k))) for k in ks])
+        assert abs(m - 1.0 / 3.0) < 1e-6
+
+
+def test_fixed_quantize_saturates():
+    big = jnp.float32(1e9)
+    y = float(fixed_quantize(big, FX32))
+    assert y == pytest.approx(FX32.qmax / FX32.scale, rel=1e-6)
