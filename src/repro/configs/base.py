@@ -222,6 +222,7 @@ class TrainConfig:
     weight_decay: float = 0.1
     momentum: float = 0.9
     precision: str = "paper_sr_bf16"   # see core/precision.py presets
+    kernel_backend: str = "reference"  # engine matmul path: reference|pallas
     microbatch: int = 0                # 0 = no microbatching
     remat: str = "block"               # none|block|full
     grad_compression: str = "none"     # none|bf16|int8_ef

@@ -4,7 +4,7 @@ from repro.core.dataflow import (DataflowPlan, MeshSpec, OpPlan, OpSpec,
 from repro.core.phases import Phase, TRAINING_PHASES
 from repro.core.pmag import LoopDim, LoopNest, matmul_nest
 from repro.core.precision import PRESETS, PrecisionPolicy, get_policy
-from repro.core.program import Program, compile_program, extract_ops
+from repro.core.program import PEWord, Program, compile_program, extract_ops
 from repro.core.rounding import (FX16, FX32, FX32_SR, FX32_SR_LO,
                                  FixedPointConfig, fixed_quantize,
                                  round_nearest_bf16, stochastic_round_bf16,
@@ -13,7 +13,8 @@ from repro.core.rounding import (FX16, FX32, FX32_SR, FX32_SR_LO,
 __all__ = [
     "DataflowPlan", "MeshSpec", "OpPlan", "OpSpec", "Strategy", "plan_model",
     "plan_op", "Phase", "TRAINING_PHASES", "LoopDim", "LoopNest",
-    "matmul_nest", "PRESETS", "PrecisionPolicy", "get_policy", "Program",
+    "matmul_nest", "PRESETS", "PrecisionPolicy", "get_policy", "PEWord",
+    "Program",
     "compile_program", "extract_ops", "FixedPointConfig", "fixed_quantize",
     "FX16", "FX32", "FX32_SR", "FX32_SR_LO", "round_nearest_bf16",
     "stochastic_round_bf16", "stochastic_round_bf16_lo",

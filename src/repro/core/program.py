@@ -175,6 +175,42 @@ def extract_ops(cfg: ModelConfig) -> list:
 
 
 # ---------------------------------------------------------------------------
+# PE program words
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PEWord:
+    """Executable PE program word for one op (Table 4's 4-byte PE entry).
+
+    Where :meth:`Program.ibuffer_entries` renders the iBuffer for reporting,
+    a ``PEWord`` is the *executable* selection the engine dispatches on:
+    which kernel runs each phase and at what precision/rounding.  Frozen and
+    string-typed so it can ride ``jax.custom_vjp`` nondiff arguments.
+    """
+    op: str
+    strategy: str = "replicate"
+    ff_dtype: str = "bfloat16"          # FF operand dtype (f32 accumulation)
+    bp_dtype: str = "bfloat16"          # BP (dX) operand dtype
+    update_rounding: str = "nearest"    # UP dW writeback: nearest | sr | sr_lo
+    ff_kernel: str = "sr_matmul"        # FF: tiled MAC array
+    bp_kernel: str = "sr_matmul_t"      # BP: counter-swept W^T matmul
+    up_kernel: str = "outer_accum"      # UP: fused X^T dY + SR writeback
+
+    def kernel_for(self, phase: Phase) -> str:
+        if phase == Phase.FF:
+            return self.ff_kernel
+        if phase == Phase.BP:
+            return self.bp_kernel
+        return self.up_kernel
+
+
+# VPU ops (norm scales, conv taps, router logits): full-precision elementwise
+# or routing math — never dispatched onto the MAC-array kernels.
+_VPU_WORD_KERNELS = dict(ff_kernel="vpu", bp_kernel="vpu", up_kernel="vpu")
+
+
+# ---------------------------------------------------------------------------
 # Program
 # ---------------------------------------------------------------------------
 
@@ -205,6 +241,36 @@ class Program:
     def strategy(self, op_name: str) -> Strategy:
         return self.plan[op_name].strategy
 
+    # --- execution ---------------------------------------------------------
+
+    def op_spec(self, op_name: str) -> Optional[OpSpec]:
+        for op in self.ops:
+            if op.name == op_name:
+                return op
+        return None
+
+    def pe_word(self, op_name: str) -> PEWord:
+        """The executable program word the PE engine dispatches on.
+
+        MAC-array ops get the policy's phase ladder (bf16 FF / bf16 BP with
+        f32 accumulation / SR-rounded UP writeback); 'state'-role ops (conv
+        taps, router) stay on the f32 VPU path — the paper never lowers
+        those onto the MAC array (§3.3).
+        """
+        import jax.numpy as jnp
+        spec = self.op_spec(op_name)
+        strategy = (str(self.plan[op_name].strategy)
+                    if op_name in self.plan.ops else str(Strategy.REPLICATE))
+        if spec is not None and spec.role == "state":
+            return PEWord(op=op_name, strategy=strategy,
+                          ff_dtype="float32", bp_dtype="float32",
+                          update_rounding="nearest", **_VPU_WORD_KERNELS)
+        return PEWord(
+            op=op_name, strategy=strategy,
+            ff_dtype=jnp.dtype(self.policy.compute_dtype(Phase.FF)).name,
+            bp_dtype=jnp.dtype(self.policy.compute_dtype(Phase.BP)).name,
+            update_rounding=self.policy.update_rounding)
+
     # --- reporting ---------------------------------------------------------
 
     def ibuffer_entries(self) -> list:
@@ -215,15 +281,20 @@ class Program:
         entries = []
         for name in sorted(self.plan.ops):
             p = self.plan.ops[name]
+            word = self.pe_word(name)
             for ph in phases:
+                # dtype/rounding come from the EXECUTABLE word so the image
+                # matches what the engine runs (VPU ops: exact f32/nearest)
                 entries.append({
                     "op": name, "phase": str(ph),
                     "strategy": str(p.strategy),
                     "weight_spec": str(p.weight_spec),
                     "compute_spec": str(p.compute_spec),
-                    "dtype": jnp.dtype(self.policy.compute_dtype(ph)).name,
-                    "rounding": (self.policy.update_rounding
+                    "dtype": (word.ff_dtype if ph == Phase.FF
+                              else word.bp_dtype),
+                    "rounding": (word.update_rounding
                                  if ph == Phase.UP else "nearest"),
+                    "kernel": word.kernel_for(ph),
                     "comm_bytes": float(p.comm_bytes.get(ph, 0.0)),
                 })
         return entries

@@ -1,0 +1,14 @@
+"""PE execution engine: the compiled iBuffer program, actually executed.
+
+``core/program.py`` compiles the per-(op x phase) program words; this
+package executes them.  :func:`pe_dot` is the single dispatch seam every
+weight-bearing matmul in ``models/`` routes through; :class:`PEContext`
+(the grown ``Sharder``) fuses the dataflow program's layout constraints
+into that seam and threads the kernel backend + SR entropy.
+"""
+from repro.engine.context import PEContext, Sharder
+from repro.engine.dispatch import (BACKENDS, DEFAULT_WORD, op_key, pe_dot,
+                                   up_key)
+
+__all__ = ["PEContext", "Sharder", "BACKENDS", "DEFAULT_WORD", "op_key",
+           "pe_dot", "up_key"]

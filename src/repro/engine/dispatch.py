@@ -1,0 +1,179 @@
+"""The PE dispatch seam: every weight-bearing matmul runs through here.
+
+``pe_dot(x, w, word=...)`` is the software analog of issuing one iBuffer
+program word to a PE (§4, Fig 12): the compiled :class:`~repro.core.program.PEWord`
+says which kernel and precision each *phase* of the op uses, and the seam
+routes accordingly:
+
+  FF — the bf16 ``sr_matmul`` MAC-array kernel (f32 accumulation),
+  BP — ``sr_matmul`` with the counter-swept W^T BlockSpec (``trans_b``),
+       at the policy's BP dtype, via ``jax.custom_vjp``,
+  UP — dW from the fused ``outer_accum`` outer-product kernel with
+       stochastic-rounding writeback per ``policy.update_rounding``.
+
+Two backends:
+
+  reference — plain jnp (exactly the pre-engine model code; bit-identical,
+              GSPMD-friendly: the multi-pod path and the parity oracle).
+  pallas    — the kernels above (interpret mode on CPU, compiled on TPU).
+
+Ops whose program word selects the ``vpu`` kernel (router logits, conv
+taps — role 'state' in the planner) always take the reference path: the
+paper never lowers those onto the MAC array (§3.3).
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import dtypes as jdtypes
+
+from repro.core.program import PEWord
+from repro.kernels import ops as kops
+
+BACKENDS = ("reference", "pallas")
+
+# Program-less call sites (paper-baseline GRU/CNN/MLP, smoke tests): the
+# default word mirrors the paper_sr_bf16 ladder minus SR (no policy in scope).
+DEFAULT_WORD = PEWord(op="dot")
+
+
+def op_key(key: Optional[jax.Array], op_name: str) -> jax.Array:
+    """Per-op entropy stream: fold the op name into the phase key.
+
+    Deterministic (crc32, not hash()) so tests can reproduce the UP-phase
+    SR entropy of any op from (step key, op name).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return jax.random.fold_in(key, zlib.crc32(op_name.encode()) & 0x7FFFFFFF)
+
+
+def up_key(key: jax.Array, dy: jax.Array) -> jax.Array:
+    """The UP phase's final entropy key: op key x gradient content.
+
+    The (step key, op name) pair alone recurs bit-identically for every
+    iteration of a scanned layer stack (the scan body is traced once),
+    every microbatch, and every same-shaped slice of a fused weight — the
+    SR draws would be perfectly correlated.  Folding a hash of the dY
+    operand decorrelates all of those while staying deterministic and
+    reproducible (tests rebuild the same key from the same dy).
+    """
+    s = jnp.sum(dy.astype(jnp.float32))
+    return jax.random.fold_in(key, jax.lax.bitcast_convert_type(s, jnp.uint32))
+
+
+@dataclass(frozen=True)
+class _StaticCfg:
+    """Hashable static half of a dispatch (rides custom_vjp nondiff args)."""
+    word: PEWord
+    interpret: Optional[bool]
+    block: tuple
+    transpose_w: bool
+
+
+# ---------------------------------------------------------------------------
+# Pallas path: three-phase custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _ff(cfg: _StaticCfg, x2: jax.Array, w: jax.Array) -> jax.Array:
+    ffdt = jnp.dtype(cfg.word.ff_dtype)
+    y = kops.sr_matmul(x2.astype(ffdt), w.astype(ffdt), None, sr=False,
+                       block=cfg.block, interpret=cfg.interpret,
+                       trans_b=cfg.transpose_w)
+    return y.astype(x2.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pe_matmul(cfg: _StaticCfg, x2: jax.Array, w: jax.Array,
+               key: jax.Array) -> jax.Array:
+    return _ff(cfg, x2, w)
+
+
+def _pe_matmul_fwd(cfg, x2, w, key):
+    return _ff(cfg, x2, w), (x2, w, key)
+
+
+def _pe_matmul_bwd(cfg, res, g):
+    x2, w, key = res
+    word = cfg.word
+    bpdt = jnp.dtype(word.bp_dtype)
+    # BP: dX = dY @ W^T — W read transposed by the counter-swept BlockSpec
+    # (trans_b), never materialised.  f32 accumulation, no SR (the gradient
+    # signal is transient, not persistent state).
+    dx = kops.sr_matmul(g.astype(bpdt), w.astype(bpdt), None, sr=False,
+                        block=cfg.block, interpret=cfg.interpret,
+                        trans_b=not cfg.transpose_w)
+    dx = dx.astype(x2.dtype)
+    # UP: dW = X^T dY in ONE pass of the fused outer-product kernel; the
+    # f32 accumulator is stochastically rounded on writeback when the word
+    # says so and the parameter is stored bf16.
+    xt, dyt = (g, x2) if cfg.transpose_w else (x2, g)
+    sr = (word.update_rounding in ("sr", "sr_lo")
+          and jnp.dtype(w.dtype) == jnp.bfloat16)
+    dw = kops.outer_accum(xt.astype(bpdt), dyt.astype(bpdt),
+                          up_key(key, dyt),
+                          sr=sr, lo=word.update_rounding == "sr_lo",
+                          block=cfg.block, interpret=cfg.interpret)
+    dw = dw.astype(w.dtype)
+    return dx, dw, np.zeros(key.shape, jdtypes.float0)
+
+
+_pe_matmul.defvjp(_pe_matmul_fwd, _pe_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public seam
+# ---------------------------------------------------------------------------
+
+
+def _reference_dot(x: jax.Array, w: jax.Array, transpose_w: bool) -> jax.Array:
+    if w.ndim == 3:                      # batched expert tables (E, d, f)
+        eq = "ecd,efd->ecf" if transpose_w else "ecd,edf->ecf"
+        return jnp.einsum(eq, x, w.astype(x.dtype))
+    wt = w.astype(x.dtype)
+    return x @ (wt.T if transpose_w else wt)
+
+
+def _pallas_dot(x: jax.Array, w: jax.Array, cfg: _StaticCfg,
+                key: jax.Array) -> jax.Array:
+    if w.ndim == 3:                      # one PE program word per expert
+        keys = jax.random.split(key, w.shape[0])
+        return jax.vmap(lambda xe, we, ke: _pallas_dot(xe, we, cfg, ke))(
+            x, w, keys)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2 = _pe_matmul(cfg, x2, w, key)
+    n = w.shape[0] if cfg.transpose_w else w.shape[-1]
+    return y2.reshape(*lead, n)
+
+
+def pe_dot(x: jax.Array, w: jax.Array, *,
+           word: Optional[PEWord] = None,
+           backend: str = "reference",
+           key: Optional[jax.Array] = None,
+           interpret: Optional[bool] = None,
+           transpose_w: bool = False,
+           block: tuple = (256, 256, 512)) -> jax.Array:
+    """Dispatch one weight-bearing matmul through its PE program word.
+
+    x: (..., K); w: (K, N) — or (N, K) with transpose_w, or (E, K, N) for
+    batched expert tables (x then (E, C, K)).  Returns (..., N) in x.dtype.
+    """
+    if word is None:
+        word = DEFAULT_WORD
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; one of {BACKENDS}")
+    if backend == "reference" or word.ff_kernel == "vpu":
+        return _reference_dot(x, w, transpose_w)
+    cfg = _StaticCfg(word=word, interpret=interpret, block=block,
+                     transpose_w=transpose_w)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return _pallas_dot(x, w, cfg, key)

@@ -49,18 +49,23 @@ def sr_round(x: jax.Array, key: jax.Array, *, lo: bool = False,
     return _rr.sr_round(x, rbits, interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("sr", "lo", "interpret", "block"))
+@functools.partial(jax.jit,
+                   static_argnames=("sr", "lo", "interpret", "block", "trans_b"))
 def sr_matmul(a: jax.Array, b: jax.Array, key: jax.Array | None = None, *,
               sr: bool = True, lo: bool = False,
               block: tuple = (256, 256, 512),
-              interpret: bool | None = None) -> jax.Array:
-    """bf16 matmul, f32 accumulation, optional fused SR-bf16 writeback."""
+              interpret: bool | None = None, trans_b: bool = False) -> jax.Array:
+    """bf16 matmul, f32 accumulation, optional fused SR-bf16 writeback.
+
+    trans_b computes a @ b.T via the counter-swept BlockSpec (BP's W^T)."""
     interp = _interpret_default() if interpret is None else interpret
     rbits = None
+    n = b.shape[0] if trans_b else b.shape[1]
     if sr:
         assert key is not None
-        rbits = make_rbits(key, (a.shape[0], b.shape[1]), lo=lo)
-    return _mm.sr_matmul(a, b, rbits, block=block, interpret=interp)
+        rbits = make_rbits(key, (a.shape[0], n), lo=lo)
+    return _mm.sr_matmul(a, b, rbits, block=block, interpret=interp,
+                         trans_b=trans_b)
 
 
 @functools.partial(jax.jit,

@@ -28,9 +28,11 @@ def sr_round_ref(x: jax.Array, rbits: jax.Array) -> jax.Array:
 
 
 def sr_matmul_ref(a: jax.Array, b: jax.Array,
-                  rbits: jax.Array | None = None) -> jax.Array:
-    """A @ B with f32 accumulation; SR-cast to bf16 when rbits given."""
-    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+                  rbits: jax.Array | None = None, *,
+                  trans_b: bool = False) -> jax.Array:
+    """A @ B (or A @ B.T) with f32 accumulation; SR-cast when rbits given."""
+    acc = jnp.dot(a, b.T if trans_b else b,
+                  preferred_element_type=jnp.float32)
     if rbits is None:
         return acc
     return sr_cast_bf16(acc, rbits)

@@ -25,13 +25,23 @@ from repro.core.pmag import matmul_nest
 _LOW_MASK = 0xFFFF
 
 
-def _mm_kernel(a_ref, b_ref, r_ref, o_ref, acc_ref, *, n_l: int, sr: bool):
+def _mm_kernel(a_ref, b_ref, r_ref, o_ref, acc_ref, *, n_l: int, sr: bool,
+               trans_b: bool = False):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+    if trans_b:
+        # B tile arrives as (tj, tl): contract the trailing axis of BOTH
+        # operands — the PMAG counter-swept W^T (BP), no materialised
+        # transpose.
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                                preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_l - 1)
     def _write():
@@ -50,24 +60,34 @@ def _mm_kernel(a_ref, b_ref, r_ref, o_ref, acc_ref, *, n_l: int, sr: bool):
 def sr_matmul(a: jax.Array, b: jax.Array,
               rbits: Optional[jax.Array] = None, *,
               block: tuple = (256, 256, 512),
-              interpret: bool = False) -> jax.Array:
-    """a: (M, K) @ b: (K, N) -> bf16 with SR (rbits given) or f32 without."""
+              interpret: bool = False, trans_b: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> bf16 with SR (rbits given) or f32 without.
+
+    trans_b=True computes a @ b.T for b: (N, K) — the transpose is wired
+    purely through the B BlockSpec (counters swept in (j, l) order), the
+    paper's free W^T read for the BP phase.
+    """
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if trans_b:
+        n, k2 = b.shape
+    else:
+        k2, n = b.shape
+    assert k == k2, (a.shape, b.shape, trans_b)
     bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
     nest = matmul_nest(m, n, k, tm=bm, tn=bn, tk=bk)
     sr = rbits is not None
     if not sr:
         rbits = jnp.zeros((m, n), jnp.uint32)
     out_dtype = jnp.bfloat16 if sr else jnp.float32
-    kernel = functools.partial(_mm_kernel, n_l=nest.dim("l").steps, sr=sr)
+    kernel = functools.partial(_mm_kernel, n_l=nest.dim("l").steps, sr=sr,
+                               trans_b=trans_b)
     return pl.pallas_call(
         kernel,
         grid=nest.grid,
         in_specs=[
             nest.block_spec(("i", "l")),     # A tile walks (i, l)
-            nest.block_spec(("l", "j")),     # B tile walks (l, j)
+            # B tile walks (l, j); trans_b sweeps the counters swapped
+            nest.block_spec(("j", "l") if trans_b else ("l", "j")),
             nest.block_spec(("i", "j")),     # entropy tile mirrors the output
         ],
         out_specs=nest.block_spec(("i", "j")),

@@ -28,6 +28,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kernel-backend", default="reference",
+                    choices=("reference", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,13 +40,14 @@ def main(argv=None):
     mesh = make_host_mesh()
     use_mesh = mesh if mesh.devices.size > 1 else None
     program = compile_program(cfg, shape, mesh_spec_for(mesh))
-    decode = jax.jit(tl.make_decode_step(cfg, program, use_mesh),
+    decode = jax.jit(tl.make_decode_step(cfg, program, use_mesh,
+                                         kernel_backend=args.kernel_backend),
                      donate_argnums=(1,))
 
     key = jax.random.PRNGKey(args.seed)
     mm = tl.model_module(cfg)
     params = tl.cast_params(mm.init(key, cfg), jnp.bfloat16)
-    sh = Sharder(use_mesh, program)
+    sh = Sharder(use_mesh, program, backend=args.kernel_backend)
 
     # ---- prefill ----
     t0 = time.monotonic()

@@ -39,6 +39,10 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--precision", default="paper_sr_bf16")
+    ap.add_argument("--kernel-backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="engine matmul path: reference jnp or the Pallas "
+                         "PE kernels (interpret mode on CPU)")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--remat", default="block")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
@@ -62,6 +66,7 @@ def main(argv=None):
 
     train_cfg = TrainConfig(optimizer=args.optimizer, lr=args.lr,
                             precision=args.precision, remat=args.remat,
+                            kernel_backend=args.kernel_backend,
                             microbatch=args.microbatch, seed=args.seed,
                             steps=args.steps,
                             checkpoint_dir=args.ckpt_dir,

@@ -133,9 +133,18 @@ def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if window is not None:
         valid &= (pos[:, None] - kv_pos) < window
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    # flash-identical arithmetic (one kv chunk): cast the UNnormalised
+    # exp(s - m) to the cache dtype, matmul with f32 accumulation, divide
+    # by the denominator afterwards.  Normalising before the bf16 cast
+    # rounds differently and makes prefill (flash path) vs decode drift a
+    # ulp per layer — enough to flip near-tied argmax logits
+    # (test_serving_cache_consistency).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)
     return out.astype(q.dtype)
 
 
@@ -196,18 +205,21 @@ def attention_block(cfg: ModelConfig, x: jax.Array, params: dict,
     """Training/prefill attention (full sequence).  x: (B, S, d)."""
     a = cfg.attention
     assert a is not None
-    w_qkv = sh.weight(params["qkv"], f"{op_prefix}_qkv")
-    w_o = sh.weight(params["o"], f"{op_prefix}_o")
     src = x if kv_source is None else kv_source
     if kv_source is None:
-        qkv = x @ w_qkv.astype(x.dtype)
+        qkv = sh.dot(f"{op_prefix}_qkv", x, params["qkv"])
         q, k, v = split_qkv(a, qkv, params.get("qkv_bias"))
     else:
-        # cross attention: q from x, k/v from the encoder output
+        # cross attention: q from x, k/v from the encoder output; the
+        # fused qkv weight is constrained once, then each split half runs
+        # through the seam under the same program word.
         H, K, hd = a.n_heads, a.n_kv_heads, a.head_dim
-        wq, wkv = jnp.split(w_qkv.astype(x.dtype), [H * hd], axis=-1)
-        q = (x @ wq).reshape(*x.shape[:2], K, H // K, hd)
-        kv = src.astype(x.dtype) @ wkv
+        w_qkv = sh.weight(params["qkv"], f"{op_prefix}_qkv")
+        wq, wkv = jnp.split(w_qkv, [H * hd], axis=-1)
+        q = sh.dot(f"{op_prefix}_qkv", x, wq,
+                   constrain=False).reshape(*x.shape[:2], K, H // K, hd)
+        kv = sh.dot(f"{op_prefix}_qkv", src.astype(x.dtype), wkv,
+                    constrain=False)
         k, v = jnp.split(kv, 2, axis=-1)
         k = k.reshape(*src.shape[:2], K, hd)
         v = v.reshape(*src.shape[:2], K, hd)
@@ -231,4 +243,4 @@ def attention_block(cfg: ModelConfig, x: jax.Array, params: dict,
                           window=a.window if causal else None)
     B, S = out.shape[:2]
     out = out.reshape(B, S, -1)
-    return out @ w_o.astype(out.dtype)
+    return sh.dot(f"{op_prefix}_o", out, params["o"])

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_nets import CNNConfig, ConvSpec
+from repro.engine import pe_dot
 
 
 def init(key, cfg: CNNConfig) -> dict:
@@ -64,22 +65,27 @@ def _conv(x: jax.Array, c: ConvSpec, p: dict) -> jax.Array:
 
 
 def forward(cfg: CNNConfig, params: dict, x: jax.Array,
-            *, compute_dtype=jnp.bfloat16) -> jax.Array:
+            *, compute_dtype=jnp.bfloat16,
+            backend: str = "reference") -> jax.Array:
     """x: (B, H, W, C) -> logits (B, n_classes)."""
     x = x.astype(compute_dtype)
     for c, p in zip(cfg.convs, params["convs"]):
         x = _conv(x, c, p)
     x = x.reshape(x.shape[0], -1)
     for j, p in enumerate(params["fcs"]):
-        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        # FC layers dispatch through the PE seam (conv stays on lax.conv;
+        # its UP-as-matmul lowering is conv_up_as_matmul below / Fig 6)
+        x = pe_dot(x, p["w"], backend=backend) + p["b"].astype(x.dtype)
         if j < len(params["fcs"]) - 1:
             x = jax.nn.relu(x)
     return x.astype(jnp.float32)
 
 
 def loss_fn(cfg: CNNConfig, params: dict, batch: dict,
-            *, compute_dtype=jnp.bfloat16) -> jax.Array:
-    logits = forward(cfg, params, batch["images"], compute_dtype=compute_dtype)
+            *, compute_dtype=jnp.bfloat16,
+            backend: str = "reference") -> jax.Array:
+    logits = forward(cfg, params, batch["images"], compute_dtype=compute_dtype,
+                     backend=backend)
     labels = batch["labels"]
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
@@ -87,12 +93,16 @@ def loss_fn(cfg: CNNConfig, params: dict, batch: dict,
 
 
 def conv_up_as_matmul(x: jax.Array, dy: jax.Array, kernel: int,
-                      stride: int = 1, pad: str = "SAME") -> jax.Array:
+                      stride: int = 1, pad: str = "SAME", *,
+                      backend: str = "reference",
+                      interpret: bool | None = None) -> jax.Array:
     """The paper's Fig 6 lowering: conv weight-update dW = X * dY computed
     as im2col matmul ("similar to how cuDNN performs convolution").
 
     x: (B, H, W, Ci); dy: (B, Ho, Wo, Co) -> dW (k, k, Ci, Co).
     Used by benchmarks + validated against autodiff in tests.
+    backend='pallas' runs the per-tap outer products on the fused
+    ``outer_accum`` UP kernel (one PE program word per conv tap).
     """
     B, H, W, Ci = x.shape
     Ho, Wo, Co = dy.shape[1:]
@@ -110,6 +120,13 @@ def conv_up_as_matmul(x: jax.Array, dy: jax.Array, kernel: int,
     xm = jnp.stack(patches, axis=0)            # (k*k, B, Ho, Wo, Ci)
     xm = xm.reshape(kernel * kernel, -1, Ci)   # (k*k, B*Ho*Wo, Ci)
     dym = dy.reshape(-1, Co)                   # (B*Ho*Wo, Co)
-    dw = jnp.einsum("knc,no->kco", xm.astype(jnp.float32),
-                    dym.astype(jnp.float32))
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        dw = jax.vmap(lambda xp: kops.outer_accum(
+            xp.astype(jnp.float32), dym.astype(jnp.float32),
+            sr=False, interpret=interpret))(xm)
+    else:
+        from repro.kernels import ref as kref
+        dw = jax.vmap(lambda xp: kref.outer_accum_ref(
+            xp.astype(jnp.float32), dym.astype(jnp.float32)))(xm)
     return dw.reshape(kernel, kernel, Ci, Co)

@@ -138,8 +138,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
     x = apply_norm(cfg, x, params.get("final_norm"))
     if return_hidden:
         return x, jnp.zeros((), jnp.float32)
-    w = sh.weight(params["embed"]["table"], "embed")
-    logits = (x @ w.T.astype(x.dtype)).astype(jnp.float32)
+    logits = sh.dot("embed", x, params["embed"]["table"],
+                    transpose_w=True).astype(jnp.float32)
     return logits, jnp.zeros((), jnp.float32)
 
 
@@ -184,8 +184,8 @@ def precompute_cross_kv(cfg: ModelConfig, params: dict, enc_out: jax.Array,
     H, K, hd = a.n_heads, a.n_kv_heads, a.head_dim
 
     def one(g):
-        w = sh.weight(g["cross"]["qkv"], "cross_qkv").astype(enc_out.dtype)
-        kv = enc_out @ w[:, H * hd:]
+        w = sh.weight(g["cross"]["qkv"], "cross_qkv")
+        kv = sh.dot("cross_qkv", enc_out, w[:, H * hd:], constrain=False)
         k, v = jnp.split(kv, 2, axis=-1)
         B, Se = enc_out.shape[:2]
         return (k.reshape(B, Se, K, hd).astype(jnp.bfloat16),
@@ -211,22 +211,21 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
         g, sc, ck, cv = scanned
         B = x.shape[0]
         h = apply_norm(cfg, x, g.get("norm1"))
-        w_qkv = sh.weight(g["attn"]["qkv"], "attn_qkv").astype(h.dtype)
-        q, k, v = split_qkv(a, h @ w_qkv, g["attn"].get("qkv_bias"))
+        qkv = sh.dot("attn_qkv", h, g["attn"]["qkv"])
+        q, k, v = split_qkv(a, qkv, g["attn"].get("qkv_bias"))
         c = update_cache(sc, k[:, 0], v[:, 0], pos)
         out = decode_attend(q[:, 0], c["k"], c["v"], c["pos"], pos)
-        x = x + out.reshape(B, 1, -1) @ sh.weight(
-            g["attn"]["o"], "attn_o").astype(x.dtype)
+        x = x + sh.dot("attn_o", out.reshape(B, 1, -1), g["attn"]["o"])
         # cross attention against the precomputed encoder K/V
         h = apply_norm(cfg, x, g.get("norm_cross"))
-        wq = sh.weight(g["cross"]["qkv"], "cross_qkv").astype(h.dtype)
+        wq = sh.weight(g["cross"]["qkv"], "cross_qkv")
         H, K, hd = a.n_heads, a.n_kv_heads, a.head_dim
-        qc = (h @ wq[:, :H * hd]).reshape(B, K, H // K, hd)
+        qc = sh.dot("cross_qkv", h, wq[:, :H * hd],
+                    constrain=False).reshape(B, K, H // K, hd)
         kv_pos = jnp.broadcast_to(enc_pos[None], (B, cfg.enc_seq))
         big = jnp.full((B,), cfg.enc_seq + 1, jnp.int32)
         out = decode_attend(qc, ck, cv, kv_pos, big)
-        x = x + out.reshape(B, 1, -1) @ sh.weight(
-            g["cross"]["o"], "cross_o").astype(x.dtype)
+        x = x + sh.dot("cross_o", out.reshape(B, 1, -1), g["cross"]["o"])
         h = apply_norm(cfg, x, g.get("norm2"))
         x = x + mlp(cfg, h, g["ffn"]["ffn_in"], g["ffn"]["ffn_out"], sh)
         return x, c
@@ -235,6 +234,6 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
         step, x, (params["dec_groups"], cache["self"],
                   cache["cross"]["k"], cache["cross"]["v"]))
     x = apply_norm(cfg, x, params.get("final_norm"))
-    w = sh.weight(params["embed"]["table"], "embed")
-    logits = (x @ w.T.astype(x.dtype)).astype(jnp.float32)
+    logits = sh.dot("embed", x, params["embed"]["table"],
+                    transpose_w=True).astype(jnp.float32)
     return logits, {"self": new_self, "cross": cache["cross"]}

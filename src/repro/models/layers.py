@@ -1,129 +1,22 @@
 """Shared layer primitives (pure functional JAX).
 
 Every model in the zoo is a pytree of arrays + an apply function.  A
-``Sharder`` threads the compiled dataflow program (core/program.py) through
-the forward pass: it applies ``with_sharding_constraint`` at the points the
-paper would re-program the PMAG (activation re-layout between flows), and
-is a no-op when no mesh is active (CPU smoke tests).
+``PEContext`` (historically ``Sharder`` — re-exported here) threads the
+compiled dataflow program (core/program.py) through the forward pass: it
+applies ``with_sharding_constraint`` at the points the paper would
+re-program the PMAG, and dispatches every weight-bearing matmul through
+the PE engine seam ``sh.dot`` (repro/engine/).  With mesh=None and the
+reference backend the whole stack is plain jnp (CPU smoke tests).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-
-
-# ---------------------------------------------------------------------------
-# Sharding helper
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class Sharder:
-    """Applies the dataflow program's activation/weight layouts.
-
-    mesh=None (smoke tests) makes every constraint the identity, so the same
-    model code runs single-device and multi-pod.
-    """
-    mesh: Optional[object] = None        # jax.sharding.Mesh
-    program: Optional[object] = None     # core.program.Program
-
-    def act(self, x: jax.Array, *spec) -> jax.Array:
-        if self.mesh is None:
-            return x
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(self.mesh, P(*spec)))
-
-    def residual(self, x: jax.Array) -> jax.Array:
-        """(B, S, D) residual-stream layout between blocks."""
-        if self.mesh is None or self.program is None:
-            return x
-        plan = self.program.plan
-        return self.act(x, plan.batch_spec or None, plan.seq_spec, None)
-
-    def weight(self, w: jax.Array, op_name: str, *, stacked: bool = False) -> jax.Array:
-        """Constrain a weight to its *compute* layout (GATHER ops broadcast
-        here — the paper's just-in-time common-vault read), and program the
-        layout of its GRADIENT: the per-layer dW cotangent is cast to bf16
-        and constrained to the storage sharding INSIDE the backward scan.
-        Without this GSPMD emits the per-layer dW DP-sync as an f32
-        all-reduce-to-replicated (measured 1.14 TB/device/step on
-        deepseek-33b — EXPERIMENTS.md §Perf D2/D3)."""
-        if self.mesh is None or self.program is None:
-            return w
-        storage = self.program.weight_spec(op_name, stacked=stacked)
-        if storage is not None and jnp.issubdtype(w.dtype, jnp.floating):
-            w = _grad_layout(w, NamedSharding(self.mesh, storage))
-        spec = self.program.compute_spec(op_name, stacked=stacked)
-        if spec is None:
-            return w
-        return jax.lax.with_sharding_constraint(w, NamedSharding(self.mesh, spec))
-
-    @property
-    def batch_spec(self):
-        if self.program is None:
-            return None
-        return self.program.plan.batch_spec or None
-
-    @property
-    def seq_axis(self):
-        if self.program is None:
-            return None
-        return self.program.plan.seq_spec
-
-    @property
-    def n_chips(self) -> int:
-        if self.program is None:
-            return 1
-        return self.program.mesh_spec.n_devices
-
-    def heads(self, x: jax.Array) -> jax.Array:
-        """(B, S, H, hd) head-sharded over `model` (GSPMD pads when H % tp).
-
-        This is the Megatron attention layout: annotated explicitly so
-        sharding propagation never re-shards per flash-chunk (observed:
-        an involuntary 0.7 GB all-to-all PER kv-chunk without this)."""
-        if self.mesh is None or self.program is None:
-            return x
-        return self.act(x, self.batch_spec, None, "model", None)
-
-    def features(self, x: jax.Array) -> jax.Array:
-        """(B, S, F) with F sharded over `model` (mamba/rwkv inner dims)."""
-        if self.mesh is None or self.program is None:
-            return x
-        return self.act(x, self.batch_spec, None, "model")
-
-
-def _grad_layout(w: jax.Array, sharding) -> jax.Array:
-    """Identity whose transpose programs the cotangent's dtype + layout.
-
-    The paper programs the PMAG separately for FF and BP/UP; this is the
-    same move for autodiff: the forward value is untouched, the backward
-    value (dW) is emitted bf16 and shard-constrained at its creation site,
-    so the compiler reduces it sharded instead of replicated-f32."""
-
-    dtype = w.dtype     # cotangent dtype must match the primal: fp32
-                        # presets keep f32 grads (faithful reference path)
-
-    @jax.custom_vjp
-    def ident(x):
-        return x
-
-    def fwd(x):
-        return x, None
-
-    def bwd(_, g):
-        g = g.astype(dtype)
-        g = jax.lax.with_sharding_constraint(g, sharding)
-        return (g,)
-
-    ident.defvjp(fwd, bwd)
-    return ident(w)
+from repro.engine.context import PEContext, Sharder, _grad_layout  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -196,16 +89,14 @@ def mlp(cfg: ModelConfig, x: jax.Array, w_in: jax.Array, w_out: jax.Array,
 
     w_in: (d, 2f) for swiglu/geglu else (d, f);  w_out: (f, d).
     """
-    w_in = sh.weight(w_in, f"{prefix}ffn_in").astype(x.dtype)
-    w_out = sh.weight(w_out, f"{prefix}ffn_out").astype(x.dtype)
-    h = x @ w_in
+    h = sh.dot(f"{prefix}ffn_in", x, w_in)
     if cfg.act in ("swiglu", "geglu"):
         g, u = jnp.split(h, 2, axis=-1)
         gate = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
         h = gate * u
     else:
         h = act_fn(cfg.act, h)
-    return h @ w_out
+    return sh.dot(f"{prefix}ffn_out", h, w_out)
 
 
 def mlp_params(cfg: ModelConfig, key, hidden: Optional[int] = None) -> dict:
@@ -252,10 +143,9 @@ def embed(tokens: jax.Array, table: jax.Array, sh: Sharder) -> jax.Array:
 
 def lm_logits(x: jax.Array, cfg: ModelConfig, params: dict, sh: Sharder) -> jax.Array:
     if cfg.tie_embeddings:
-        w = sh.weight(params["embed"]["table"], "embed")
-        return (x @ w.T.astype(x.dtype)).astype(jnp.float32)
-    w = sh.weight(params["lm_head"], "lm_head")
-    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+        y = sh.dot("embed", x, params["embed"]["table"], transpose_w=True)
+        return y.astype(jnp.float32)
+    return sh.dot("lm_head", x, params["lm_head"]).astype(jnp.float32)
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -283,16 +173,16 @@ def lm_loss_chunked(cfg: ModelConfig, x: jax.Array, params: dict,
         n_chunks = max(1, min(B, round(total / (sh.n_chips * 128e6))))
         while B % n_chunks:
             n_chunks -= 1
-    if cfg.tie_embeddings:
-        w = sh.weight(params["embed"]["table"], "embed").T
-    else:
-        w = sh.weight(params["lm_head"], "lm_head")
+    tied = cfg.tie_embeddings
+    head_op = "embed" if tied else "lm_head"
+    w = sh.weight(params["embed"]["table"] if tied else params["lm_head"],
+                  head_op)
 
     def piece(xc, lc):
         # keep the logits (and therefore their cotangent — the per-chunk dx
         # psum over `model`) in bf16; only the reductions run in f32.
         # Halves the dominant all-reduce bytes (§Perf D1).
-        logits = xc @ w.astype(xc.dtype)
+        logits = sh.dot(head_op, xc, w, constrain=False, transpose_w=tied)
         lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
         gold = jnp.take_along_axis(logits, lc[..., None],
                                    axis=-1)[..., 0].astype(jnp.float32)

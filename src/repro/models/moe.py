@@ -32,9 +32,19 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.program import PEWord
+from repro.engine import pe_dot
 from repro.models.layers import Sharder
 
 CAPACITY_FACTOR = 1.25
+
+# Routing is VPU math (role 'state'): an explicit vpu word so the seam can
+# NEVER dispatch the router onto the bf16 MAC kernels, whatever backend a
+# future caller threads through — expert selection must be identical
+# across backends.
+_ROUTER_WORD = PEWord(op="moe_router", ff_dtype="float32",
+                      bp_dtype="float32", update_rounding="nearest",
+                      ff_kernel="vpu", bp_kernel="vpu", up_kernel="vpu")
 
 
 def moe_params(cfg: ModelConfig, key) -> dict:
@@ -59,7 +69,8 @@ def _capacity(tokens: int, top_k: int, n_experts: int) -> int:
 
 def _route(x: jax.Array, router_w: jax.Array, top_k: int):
     """x: (T, d).  Returns (probs (T,k), experts (T,k), aux_loss)."""
-    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    logits = pe_dot(x.astype(jnp.float32), router_w.astype(jnp.float32),
+                    word=_ROUTER_WORD)
     probs = jax.nn.softmax(logits, axis=-1)           # (T, E)
     topv, topi = jax.lax.top_k(probs, top_k)
     topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
@@ -93,34 +104,43 @@ def _dispatch_indices(experts: jax.Array, n_experts: int, capacity: int):
 
 def _expert_ffn(cfg: ModelConfig, xb: jax.Array, params: dict, sh: Sharder,
                 *, local: bool) -> jax.Array:
-    """xb: (E_loc, C', d) -> (E_loc, C', d).  TP over `model` when sharded."""
-    w_in = params["experts_in"]
-    w_out = params["experts_out"]
-    if not local:
-        w_in = sh.weight(w_in, "moe_experts_in")
-        w_out = sh.weight(w_out, "moe_experts_out")
-    h = jnp.einsum("ecd,edf->ecf", xb, w_in.astype(xb.dtype))
+    """xb: (E_loc, C', d) -> (E_loc, C', d).  TP over `model` when sharded.
+
+    local=True skips layout constraints (shard_map already sliced the
+    tables / single-shard path); the per-expert matmuls still dispatch
+    through the engine seam (one PE program word per expert)."""
+    h = sh.dot("moe_experts_in", xb, params["experts_in"],
+               constrain=not local)
     if cfg.act in ("swiglu", "geglu"):
-        w_g = params["experts_gate"]
-        if not local:
-            w_g = sh.weight(w_g, "moe_experts_gate")
-        g = jnp.einsum("ecd,edf->ecf", xb, w_g.astype(xb.dtype))
+        g = sh.dot("moe_experts_gate", xb, params["experts_gate"],
+                   constrain=not local)
         h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
     else:
         r = jax.nn.relu(h)
         h = r * r if cfg.act == "relu_sq" else jax.nn.gelu(h)
-    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(xb.dtype))
+    return sh.dot("moe_experts_out", h, params["experts_out"],
+                  constrain=not local)
 
 
 def _moe_single(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder):
-    """Single-shard MoE (smoke tests / mesh=None): same dispatch math."""
+    """Single-shard MoE (smoke tests / mesh=None): same dispatch math, but
+    DROPLESS (capacity = T).  Capacity dropping is a throughput concession
+    of the sharded a2a path; here it would make prefill (all tokens routed
+    at once, over-capacity tokens dropped) disagree with token-by-token
+    decode (T=1, never dropped) — the serving-consistency bug of
+    test_system.py::test_serving_cache_consistency."""
     m = cfg.moe
     assert m is not None
     B, S, d = x.shape
     T = B * S
     xf = x.reshape(T, d)
     topv, topi, aux = _route(xf, params["router"], m.top_k)
-    C = _capacity(T, m.top_k, m.n_experts)
+    # dropless needs C = T (one expert can take every token); bound the
+    # (E*C, d) buffer for long single-shard prefills by falling back to
+    # the sharded path's capacity factor — bounded memory beats exact
+    # prefill/decode consistency at that scale
+    C = (max(8, -(-T // 8) * 8) if T <= 4096
+         else _capacity(T, m.top_k, m.n_experts))
     slot, keep = _dispatch_indices(topi.reshape(-1), m.n_experts, C)
     tok = jnp.repeat(jnp.arange(T), m.top_k)
     buf = jnp.zeros((m.n_experts * C + 1, d), xf.dtype)     # +1 trash row

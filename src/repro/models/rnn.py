@@ -13,8 +13,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_nets import GRUConfig, MLPConfig
+from repro.core.program import PEWord
+from repro.engine import pe_dot
 
 QuantFn = Optional[Callable[[jax.Array], jax.Array]]
+
+# f32 operands: the paper's fixed-point MAC datapath is injected by the
+# `quant` hook, not by the bf16 ladder — the PE word must not down-cast.
+_GRU_WORD = PEWord(op="gru", ff_dtype="float32", bp_dtype="float32")
 
 
 def gru_init(key, cfg: GRUConfig) -> dict:
@@ -29,7 +35,8 @@ def gru_init(key, cfg: GRUConfig) -> dict:
 
 
 def gru_forward(cfg: GRUConfig, params: dict, x: jax.Array,
-                quant: QuantFn = None, h0: Optional[jax.Array] = None):
+                quant: QuantFn = None, h0: Optional[jax.Array] = None,
+                *, backend: str = "reference"):
     """x: (B, T, n_input) -> (outputs (B, T, n_output), final h)."""
     B = x.shape[0]
     q = (lambda a: a) if quant is None else quant
@@ -38,13 +45,15 @@ def gru_forward(cfg: GRUConfig, params: dict, x: jax.Array,
     h = jnp.zeros((B, nh), jnp.float32) if h0 is None else h0
 
     def step(h, xt):
-        gx = q(xt @ wx)
-        gh = q(h @ wh)
+        # weight matmuls route through the PE seam; the `quant` hook then
+        # injects the paper's fixed-point MAC datapath on the results
+        gx = q(pe_dot(xt, wx, word=_GRU_WORD, backend=backend))
+        gh = q(pe_dot(h, wh, word=_GRU_WORD, backend=backend))
         r = jax.nn.sigmoid(gx[:, :nh] + gh[:, :nh] + b[:nh])
         z = jax.nn.sigmoid(gx[:, nh:2*nh] + gh[:, nh:2*nh] + b[nh:2*nh])
         n = jnp.tanh(gx[:, 2*nh:] + r * gh[:, 2*nh:] + b[2*nh:])
         h = q((1 - z) * n + z * h)
-        y = q(h @ wo)
+        y = q(pe_dot(h, wo, word=_GRU_WORD, backend=backend))
         return h, y
 
     h, ys = jax.lax.scan(step, h, x.transpose(1, 0, 2))
@@ -52,9 +61,9 @@ def gru_forward(cfg: GRUConfig, params: dict, x: jax.Array,
 
 
 def gru_loss(cfg: GRUConfig, params: dict, batch: dict,
-             quant: QuantFn = None) -> jax.Array:
+             quant: QuantFn = None, *, backend: str = "reference") -> jax.Array:
     """Regression loss (the paper's Fig 10 trains an RNN to MSE)."""
-    y, _ = gru_forward(cfg, params, batch["x"], quant)
+    y, _ = gru_forward(cfg, params, batch["x"], quant, backend=backend)
     return jnp.mean((y - batch["y"]) ** 2)
 
 
@@ -74,10 +83,11 @@ def mlp_init(key, cfg: MLPConfig, n_in: int = 2560, n_out: int = 256) -> dict:
 
 
 def mlp_forward(cfg: MLPConfig, params: dict, x: jax.Array,
-                *, compute_dtype=jnp.bfloat16) -> jax.Array:
+                *, compute_dtype=jnp.bfloat16,
+                backend: str = "reference") -> jax.Array:
     x = x.astype(compute_dtype)
     for i, p in enumerate(params["layers"]):
-        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        x = pe_dot(x, p["w"], backend=backend) + p["b"].astype(x.dtype)
         if i < len(params["layers"]) - 1:
             x = jax.nn.relu(x)
     return x.astype(jnp.float32)

@@ -119,14 +119,16 @@ def rwkv_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder,
     mix = params["mix"].astype(x.dtype)
     xr, xk, xv, xg, xw = (x + (xs - x) * mix[i] for i in range(5))
 
-    w_rkvg = sh.weight(params["rkvg"], "rwkv_rkvg").astype(x.dtype)
-    w_decay = sh.weight(params["decay"], "rwkv_decay").astype(x.dtype)
-    r = xr @ w_rkvg[:, :d]
-    k = xk @ w_rkvg[:, d:2 * d]
-    v = xv @ w_rkvg[:, 2 * d:3 * d]
-    g = xg @ w_rkvg[:, 3 * d:]
+    # fused r,k,v,g table constrained once; each quarter runs through the
+    # seam under the shared rwkv_rkvg program word
+    w_rkvg = sh.weight(params["rkvg"], "rwkv_rkvg")
+    r = sh.dot("rwkv_rkvg", xr, w_rkvg[:, :d], constrain=False)
+    k = sh.dot("rwkv_rkvg", xk, w_rkvg[:, d:2 * d], constrain=False)
+    v = sh.dot("rwkv_rkvg", xv, w_rkvg[:, 2 * d:3 * d], constrain=False)
+    g = sh.dot("rwkv_rkvg", xg, w_rkvg[:, 3 * d:], constrain=False)
     # data-dependent decay (Finch): w_t in (0, 1)
-    wlog = params["w0"].astype(jnp.float32) + (xw @ w_decay).astype(jnp.float32)
+    wlog = params["w0"].astype(jnp.float32) \
+        + sh.dot("rwkv_decay", xw, params["decay"]).astype(jnp.float32)
     w = jnp.exp(-jnp.exp(wlog))
 
     shp = (B, S, H, hd)
@@ -136,8 +138,7 @@ def rwkv_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder,
         params["u"].astype(jnp.float32),
         state["wkv"] if state is not None else None)
     out = out.astype(x.dtype).reshape(B, S, d) * jax.nn.silu(g)
-    w_o = sh.weight(params["o"], "rwkv_o").astype(x.dtype)
-    out = out @ w_o
+    out = sh.dot("rwkv_o", out, params["o"])
     if state is None:
         return out, None
     return out, {"wkv": new_wkv, "shift": x[:, -1]}
@@ -223,26 +224,22 @@ def mamba_block(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder,
     s = cfg.ssm
     assert s is not None
     dt_rank = s.dt_rank or -(-cfg.d_model // 16)
-    w_in = sh.weight(params["in"], "mamba_in").astype(x.dtype)
-    xz = x @ w_in
+    xz = sh.dot("mamba_in", x, params["in"])
     xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di)
     xi, z = sh.features(xi), sh.features(z)
     conv_state = state["conv"] if state is not None else None
     xc = _causal_conv(xi, params["conv"], conv_state)
     xc = sh.features(jax.nn.silu(xc))
-    w_xp = sh.weight(params["xproj"], "mamba_xproj").astype(x.dtype)
-    proj = xc @ w_xp
+    proj = sh.dot("mamba_xproj", xc, params["xproj"])
     dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
-    w_dt = sh.weight(params["dt"], "mamba_dt").astype(x.dtype)
-    dt = jax.nn.softplus((dt @ w_dt).astype(jnp.float32)
+    dt = jax.nn.softplus(sh.dot("mamba_dt", dt, params["dt"]).astype(jnp.float32)
                          + params["dt_bias"][None, None])
     A = -jnp.exp(params["A_log"])
     y, h = selective_scan(xc, dt, A, Bm.astype(jnp.float32),
                           Cm.astype(jnp.float32), params["D"],
                           state["ssm"] if state is not None else None)
     y = y.astype(x.dtype) * jax.nn.silu(z)
-    w_out = sh.weight(params["out"], "mamba_out").astype(x.dtype)
-    out = y @ w_out
+    out = sh.dot("mamba_out", y, params["out"])
     if state is None:
         return out, None
     K = s.d_conv

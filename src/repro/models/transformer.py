@@ -179,7 +179,7 @@ def _unit_forward(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
         mix = attention_block(cfg, h, uparams["attn"], sh, positions=positions)
         if collect_cache:
             a = cfg.attention
-            qkv = h @ sh.weight(uparams["attn"]["qkv"], "attn_qkv").astype(h.dtype)
+            qkv = sh.dot("attn_qkv", h, uparams["attn"]["qkv"])
             _, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
             k = apply_rope(k, positions, a.rope_theta)
             size = min(h.shape[1], a.window) if a.window else h.shape[1]
@@ -227,7 +227,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
     x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
     if cfg.frontend == "vision_stub":
         assert vision_embeds is not None
-        v = vision_embeds.astype(compute_dtype) @ params["vlm_proj"].astype(compute_dtype)
+        v = sh.dot("vlm_proj", vision_embeds.astype(compute_dtype),
+                   params["vlm_proj"])
         x = jnp.concatenate([v, x], axis=1)
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -306,8 +307,7 @@ def _unit_decode(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
     new_cache = dict(cache)
     if unit.mixer == "attn":
         a = cfg.attention
-        w_qkv = sh.weight(uparams["attn"]["qkv"], "attn_qkv").astype(h.dtype)
-        qkv = h @ w_qkv
+        qkv = sh.dot("attn_qkv", h, uparams["attn"]["qkv"])
         q, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
         posb = pos[:, None]
         B = h.shape[0]
@@ -319,7 +319,7 @@ def _unit_decode(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
         out = decode_attend(q[:, 0], c["k"], c["v"], c["pos"], pos,
                             window=a.window)
         out = out.reshape(B, 1, -1)
-        mix = out @ sh.weight(uparams["attn"]["o"], "attn_o").astype(out.dtype)
+        mix = sh.dot("attn_o", out, uparams["attn"]["o"])
         new_cache["attn"] = c
     elif unit.mixer == "rwkv6":
         mix, st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh, cache["rwkv"])

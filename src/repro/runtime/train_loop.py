@@ -3,7 +3,10 @@
 ``make_train_step`` assembles the paper's three phases into one jitted fn:
   FF+BP — autodiff of the model loss at the policy's compute dtypes,
   UP    — optimizer with SR writeback of persistent state,
-with microbatch gradient accumulation (f32) and per-block remat.
+with microbatch gradient accumulation (f32) and per-block remat.  The
+model forward runs under a ``PEContext`` carrying
+``train_cfg.kernel_backend``: 'reference' (plain jnp) or 'pallas' (the
+PE kernels executing the iBuffer program — see repro/engine/).
 
 ``state_shardings`` emits the full TrainState layout: parameter specs come
 from the compiled dataflow program; optimizer moments additionally shard
@@ -21,9 +24,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core.program import Program
+from repro.engine import PEContext
 from repro.models import encdec
 from repro.models import transformer as tfm
-from repro.models.layers import Sharder
 from repro.optim import make_optimizer
 
 
@@ -116,7 +119,8 @@ def make_train_step(cfg: ModelConfig, program: Program,
                     train_cfg: TrainConfig, mesh=None):
     policy = program.policy
     opt = make_optimizer(train_cfg, policy)
-    sh = Sharder(mesh, program)
+    backend = train_cfg.kernel_backend
+    sh = PEContext(mesh, program, backend=backend)
     mm = model_module(cfg)
 
     # ZeRO-1: constrain gradients to the optimizer-state sharding before the
@@ -131,12 +135,18 @@ def make_train_step(cfg: ModelConfig, program: Program,
             lambda sp, s: NamedSharding(mesh, zero1_spec(sp, s.shape, mesh)),
             pspecs, shapes)
 
-    def loss(params, batch):
-        return mm.loss_fn(cfg, params, batch, sh,
-                          compute_dtype=policy.ff_dtype,
-                          remat=train_cfg.remat)
-
     def train_step(state: dict, batch: dict, key: jax.Array):
+        # thread the step's SR-entropy key into the engine (UP-phase dW
+        # writeback); the reference backend never consumes it, so the
+        # fold is dead code there and the trace is unchanged.
+        sh_step = sh.with_key(jax.random.fold_in(key, 1)) \
+            if backend != "reference" else sh
+
+        def loss(params, batch):
+            return mm.loss_fn(cfg, params, batch, sh_step,
+                              compute_dtype=policy.ff_dtype,
+                              remat=train_cfg.remat)
+
         params = state["params"]
         nm = train_cfg.microbatch
         if nm and nm > 1:
@@ -211,9 +221,10 @@ def state_shapes(cfg: ModelConfig, program: Program, train_cfg: TrainConfig) -> 
 # ---------------------------------------------------------------------------
 
 
-def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None):
+def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None,
+                      kernel_backend: str = "reference"):
     policy = program.policy
-    sh = Sharder(mesh, program)
+    sh = PEContext(mesh, program, backend=kernel_backend)
 
     def prefill(params, batch):
         if cfg.family == "audio":
@@ -223,9 +234,9 @@ def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None):
                                        batch["audio_embeds"], sh,
                                        compute_dtype=policy.ff_dtype,
                                        return_hidden=True)
-            w = sh.weight(params["embed"]["table"], "embed")
-            logits = (hidden[:, -1:] @ w.T.astype(hidden.dtype)
-                      ).astype(jnp.float32)
+            logits = sh.dot("embed", hidden[:, -1:],
+                            params["embed"]["table"],
+                            transpose_w=True).astype(jnp.float32)
             cross = encdec.precompute_cross_kv(cfg, params, enc_out, sh)
             return logits, cross
         hidden, aux, caches = tfm.forward(
@@ -239,9 +250,10 @@ def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None):
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig, program: Program, mesh=None):
+def make_decode_step(cfg: ModelConfig, program: Program, mesh=None,
+                     kernel_backend: str = "reference"):
     policy = program.policy
-    sh = Sharder(mesh, program)
+    sh = PEContext(mesh, program, backend=kernel_backend)
 
     def decode(params, cache, tokens, pos):
         if cfg.family == "audio":

@@ -2,6 +2,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="requirements-dev.txt not installed")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -51,6 +51,19 @@ def test_sr_matmul_sr_path(mnk):
                                np.asarray(yr, np.float32), rtol=1.2e-2)
 
 
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (128, 192, 256)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_sr_matmul_trans_b(mnk, dtype):
+    """a @ b.T through the counter-swept B BlockSpec (BP's free W^T)."""
+    m, n, k = mnk
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (n, k), dtype)
+    y = k_mm(a, b, None, block=(64, 64, 64), interpret=True, trans_b=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.sr_matmul_ref(a, b, trans_b=True)),
+                               rtol=5e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("tdf", [(512, 96, 128), (256, 64, 64), (1024, 32, 96)])
 @pytest.mark.parametrize("scale", [1.0, 1.0 / 32])
 def test_outer_accum(tdf, scale):

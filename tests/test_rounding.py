@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="requirements-dev.txt not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.rounding import (FX32, FX32_SR, FX32_SR_LO, fixed_quantize,
