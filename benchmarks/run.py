@@ -14,11 +14,13 @@ def main() -> None:
     ap.add_argument("--only", default="all")
     args = ap.parse_args()
     from benchmarks import (fig10_precision, fig13_alexnet, fig16_suite,
-                            fig17_scaling, table1_mac, table6_efficiency)
+                            fig17_scaling, serve_throughput, table1_mac,
+                            table6_efficiency)
     suites = {
         "table1": table1_mac, "fig10": fig10_precision,
         "fig13": fig13_alexnet, "fig16": fig16_suite,
         "table6": table6_efficiency, "fig17": fig17_scaling,
+        "serve": serve_throughput,
     }
     chosen = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}
@@ -29,7 +31,10 @@ def main() -> None:
             mod.run()
         except Exception as e:  # keep the harness honest but resilient
             failures.append((name, repr(e)))
-            print(f"{name}/ERROR,0.0,{type(e).__name__}", flush=True)
+            # comment line, NOT a CSV row: a `name/ERROR,0.0` row parses as
+            # a zero-latency measurement and poisons downstream CSV
+            # consumers; the nonzero exit below is the failure signal
+            print(f"# ERROR {name}: {type(e).__name__}", flush=True)
     if failures:
         for n, e in failures:
             print(f"# FAILED {n}: {e}", file=sys.stderr)

@@ -1,0 +1,73 @@
+"""Serving throughput benchmark: mixed Poisson trace through the engine.
+
+Reports aggregate tokens/s (generated and total) plus p50/p99 per-token
+(inter-token) latency for a mixed trace — by default ≥32 concurrent
+requests with prompt lengths 16–512 and chunked prefill interleaved into
+the decode batch (the ISSUE-2 acceptance trace, on the reduced config).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
+
+``--smoke`` is the CI variant: tiny trace, seconds on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import row
+from repro.configs import get_reduced
+from repro.serving import build_engine, latency_stats, poisson_trace
+
+
+def bench(arch: str, *, requests: int, prompt_lens: tuple, gen: int,
+          slots: int, chunk: int, seed: int = 0, tag: str = "") -> str:
+    cfg = get_reduced(arch)
+    max_len = prompt_lens[1] + gen
+    engine = build_engine(cfg, n_slots=slots, max_len=max_len,
+                          prefill_chunk=chunk, seed=seed)
+    trace = poisson_trace(requests, vocab_size=cfg.vocab_size,
+                          prompt_lens=prompt_lens, gen_tokens=gen,
+                          mean_interarrival_steps=1.0, seed=seed)
+    t0 = time.monotonic()
+    engine.run(trace)
+    wall = time.monotonic() - t0
+    stats = latency_stats(engine.events)
+    n_prompt = sum(len(r.prompt) for r in trace)
+    total = n_prompt + stats["tokens"]
+    us_per_tok = wall / max(1, stats["tokens"]) * 1e6
+    # the tag keeps smoke rows distinguishable from the full trace in the
+    # merged CSV (same arch, incomparable workloads)
+    return row(
+        f"serve_throughput/{arch}{tag}", us_per_tok,
+        f"gen_tok_s={stats['tokens']/wall:.1f} total_tok_s={total/wall:.1f} "
+        f"p50_ms={stats['p50_ms']:.2f} p99_ms={stats['p99_ms']:.2f} "
+        f"steps={engine.step_count} requests={requests} slots={slots} "
+        f"chunk={chunk}")
+
+
+def run(smoke: bool = True) -> None:
+    """Harness entry (benchmarks.run): the smoke-sized trace — the full
+    acceptance trace (32+ slots, prompts 16-512) is minutes on CPU, so the
+    figure/table harness carries the smoke row only; run this module
+    directly (no --smoke) for the full numbers."""
+    if smoke:
+        bench("qwen2-0.5b", requests=8, prompt_lens=(8, 48), gen=8,
+              slots=4, chunk=8, tag="/smoke")
+    else:
+        bench("qwen2-0.5b", requests=48, prompt_lens=(16, 512), gen=32,
+              slots=32, chunk=32)
+        bench("jamba-v0.1-52b", requests=16, prompt_lens=(16, 128), gen=16,
+              slots=8, chunk=16)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (seconds on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,71 +1,50 @@
-"""Batched serving: continuous-batching-style loop over the decode step.
+"""Continuous batching demo: a Poisson request trace through the engine.
 
-Requests arrive with different prompt lengths; the server packs them into
-one batch with per-row positions (the decode step already takes per-row
-`pos`), runs prefill via teacher forcing, then decodes all rows together.
+Requests arrive over time with ragged prompt lengths; the engine leases
+each one a cache-arena slot, chunk-prefills long prompts interleaved
+with the running decode batch (nobody stalls), and retires/reuses slots
+as requests finish.  Compare with ``--single-shot`` in
+``repro.launch.serve`` — same math, very different scheduling.
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_reduced
-from repro.configs.base import ShapeConfig
-from repro.core import compile_program
-from repro.launch.mesh import mesh_spec_for, make_host_mesh
-from repro.models import transformer as tfm
-from repro.runtime import train_loop as tl
+from repro.serving import build_engine, latency_stats, poisson_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
-    requests = {           # request id -> prompt length (ragged batch)
-        "req-a": 5, "req-b": 11, "req-c": 3, "req-d": 8,
-    }
-    B = len(requests)
-    max_len = max(requests.values()) + args.gen
-    shape = ShapeConfig("serve", seq_len=max_len, global_batch=B, kind="decode")
-    program = compile_program(cfg, shape, mesh_spec_for(make_host_mesh()))
-    decode = jax.jit(tl.make_decode_step(cfg, program, mesh=None),
-                     donate_argnums=(1,))
-
-    key = jax.random.PRNGKey(0)
-    params = tl.cast_params(tfm.init(key, cfg), jnp.bfloat16)
-    cache = tfm.init_cache(cfg, B, max_len)
-
-    # ragged prefill: rows advance independently; finished-prefill rows
-    # already start generating (continuous batching in miniature)
-    lens = jnp.array(list(requests.values()), jnp.int32)
-    prompts = jax.random.randint(key, (B, int(lens.max())), 0, cfg.vocab_size)
-    pos = jnp.zeros((B,), jnp.int32)
-    tok = prompts[:, :1]
+    lo, hi = 3, 40
+    max_len = hi + args.gen
+    engine = build_engine(cfg, n_slots=args.slots, max_len=max_len,
+                          prefill_chunk=args.chunk)
+    trace = poisson_trace(args.requests, vocab_size=cfg.vocab_size,
+                          prompt_lens=(lo, hi), gen_tokens=args.gen,
+                          mean_interarrival_steps=1.5, seed=0)
     t0 = time.monotonic()
-    outputs = {rid: [] for rid in requests}
-    for step in range(int(lens.max()) + args.gen):
-        logits, cache = decode(params, cache, tok, pos)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        in_prompt = (pos + 1) < lens
-        forced = jnp.take_along_axis(
-            prompts, jnp.minimum(pos + 1, lens - 1)[:, None], axis=1)
-        tok = jnp.where(in_prompt[:, None], forced, nxt)
-        for i, rid in enumerate(requests):
-            if not bool(in_prompt[i]) and len(outputs[rid]) < args.gen:
-                outputs[rid].append(int(tok[i, 0]))
-        pos = pos + 1
+    results = engine.run(trace)
     dt = time.monotonic() - t0
-    for rid, toks in outputs.items():
-        print(f"{rid} (prompt {requests[rid]:2d}): {toks}")
-    total = sum(len(v) for v in outputs.values())
-    print(f"{total} tokens in {dt*1e3:.0f}ms "
-          f"({total/dt:.1f} tok/s aggregate, batch={B})")
+
+    for r in trace:
+        print(f"{r.rid} (arrive step {r.arrival_step:3d}, "
+              f"prompt {len(r.prompt):3d}): {results[r.rid]}")
+    stats = latency_stats(engine.events)
+    print(f"{stats['tokens']} tokens in {dt*1e3:.0f}ms over "
+          f"{engine.step_count} engine steps "
+          f"({stats['tokens']/dt:.1f} tok/s aggregate, "
+          f"slots={args.slots}, chunk={args.chunk}); "
+          f"per-token p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Core: the paper's contribution — programmable dataflow + SR precision."""
 from repro.core.dataflow import (DataflowPlan, MeshSpec, OpPlan, OpSpec,
                                  Strategy, plan_model, plan_op)
-from repro.core.phases import Phase, TRAINING_PHASES
+from repro.core.phases import Phase, SERVING_PHASES, TRAINING_PHASES
 from repro.core.pmag import LoopDim, LoopNest, matmul_nest
 from repro.core.precision import PRESETS, PrecisionPolicy, get_policy
 from repro.core.program import PEWord, Program, compile_program, extract_ops
@@ -12,7 +12,8 @@ from repro.core.rounding import (FX16, FX32, FX32_SR, FX32_SR_LO,
 
 __all__ = [
     "DataflowPlan", "MeshSpec", "OpPlan", "OpSpec", "Strategy", "plan_model",
-    "plan_op", "Phase", "TRAINING_PHASES", "LoopDim", "LoopNest",
+    "plan_op", "Phase", "TRAINING_PHASES", "SERVING_PHASES", "LoopDim",
+    "LoopNest",
     "matmul_nest", "PRESETS", "PrecisionPolicy", "get_policy", "PEWord",
     "Program",
     "compile_program", "extract_ops", "FixedPointConfig", "fixed_quantize",

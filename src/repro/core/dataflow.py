@@ -212,6 +212,15 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
     act_bytes_in = tokens_per_dp_shard * op.act_in_features * 2.0   # bf16
     act_bytes_out = tokens_per_dp_shard * op.act_out_features * 2.0
     train = kind == "train"
+    # the forward flow of a serve-kind plan belongs to its serving phase:
+    # the iBuffer of a serving program carries PREFILL/DECODE words, and
+    # the comm estimate rides the same key.  Booked ONCE (the cost model
+    # sums comm.values() when scoring strategies — a dual booking would
+    # double the forward cost of sharded candidates); the program image
+    # mirrors the single estimate onto both serving words at reporting
+    # time (Program.ibuffer_entries).
+    fwd_phase = {"decode": Phase.DECODE, "prefill": Phase.PREFILL}.get(
+        kind, Phase.FF)
 
     shard_dim = _shardable_dim(op, tp)
     candidates: dict[Strategy, tuple[dict, float, str]] = {}
@@ -239,7 +248,7 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
                        else op.act_out_features)
             # a2a dispatch/combine + the SP<->TP all-gather/reduce-scatter
             per_layer = tokens_per_dp_shard * (op.top_k + 1) * d_model * 2.0
-            comm = {Phase.FF: per_layer * op.n_layers}
+            comm = {fwd_phase: per_layer * op.n_layers}
             if train:
                 comm[Phase.BP] = per_layer * op.n_layers
                 comm[Phase.UP] = 0.0
@@ -295,7 +304,7 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             a = (act_bytes_in if op.role in ("proj_in", "embed_dmodel")
                  else act_bytes_out)
         per_pass = a * (tp - 1) / tp * op.n_layers
-        comm_par = {Phase.FF: per_pass}
+        comm_par = {fwd_phase: per_pass}
         if train:
             comm_par[Phase.BP] = per_pass            # mirrored collective in BP
             # dW stays model-sharded ("dedicated vault") but still syncs
@@ -307,7 +316,7 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
 
         # --- GATHER (FSDP): W broadcast just-in-time PER MICRO-PASS,
         # dW reduce-scattered once per micro-pass too.
-        comm_gat = {Phase.FF: W * (tp - 1) / tp * nm}
+        comm_gat = {fwd_phase: W * (tp - 1) / tp * nm}
         if train:
             comm_gat[Phase.BP] = W * (tp - 1) / tp * nm
             comm_gat[Phase.UP] = (W * grad_bytes / op.dtype_bytes
@@ -346,7 +355,8 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
                   mem_bytes_per_device=mem, padding_waste=0.0, rationale=why)
 
 
-def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4) -> Optional[OpPlan]:
+def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4,
+                   fwd_phase: Phase = Phase.FF) -> Optional[OpPlan]:
     """Second-level sharding: additionally shard the weight's *storage* over
     the data axes (ZeRO-3 flavour of the paper's common-vault broadcast) when
     a single-axis partition still blows the HBM budget (e.g. arctic experts).
@@ -374,7 +384,7 @@ def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4) -> Optiona
             w_dev = p.mem_bytes_per_device / ax_sz
             comm = dict(p.comm_bytes)
             gat = p.mem_bytes_per_device * (ax_sz - 1) / ax_sz
-            comm[Phase.FF] = comm.get(Phase.FF, 0.0) + gat
+            comm[fwd_phase] = comm.get(fwd_phase, 0.0) + gat
             if Phase.UP in comm or Phase.BP in comm:
                 comm[Phase.BP] = comm.get(Phase.BP, 0.0) + gat
                 comm[Phase.UP] = (comm.get(Phase.UP, 0.0)
@@ -459,8 +469,10 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
                         if "zero3" not in p.rationale),
                        key=lambda p: -p.mem_bytes_per_device)
         done = False
+        fwd_phase = {"decode": Phase.DECODE, "prefill": Phase.PREFILL}.get(
+            kind, Phase.FF)
         for c in cands:
-            z = add_zero3_data(c, mesh)
+            z = add_zero3_data(c, mesh, fwd_phase=fwd_phase)
             if z is not None:
                 plan.ops[c.op.name] = z
                 zflips += 1

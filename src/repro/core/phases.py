@@ -1,13 +1,25 @@
-"""Training phases, exactly the paper's decomposition (§2).
+"""Training and serving phases, extending the paper's decomposition (§2).
 
 FF  — feedforward (== inference forward)
 BP  — backpropagation of dX
 UP  — parameter update (dW generation + optimizer step)
 PREP — data preparation (re-layout between flow changes, §2.4/§3.2)
 
+Serving is two more phases of the same homogeneous substrate — the
+paper's move (§2, §3.1) is that one PE array runs every phase by
+re-programming the dataflow per phase, and inference decomposes the
+same way training does:
+
+PREFILL — compute-bound multi-token forward against the cache (a prompt
+          chunk is a batch of rows on the MAC array: the FF flow)
+DECODE  — bandwidth-bound single-token step: every weight is read once
+          per token, so the program word selects the f32-accum matvec
+          path and skips the SR entropy stream entirely (nothing
+          persistent is written back)
+
 NeuroTrainer programs a *different* memory mapping / data flow / precision
-per phase; we carry the same phase tag through the planner and the
-precision policy.
+per phase; we carry the same phase tag through the planner, the precision
+policy, and the PE dispatch seam.
 """
 from __future__ import annotations
 
@@ -19,9 +31,12 @@ class Phase(str, enum.Enum):
     BP = "BP"
     UP = "UP"
     PREP = "PREP"
+    PREFILL = "PREFILL"
+    DECODE = "DECODE"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.value
 
 
 TRAINING_PHASES = (Phase.FF, Phase.BP, Phase.UP)
+SERVING_PHASES = (Phase.PREFILL, Phase.DECODE)

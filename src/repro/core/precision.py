@@ -36,7 +36,9 @@ class PrecisionPolicy:
     accum_dtype: jnp.dtype = jnp.float32
 
     def compute_dtype(self, phase: Phase):
-        return self.ff_dtype if phase == Phase.FF else self.bp_dtype
+        # serving phases (PREFILL/DECODE) run the inference ladder: FF
+        # operand dtypes, f32 accumulation, no gradient signal
+        return self.bp_dtype if phase in (Phase.BP, Phase.UP) else self.ff_dtype
 
     def cast_for(self, phase: Phase, x: jax.Array) -> jax.Array:
         dt = self.compute_dtype(phase)

@@ -196,18 +196,29 @@ class PEWord:
     ff_kernel: str = "sr_matmul"        # FF: tiled MAC array
     bp_kernel: str = "sr_matmul_t"      # BP: counter-swept W^T matmul
     up_kernel: str = "outer_accum"      # UP: fused X^T dY + SR writeback
+    # serving words: PREFILL re-uses the compute-bound MAC-array flow
+    # (a prompt chunk is a batch of rows); DECODE is bandwidth-bound —
+    # one weight read per token — so its word selects the f32-accum
+    # matvec path with NO SR entropy stream (nothing persistent written).
+    prefill_kernel: str = "sr_matmul"
+    decode_kernel: str = "matvec"
 
     def kernel_for(self, phase: Phase) -> str:
         if phase == Phase.FF:
             return self.ff_kernel
         if phase == Phase.BP:
             return self.bp_kernel
+        if phase == Phase.PREFILL:
+            return self.prefill_kernel
+        if phase == Phase.DECODE:
+            return self.decode_kernel
         return self.up_kernel
 
 
 # VPU ops (norm scales, conv taps, router logits): full-precision elementwise
 # or routing math — never dispatched onto the MAC-array kernels.
-_VPU_WORD_KERNELS = dict(ff_kernel="vpu", bp_kernel="vpu", up_kernel="vpu")
+_VPU_WORD_KERNELS = dict(ff_kernel="vpu", bp_kernel="vpu", up_kernel="vpu",
+                         prefill_kernel="vpu", decode_kernel="vpu")
 
 
 # ---------------------------------------------------------------------------
@@ -274,10 +285,19 @@ class Program:
     # --- reporting ---------------------------------------------------------
 
     def ibuffer_entries(self) -> list:
-        """The per-(op x phase) program words — the iBuffer image."""
+        """The per-(op x phase) program words — the iBuffer image.
+
+        Train programs carry the FF/BP/UP ladder; serve programs carry the
+        serving phases (a decode-kind program includes PREFILL words: the
+        serving engine chunk-prefills prompts through the same program).
+        """
         import jax.numpy as jnp
-        phases = ([Phase.FF, Phase.BP, Phase.UP] if self.shape.kind == "train"
-                  else [Phase.FF])
+        if self.shape.kind == "train":
+            phases = [Phase.FF, Phase.BP, Phase.UP]
+        elif self.shape.kind == "prefill":
+            phases = [Phase.PREFILL]
+        else:
+            phases = [Phase.PREFILL, Phase.DECODE]
         entries = []
         for name in sorted(self.plan.ops):
             p = self.plan.ops[name]
@@ -285,17 +305,26 @@ class Program:
             for ph in phases:
                 # dtype/rounding come from the EXECUTABLE word so the image
                 # matches what the engine runs (VPU ops: exact f32/nearest)
+                comm = p.comm_bytes.get(ph)
+                if comm is None and ph in (Phase.PREFILL, Phase.DECODE):
+                    # the planner books the forward-flow estimate ONCE per
+                    # serve kind (double booking would distort its cost
+                    # model); both serving words run the same flow, so the
+                    # image mirrors the single estimate onto each
+                    comm = next((p.comm_bytes[q]
+                                 for q in (Phase.PREFILL, Phase.DECODE)
+                                 if q in p.comm_bytes), 0.0)
                 entries.append({
                     "op": name, "phase": str(ph),
                     "strategy": str(p.strategy),
                     "weight_spec": str(p.weight_spec),
                     "compute_spec": str(p.compute_spec),
-                    "dtype": (word.ff_dtype if ph == Phase.FF
-                              else word.bp_dtype),
+                    "dtype": (word.bp_dtype if ph in (Phase.BP, Phase.UP)
+                              else word.ff_dtype),
                     "rounding": (word.update_rounding
                                  if ph == Phase.UP else "nearest"),
                     "kernel": word.kernel_for(ph),
-                    "comm_bytes": float(p.comm_bytes.get(ph, 0.0)),
+                    "comm_bytes": float(comm or 0.0),
                 })
         return entries
 

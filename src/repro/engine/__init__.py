@@ -4,7 +4,9 @@
 package executes them.  :func:`pe_dot` is the single dispatch seam every
 weight-bearing matmul in ``models/`` routes through; :class:`PEContext`
 (the grown ``Sharder``) fuses the dataflow program's layout constraints
-into that seam and threads the kernel backend + SR entropy.
+into that seam and threads the kernel backend, the SR entropy, and the
+phase tag (FF autodiff words vs the forward-only PREFILL/DECODE serving
+words — ``PEContext.with_phase``).
 """
 from repro.engine.context import PEContext, Sharder
 from repro.engine.dispatch import (BACKENDS, DEFAULT_WORD, op_key, pe_dot,

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.phases import Phase
 from repro.engine.dispatch import DEFAULT_WORD, op_key, pe_dot
 
 
@@ -32,18 +33,26 @@ class PEContext:
     backend: 'reference' (plain jnp, bit-identical to the pre-engine code)
     or 'pallas' (sr_matmul/outer_accum per PE program word).  `key` seeds
     the UP-phase SR entropy; thread the per-step key via :meth:`with_key`.
+    `phase` tags which program word column the trace executes: FF (default,
+    autodiff dispatches BP/UP) or the serving words PREFILL/DECODE — set it
+    via :meth:`with_phase` when building serve steps.
     """
     mesh: Optional[object] = None        # jax.sharding.Mesh
     program: Optional[object] = None     # core.program.Program
     backend: str = "reference"           # kernel_backend: reference | pallas
     interpret: Optional[bool] = None     # pallas interpret mode (None = auto)
     key: Optional[jax.Array] = None      # phase key for UP-phase SR entropy
+    phase: Phase = Phase.FF              # program-word column this trace runs
 
     # --- engine dispatch ---------------------------------------------------
 
     def with_key(self, key: jax.Array) -> "PEContext":
         """Per-step copy carrying the step's SR entropy key."""
         return dataclasses.replace(self, key=key)
+
+    def with_phase(self, phase: Phase) -> "PEContext":
+        """Copy tagged with the phase whose program word :meth:`dot` runs."""
+        return dataclasses.replace(self, phase=phase)
 
     def word(self, op_name: str):
         if self.program is not None:
@@ -65,7 +74,7 @@ class PEContext:
         key = op_key(self.key, op_name) if self.backend == "pallas" else None
         return pe_dot(x, w, word=self.word(op_name), backend=self.backend,
                       key=key, interpret=self.interpret,
-                      transpose_w=transpose_w)
+                      transpose_w=transpose_w, phase=self.phase)
 
     # --- layout constraints (the PMAG re-programming points) ---------------
 

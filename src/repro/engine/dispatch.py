@@ -11,6 +11,15 @@ routes accordingly:
   UP — dW from the fused ``outer_accum`` outer-product kernel with
        stochastic-rounding writeback per ``policy.update_rounding``.
 
+Serving phases dispatch forward-only words (no ``custom_vjp`` ride-along,
+no UP entropy):
+
+  PREFILL — the compute-bound MAC-array kernel on a multi-token prompt
+            chunk (same flow as FF, minus the backward machinery),
+  DECODE  — the bandwidth-oriented matvec word: one weight read per
+            token, f32 accumulation, NO stochastic-rounding entropy
+            (decode writes nothing persistent back).
+
 Two backends:
 
   reference — plain jnp (exactly the pre-engine model code; bit-identical,
@@ -33,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import dtypes as jdtypes
 
+from repro.core.phases import Phase
 from repro.core.program import PEWord
 from repro.kernels import ops as kops
 
@@ -129,6 +139,49 @@ _pe_matmul.defvjp(_pe_matmul_fwd, _pe_matmul_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Serving words: forward-only dispatch (no custom_vjp, no UP entropy)
+# ---------------------------------------------------------------------------
+
+
+def _matvec(x: jax.Array, w: jax.Array, word: PEWord,
+            transpose_w: bool) -> jax.Array:
+    """The DECODE program word: bandwidth-oriented f32-accum matvec.
+
+    Decode reads every weight exactly once per token — there is no MAC
+    tile re-use to program, so the word keeps operands at the FF dtype,
+    forces f32 accumulation explicitly, and draws NO SR entropy (decode
+    writes nothing persistent back).  No custom_vjp ride-along either:
+    serving never differentiates.
+    """
+    dt = jnp.dtype(word.ff_dtype)
+    if w.ndim == 3:                      # batched expert tables (E, d, f)
+        eq = "ecd,efd->ecf" if transpose_w else "ecd,edf->ecf"
+        y = jnp.einsum(eq, x.astype(dt), w.astype(dt),
+                       preferred_element_type=jnp.float32)
+    else:
+        wt = w.astype(dt)
+        y = jnp.matmul(x.astype(dt), wt.T if transpose_w else wt,
+                       preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _pallas_fwd(x: jax.Array, w: jax.Array, cfg: "_StaticCfg") -> jax.Array:
+    """The PREFILL program word: the FF MAC-array kernel, forward-only.
+
+    A prompt chunk is a batch of rows on the MAC array — same compute-bound
+    flow as FF, minus the backward machinery (no residuals saved, no
+    entropy key threaded).
+    """
+    if w.ndim == 3:                      # one PE program word per expert
+        return jax.vmap(lambda xe, we: _pallas_fwd(xe, we, cfg))(x, w)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2 = _ff(cfg, x2, w)
+    n = w.shape[0] if cfg.transpose_w else w.shape[-1]
+    return y2.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
 # Public seam
 # ---------------------------------------------------------------------------
 
@@ -160,18 +213,33 @@ def pe_dot(x: jax.Array, w: jax.Array, *,
            key: Optional[jax.Array] = None,
            interpret: Optional[bool] = None,
            transpose_w: bool = False,
-           block: tuple = (256, 256, 512)) -> jax.Array:
+           block: tuple = (256, 256, 512),
+           phase: Phase = Phase.FF) -> jax.Array:
     """Dispatch one weight-bearing matmul through its PE program word.
 
     x: (..., K); w: (K, N) — or (N, K) with transpose_w, or (E, K, N) for
     batched expert tables (x then (E, C, K)).  Returns (..., N) in x.dtype.
+
+    `phase` selects the word's kernel: FF (default) rides the three-phase
+    custom_vjp (autodiff dispatches BP/UP); PREFILL and DECODE are the
+    forward-only serving words.
     """
     if word is None:
         word = DEFAULT_WORD
     if backend not in BACKENDS:
         raise ValueError(f"unknown kernel backend {backend!r}; one of {BACKENDS}")
-    if backend == "reference" or word.ff_kernel == "vpu":
+    kern = word.kernel_for(phase)
+    if backend == "reference" or kern == "vpu":
         return _reference_dot(x, w, transpose_w)
+    if phase in (Phase.PREFILL, Phase.DECODE):
+        # serving words route on the WORD's kernel selection (the iBuffer
+        # image promises it reports what the engine runs): the bandwidth
+        # matvec, or the MAC-array kernel forward-only
+        if kern == "matvec":
+            return _matvec(x, w, word, transpose_w)
+        return _pallas_fwd(x, w, _StaticCfg(word=word, interpret=interpret,
+                                            block=block,
+                                            transpose_w=transpose_w))
     cfg = _StaticCfg(word=word, interpret=interpret, block=block,
                      transpose_w=transpose_w)
     if key is None:

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + decode loop with KV/SSM caches.
+"""Serving CLI: the continuous-batching engine (default) or the legacy
+single-shot fixed-batch loop (``--single-shot`` — the parity oracle, and
+the only path for the audio family).
 
+    # continuous batching over a synthetic Poisson trace
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --requests 32 --prompt-lens 16,512 --gen 32 --slots 32 --chunk 32
+
+    # legacy single-shot (one fixed batch, teacher-forced prefill)
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+        --single-shot --batch 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
 
@@ -17,28 +24,17 @@ from repro.core import compile_program
 from repro.launch.mesh import make_host_mesh, mesh_spec_for
 from repro.models import encdec
 from repro.models import transformer as tfm
-from repro.models.layers import Sharder
+from repro.models.layers import PEContext
 from repro.runtime import train_loop as tl
+from repro.serving import build_engine, latency_stats, poisson_trace
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--kernel-backend", default="reference",
-                    choices=("reference", "pallas"))
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+def run_single_shot(args, cfg, mesh, use_mesh):
+    """The pre-engine fixed-batch loop: every request same length, per-run
+    cache allocation, teacher-forced prefill through the decode path."""
     B, P, G = args.batch, args.prompt_len, args.gen
     max_len = P + G
     shape = ShapeConfig("serve", seq_len=max_len, global_batch=B, kind="decode")
-    mesh = make_host_mesh()
-    use_mesh = mesh if mesh.devices.size > 1 else None
     program = compile_program(cfg, shape, mesh_spec_for(mesh))
     decode = jax.jit(tl.make_decode_step(cfg, program, use_mesh,
                                          kernel_backend=args.kernel_backend),
@@ -47,7 +43,7 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     mm = tl.model_module(cfg)
     params = tl.cast_params(mm.init(key, cfg), jnp.bfloat16)
-    sh = Sharder(use_mesh, program, backend=args.kernel_backend)
+    sh = PEContext(use_mesh, program, backend=args.kernel_backend)
 
     # ---- prefill ----
     t0 = time.monotonic()
@@ -86,6 +82,81 @@ def main(argv=None):
           f"({tps:.1f} tok/s aggregate)")
     print("sample token ids:", [int(t[0]) for t in out_tokens][:16])
     return 0
+
+
+def run_engine(args, cfg, mesh, use_mesh):
+    """Continuous batching: slot arena + chunked prefill + masked decode."""
+    lo, hi = (int(x) for x in args.prompt_lens.split(","))
+    max_len = args.max_len or hi + args.gen
+    engine = build_engine(
+        cfg, n_slots=args.slots, max_len=max_len, prefill_chunk=args.chunk,
+        kernel_backend=args.kernel_backend, mesh=use_mesh,
+        mesh_spec=mesh_spec_for(mesh) if use_mesh is not None else None,
+        seed=args.seed, evict_patience=args.evict_patience)
+    trace = poisson_trace(args.requests, vocab_size=cfg.vocab_size,
+                          prompt_lens=(lo, hi), gen_tokens=args.gen,
+                          mean_interarrival_steps=args.rate, seed=args.seed)
+    t0 = time.monotonic()
+    results = engine.run(trace)
+    wall = time.monotonic() - t0
+    stats = latency_stats(engine.events)
+    n_prompt = sum(len(r.prompt) for r in trace)
+    print(f"arch={cfg.name} requests={args.requests} prompts=[{lo},{hi}] "
+          f"gen={args.gen} slots={args.slots} chunk={args.chunk}")
+    print(f"steps={engine.step_count} prompt_tokens={n_prompt} "
+          f"generated={stats['tokens']} wall={wall*1e3:.0f}ms")
+    print(f"throughput {stats['tokens']/wall:.1f} tok/s (generated), "
+          f"{(n_prompt+stats['tokens'])/wall:.1f} tok/s (total); "
+          f"per-token latency p50={stats['p50_ms']:.1f}ms "
+          f"p99={stats['p99_ms']:.1f}ms")
+    first = trace[0].rid
+    print(f"sample ({first}):", results[first][:16])
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--kernel-backend", default="reference",
+                    choices=("reference", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gen", type=int, default=16)
+    # engine mode
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-lens", default="16,512",
+                    help="lo,hi prompt-length band of the trace")
+    ap.add_argument("--slots", type=int, default=32,
+                    help="cache arena rows (max concurrent requests)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk width (tokens per chunk step)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean request inter-arrival in engine steps")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache length per slot (0 = hi + gen)")
+    ap.add_argument("--evict-patience", type=int, default=None,
+                    help="steps a queued request starves before preemption")
+    # single-shot mode
+    ap.add_argument("--single-shot", action="store_true",
+                    help="legacy fixed-batch loop (parity oracle / audio)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="[single-shot] fixed batch size (default 4)")
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="[single-shot] uniform prompt length (default 32)")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    use_mesh = mesh if mesh.devices.size > 1 else None
+    if args.single_shot or cfg.family == "audio":
+        args.batch = 4 if args.batch is None else args.batch
+        args.prompt_len = 32 if args.prompt_len is None else args.prompt_len
+        return run_single_shot(args, cfg, mesh, use_mesh)
+    if args.batch is not None or args.prompt_len is not None:
+        # don't silently run a very different workload than the user asked
+        ap.error("--batch/--prompt-len apply to --single-shot only; "
+                 "engine mode sizes the trace with --requests/--prompt-lens")
+    return run_engine(args, cfg, mesh, use_mesh)
 
 
 if __name__ == "__main__":

@@ -148,6 +148,40 @@ def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.astype(q.dtype)
 
 
+def chunk_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 kv_pos: jax.Array, pos: jax.Array, *,
+                 window: Optional[int] = None) -> jax.Array:
+    """Multi-token attention against the cache (chunked prefill).
+
+    q: (B, T, K, G, hd); k_cache/v_cache: (B, S, K, hd);
+    kv_pos: (B, S) logical position of each slot (-1 = empty);
+    pos: (B, T) absolute position of each query token.
+    Returns (B, T, K, G, hd).
+
+    This is ``decode_attend`` vectorised over the T query positions —
+    same contraction over the full cache axis, same unnormalised-exp
+    cast discipline — so each position's output is bit-identical to a
+    single-token decode at that position (the chunked-prefill ≡
+    whole-prompt invariant of tests/test_serving.py).  The chunk's own
+    K/V must already be in the cache; the kv_pos <= pos mask keeps every
+    query causal within the chunk.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("btkgh,bskh->btkgs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= pos[:, :, None])
+    if window is not None:
+        valid &= (pos[:, :, None] - kv_pos[:, None, :]) < window
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("btkgs,bskh->btkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
 def init_kv_cache(cfg: AttentionConfig, batch: int, length: int,
                   dtype=jnp.bfloat16) -> dict:
     K, hd = cfg.n_kv_heads, cfg.head_dim
@@ -173,6 +207,26 @@ def update_cache(cache: dict, k1: jax.Array, v1: jax.Array,
     v = cache["v"].at[b, slot].set(v1.astype(cache["v"].dtype))
     kv_pos = cache["pos"].at[b, slot].set(pos)
     return {"k": k, "v": v, "pos": kv_pos}
+
+
+def update_cache_chunk(cache: dict, k: jax.Array, v: jax.Array,
+                       pos: jax.Array) -> dict:
+    """Insert T tokens at logical positions `pos` (chunked prefill).
+
+    k/v: (B, T, K, hd); pos: (B, T).  For UN-windowed caches only: there
+    the ring spans max_len and positions never wrap, so the T slots of a
+    chunk never collide.  Windowed ring caches must insert+attend per
+    token instead (``transformer._unit_chunk`` scans those) — a
+    vectorised insert would let a later in-chunk token overwrite a ring
+    slot an earlier query still needs, silently dropping K/V entries.
+    """
+    size = cache["k"].shape[1]
+    slot = pos % size                                     # (B, T)
+    b = jnp.arange(k.shape[0])[:, None]
+    kc = cache["k"].at[b, slot].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[b, slot].set(v.astype(cache["v"].dtype))
+    kv_pos = cache["pos"].at[b, slot].set(pos)
+    return {"k": kc, "v": vc, "pos": kv_pos}
 
 
 # ---------------------------------------------------------------------------

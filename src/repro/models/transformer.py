@@ -23,8 +23,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_block, attn_params,
-                                    decode_attend, init_kv_cache, split_qkv,
-                                    update_cache)
+                                    chunk_attend, decode_attend,
+                                    init_kv_cache, split_qkv, update_cache,
+                                    update_cache_chunk)
 from repro.models.layers import (Sharder, apply_norm, apply_rope,
                                  cross_entropy, embed, lm_logits, mlp,
                                  mlp_params, norm_params)
@@ -337,6 +338,97 @@ def _unit_decode(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
     else:
         y = mlp(cfg, h2, uparams["ffn"]["ffn_in"], uparams["ffn"]["ffn_out"], sh)
     return x + y, new_cache
+
+
+def _unit_chunk(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
+                sh: Sharder, cache: dict, pos: jax.Array):
+    """Chunked-prefill unit step.  x: (B, T, d); pos: (B, T) absolute.
+
+    Mirrors ``_unit_decode`` exactly (same cast discipline, no residual
+    re-layout) so each token's math is bit-identical to a single-token
+    decode at that position.  Projections run T tokens wide — the
+    compute-bound PREFILL program word; the SSM recurrences consume the
+    whole chunk from carried state (one scan == T single steps).
+    """
+    h = apply_norm(cfg, x, uparams.get("norm1"))
+    new_cache = dict(cache)
+    if unit.mixer == "attn":
+        a = cfg.attention
+        qkv = sh.dot("attn_qkv", h, uparams["attn"]["qkv"])
+        q, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
+        B, T = h.shape[:2]
+        K_, G, hd = q.shape[2:]
+        q = apply_rope(q.reshape(B, T, K_ * G, hd), pos,
+                       a.rope_theta).reshape(B, T, K_, G, hd)
+        k = apply_rope(k, pos, a.rope_theta)
+        if a.window is not None:
+            # windowed ring cache: a vectorised chunk insert would let a
+            # later in-chunk token overwrite the ring slot an earlier
+            # query must still attend (wrap mid-chunk) — sequence the
+            # insert+attend per token, exactly the decode path
+            def one(c, inp):
+                qt, kt, vt, pt = inp
+                c = update_cache(c, kt, vt, pt)
+                o = decode_attend(qt, c["k"], c["v"], c["pos"], pt,
+                                  window=a.window)
+                return c, o
+            c, out = jax.lax.scan(
+                one, cache["attn"],
+                (q.transpose(1, 0, 2, 3, 4), k.transpose(1, 0, 2, 3),
+                 v.transpose(1, 0, 2, 3), pos.T))
+            out = out.transpose(1, 0, 2, 3, 4)            # (B,T,K,G,hd)
+        else:
+            c = update_cache_chunk(cache["attn"], k, v, pos)
+            out = chunk_attend(q, c["k"], c["v"], c["pos"], pos)
+        mix = sh.dot("attn_o", out.reshape(B, T, -1), uparams["attn"]["o"])
+        new_cache["attn"] = c
+    elif unit.mixer == "rwkv6":
+        mix, st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh, cache["rwkv"])
+        new_cache["rwkv"] = st
+    else:
+        mix, st = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh, cache["mamba"])
+        new_cache["mamba"] = st
+    x = x + mix
+    h2 = apply_norm(cfg, x, uparams.get("norm2"))
+    if unit.ffn == "moe":
+        y, _ = moe_block(cfg, h2, uparams["moe"], sh)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            y = y + mlp(cfg, h2, uparams["ffn"]["ffn_in"],
+                        uparams["ffn"]["ffn_out"], sh)
+    else:
+        y = mlp(cfg, h2, uparams["ffn"]["ffn_in"], uparams["ffn"]["ffn_out"], sh)
+    return x + y, new_cache
+
+
+def chunk_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+               cache: dict, pos0: jax.Array, sh: Sharder,
+               *, compute_dtype=jnp.bfloat16):
+    """Multi-token serve step: T prompt tokens against the caches.
+
+    tokens: (B, T); pos0: (B,) absolute position of tokens[:, 0].
+    Returns (logits (B, T, V) f32, new_cache).  The serving engine's
+    chunked prefill: bit-identical to T sequential ``decode_step`` calls
+    on the reference backend, but runs the projections T tokens wide
+    (the compute-bound PREFILL program word).
+    """
+    pattern = layer_pattern(cfg)
+    B, T = tokens.shape
+    pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
+
+    def group_step(x, scanned):
+        gparams, gcache = scanned
+        new_c = {}
+        for i, u in enumerate(pattern):
+            x, c = _unit_chunk(cfg, x, gparams[f"u{i}"], u, sh,
+                               gcache[f"u{i}"], pos)
+            new_c[f"u{i}"] = c
+        return x, new_c
+
+    x, new_caches = jax.lax.scan(group_step, x, (params["groups"], cache))
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = lm_logits(x, cfg, params, sh)
+    return logits, new_caches
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,

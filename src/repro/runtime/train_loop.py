@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.phases import Phase
 from repro.core.program import Program
 from repro.engine import PEContext
 from repro.models import encdec
@@ -224,7 +225,8 @@ def state_shapes(cfg: ModelConfig, program: Program, train_cfg: TrainConfig) -> 
 def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None,
                       kernel_backend: str = "reference"):
     policy = program.policy
-    sh = PEContext(mesh, program, backend=kernel_backend)
+    sh = PEContext(mesh, program,
+                   backend=kernel_backend).with_phase(Phase.PREFILL)
 
     def prefill(params, batch):
         if cfg.family == "audio":
@@ -252,8 +254,11 @@ def make_prefill_step(cfg: ModelConfig, program: Program, mesh=None,
 
 def make_decode_step(cfg: ModelConfig, program: Program, mesh=None,
                      kernel_backend: str = "reference"):
+    """One-token serve step under the DECODE program word (bandwidth-bound
+    matvec, no SR entropy — see engine/dispatch.py)."""
     policy = program.policy
-    sh = PEContext(mesh, program, backend=kernel_backend)
+    sh = PEContext(mesh, program,
+                   backend=kernel_backend).with_phase(Phase.DECODE)
 
     def decode(params, cache, tokens, pos):
         if cfg.family == "audio":
@@ -263,6 +268,28 @@ def make_decode_step(cfg: ModelConfig, program: Program, mesh=None,
                                compute_dtype=policy.ff_dtype)
 
     return decode
+
+
+def make_chunk_step(cfg: ModelConfig, program: Program, mesh=None,
+                    kernel_backend: str = "reference"):
+    """Multi-token cache step under the PREFILL program word.
+
+    Processes a (B, T) prompt chunk against the caches — the serving
+    engine's chunked prefill.  Bit-identical to T sequential decode steps
+    on the reference backend (tests/test_serving.py)."""
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "chunked prefill targets decoder-only families; the audio "
+            "encoder prefills via encdec.precompute_cross_kv")
+    policy = program.policy
+    sh = PEContext(mesh, program,
+                   backend=kernel_backend).with_phase(Phase.PREFILL)
+
+    def chunk(params, cache, tokens, pos0):
+        return tfm.chunk_step(cfg, params, tokens, cache, pos0, sh,
+                              compute_dtype=policy.ff_dtype)
+
+    return chunk
 
 
 def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):

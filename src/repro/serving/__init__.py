@@ -1,0 +1,29 @@
+"""Continuous-batching serving engine (paper §2 phase decomposition).
+
+Serving is two more phases of the same homogeneous substrate: PREFILL
+(compute-bound prompt chunks) and DECODE (bandwidth-bound per-token
+matvec).  This package schedules both onto one fixed cache arena:
+
+- :mod:`slots` — the slot-based paged state pool: a fixed arena of
+  KV/SSM/RNN cache rows; requests lease a slot row, retire releases it,
+  ``reset_slots`` re-initialises rows in place (works for all three
+  cache families).
+- :mod:`scheduler` — admission queue + per-request state machine
+  (QUEUED -> PREFILL -> DECODE -> FINISHED, with eviction back to
+  QUEUED under arena pressure); chunked prefill is interleaved with
+  decode so long prompts never stall the decode batch.
+- :mod:`engine` — the array work: one jitted masked decode over the
+  whole arena per step plus per-slot prefill chunk steps, both routed
+  through ``PEContext`` under the PREFILL/DECODE program words.
+- :mod:`trace` — synthetic Poisson request traces for examples and the
+  throughput benchmark.
+"""
+from repro.serving.engine import (ServingEngine, TokenEvent, build_engine,
+                                  latency_stats)
+from repro.serving.scheduler import Request, RequestState, Scheduler
+from repro.serving.slots import SlotPool, reset_slots
+from repro.serving.trace import poisson_trace
+
+__all__ = ["ServingEngine", "TokenEvent", "build_engine", "latency_stats",
+           "Request", "RequestState", "Scheduler", "SlotPool",
+           "reset_slots", "poisson_trace"]

@@ -1,0 +1,270 @@
+"""The serving engine: scheduler policy meets the jitted array work.
+
+Two compiled step functions, both routed through ``PEContext`` under the
+serving program words (core/phases.py):
+
+- ``_decode``: one masked width-1 decode over the WHOLE arena (fixed
+  shape, always the same jit).  Inactive rows compute garbage and their
+  cache rows are restored bit-exactly afterwards (``jnp.where`` on the
+  batch axis) — fixed shapes beat gather/scatter recompiles, and masked
+  rows cost only FLOPs, never correctness.  Runs the DECODE word:
+  bandwidth-oriented matvec, no SR entropy.
+- ``_chunk``: one ``prefill_chunk``-wide prompt chunk for a single slot
+  (dynamic slice on the arena's batch axis, slot index traced — one
+  compile covers every slot).  Runs the compute-bound PREFILL word.
+
+Both are bit-identical, per request, to the single-shot teacher-forced
+decode loop on the reference backend (tests/test_serving.py) — the
+engine changes *scheduling*, never *math*.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.program import Program
+from repro.runtime import train_loop as tl
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.slots import SlotPool, reset_slots
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One generated token: (request, token id, index within the request's
+    output, engine step, wall-clock seconds)."""
+    rid: str
+    token: int
+    index: int
+    step: int
+    t: float
+
+
+class ServingEngine:
+    """Continuous-batching engine over a fixed slot arena.
+
+    cfg/program/params as compiled for a decode-kind ShapeConfig with
+    ``seq_len=max_len`` and ``global_batch=n_slots``.  ``max_len`` bounds
+    prompt + generated tokens per request.
+    """
+
+    def __init__(self, cfg: ModelConfig, program: Program, params,
+                 *, n_slots: int, max_len: int, prefill_chunk: int = 32,
+                 kernel_backend: str = "reference", mesh=None,
+                 max_prefill_chunks_per_step: int = 1,
+                 evict_patience: Optional[int] = None):
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "the serving engine targets decoder-only families; audio "
+                "serves via launch/serve.py --single-shot")
+        if mesh is not None and cfg.moe is not None:
+            # the sharded MoE path (_moe_sharded) drops tokens over expert
+            # capacity, so the masked arena rows' garbage tokens would
+            # COMPETE with active rows for capacity — batch rows stop
+            # being independent and the parity invariant breaks silently.
+            # Refuse rather than be quietly wrong; single-shard MoE
+            # (mesh=None) is dropless and safe.
+            raise NotImplementedError(
+                "serving MoE models over a mesh routes through the "
+                "capacity-dropping a2a path, which couples arena rows; "
+                "use mesh=None (single-shard, dropless) or "
+                "launch/serve.py --single-shot")
+        self.cfg = cfg
+        self.program = program
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.pool = SlotPool(n_slots)
+        self.sched = Scheduler(
+            self.pool, prefill_chunk=prefill_chunk,
+            max_prefill_chunks_per_step=max_prefill_chunks_per_step,
+            evict_patience=evict_patience)
+        self.cache = tl.model_module(cfg).init_cache(cfg, n_slots, max_len)
+        self.step_count = 0
+        self.events: list = []
+
+        decode_fn = tl.make_decode_step(cfg, program, mesh,
+                                        kernel_backend=kernel_backend)
+        chunk_fn = tl.make_chunk_step(cfg, program, mesh,
+                                      kernel_backend=kernel_backend)
+
+        def _decode(params, cache, tok, pos, active):
+            logits, new_cache = decode_fn(params, cache, tok, pos)
+            new_cache = jax.tree.map(
+                lambda new, old: jnp.where(
+                    active.reshape((1, n_slots) + (1,) * (new.ndim - 2)),
+                    new, old),
+                new_cache, cache)
+            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), new_cache
+
+        def _chunk(params, cache, tokens, pos0, slot):
+            row = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                cache)
+            logits, new_row = chunk_fn(params, row, tokens, pos0)
+            cache = jax.tree.map(
+                lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                    a, r, slot, axis=1),
+                cache, new_row)
+            return jnp.argmax(logits[0, -1], -1).astype(jnp.int32), cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._chunk = jax.jit(_chunk, donate_argnums=(1,))
+        self._reset = jax.jit(
+            lambda cache, slot: reset_slots(cache, jnp.reshape(slot, (1,))),
+            donate_argnums=(0,))
+
+    # --- request intake ----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self._validate(req)
+        self.sched.submit(req, self.step_count)
+
+    def _validate(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"{req.rid}: prompt({len(req.prompt)}) + "
+                f"max_new({req.max_new_tokens}) exceeds max_len={self.max_len}")
+
+    # --- one engine iteration ----------------------------------------------
+
+    def step(self) -> list:
+        """One continuous-batching iteration: evict / admit / chunk-prefill
+        / masked arena decode.  Returns the TokenEvents of this step."""
+        step = self.step_count
+        self.step_count += 1
+        new_events: list = []
+
+        self.sched.plan_evictions(step)
+        for st in self.sched.admit(step):
+            self.cache = self._reset(self.cache, jnp.int32(st.slot))
+
+        # chunked prefill: bounded work per step, interleaved with decode
+        chunked = self.sched.chunk_candidates()
+        for st in chunked:
+            toks = np.asarray(st.seq[st.pos:st.pos + self.prefill_chunk],
+                              np.int32)[None]
+            last, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray([st.pos], jnp.int32), jnp.int32(st.slot))
+            appended, _ = self.sched.consume_chunk(
+                st, self.prefill_chunk, int(last))
+            if appended:
+                new_events.append(self._event(st, step))
+
+        # masked width-1 decode over the whole arena: DECODE-phase rows
+        # feed their last generated token, sub-chunk PREFILL tails are
+        # teacher-forced (continuous batching: one iteration, all phases)
+        rows = self.sched.decode_rows(chunked)
+        if rows:
+            tok = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            active = np.zeros((self.n_slots,), bool)
+            for st in rows:
+                tok[st.slot, 0] = self.sched.feed_token(st)
+                pos[st.slot] = st.pos
+                active[st.slot] = True
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(active))
+            nxt = np.asarray(nxt)
+            for st in rows:
+                appended, _ = self.sched.consume(st, int(nxt[st.slot]))
+                if appended:
+                    new_events.append(self._event(st, step))
+
+        self.events.extend(new_events)
+        return new_events
+
+    def _event(self, st, step: int) -> TokenEvent:
+        return TokenEvent(rid=st.req.rid, token=st.generated[-1],
+                          index=len(st.generated) - 1, step=step,
+                          t=time.monotonic())
+
+    # --- drive to completion ------------------------------------------------
+
+    def run(self, requests=(), max_steps: int = 1_000_000) -> dict:
+        """Feed `requests` at their arrival steps and run until drained.
+
+        Returns {rid: generated token list}.
+        """
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        for r in pending:
+            self._validate(r)       # fail BEFORE any compute, not mid-run
+        i = 0
+        for _ in range(max_steps):
+            while i < len(pending) \
+                    and pending[i].arrival_step <= self.step_count:
+                self.submit(pending[i])
+                i += 1
+            if i == len(pending) and self.sched.idle:
+                return self.sched.results()
+            self.step()
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    @property
+    def concurrency(self) -> int:
+        return len(self.sched.active)
+
+
+def build_engine(cfg: ModelConfig, *, n_slots: int, max_len: int,
+                 prefill_chunk: int = 32, kernel_backend: str = "reference",
+                 mesh=None, mesh_spec=None, seed: int = 0,
+                 **engine_kwargs) -> ServingEngine:
+    """One-stop constructor: compile the serve-kind program, init bf16
+    params, build the engine — the shared setup of the serve CLI, the
+    examples, and the throughput benchmark (keep them in lockstep here).
+
+    mesh_spec is required when `mesh` is given (the CLI passes
+    ``mesh_spec_for(mesh)``); single-device callers omit both.
+    """
+    from repro.configs.base import ShapeConfig
+    from repro.core.dataflow import MeshSpec
+    from repro.core.program import compile_program
+    if mesh_spec is None:
+        if mesh is not None:
+            raise ValueError("pass mesh_spec alongside mesh")
+        mesh_spec = MeshSpec(axis_sizes={"data": 1, "model": 1})
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=n_slots,
+                        kind="decode")
+    program = compile_program(cfg, shape, mesh_spec)
+    params = tl.cast_params(
+        tl.model_module(cfg).init(jax.random.PRNGKey(seed), cfg),
+        jnp.bfloat16)
+    return ServingEngine(cfg, program, params, n_slots=n_slots,
+                         max_len=max_len, prefill_chunk=prefill_chunk,
+                         kernel_backend=kernel_backend, mesh=mesh,
+                         **engine_kwargs)
+
+
+def latency_stats(events) -> dict:
+    """Aggregate throughput + per-token latency over a run's TokenEvents.
+
+    Per-token latency is the wall-clock gap between a request's
+    consecutive tokens (inter-token latency; arrivals are step-quantised
+    so time-to-first-token is not meaningful here).
+    """
+    if not events:
+        return {"tokens": 0, "wall_s": 0.0, "tok_s": 0.0,
+                "p50_ms": 0.0, "p99_ms": 0.0}
+    by_rid: dict = {}
+    for e in events:
+        by_rid.setdefault(e.rid, []).append(e)
+    gaps = []
+    for evs in by_rid.values():
+        evs = sorted(evs, key=lambda e: e.index)
+        gaps += [b.t - a.t for a, b in zip(evs, evs[1:])]
+    wall = max(e.t for e in events) - min(e.t for e in events)
+    n = len(events)
+    gaps.sort()
+    pick = (lambda q: gaps[min(len(gaps) - 1, int(q * len(gaps)))]) if gaps \
+        else (lambda q: 0.0)
+    return {"tokens": n, "wall_s": wall,
+            "tok_s": n / wall if wall > 0 else float("inf"),
+            "p50_ms": pick(0.50) * 1e3, "p99_ms": pick(0.99) * 1e3}

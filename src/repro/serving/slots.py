@@ -1,0 +1,93 @@
+"""Slot-based paged state pool: one fixed cache arena, leased per request.
+
+The arena is the batch dimension of the decode cache pytree
+(``tfm.init_cache(cfg, n_slots, max_len)`` — arrays shaped
+``(n_groups, n_slots, ...)``).  A *slot* is one batch row; requests
+lease a row on admission, the engine resets the row's state in place,
+and retirement releases the row for reuse.  The same mechanism covers
+all three cache families — attention KV rings (int ``pos`` marks empty
+slots with -1), RWKV per-head state matrices, and Mamba conv/SSM
+states (floats reset to zero) — because resetting a row is exactly
+re-initialising it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotPool:
+    """Lease/release bookkeeping over ``n_slots`` arena rows.
+
+    Pure host-side accounting — the cache arrays live with the engine.
+    Lease order is deterministic (lowest free slot first) so runs are
+    reproducible; ``newest_leased`` supports the scheduler's eviction
+    policy (preempt the most recently admitted request first).
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() -> lowest
+        self._owner: dict[int, str] = {}                # slot -> request id
+        self._seq: dict[int, int] = {}                  # slot -> lease tick
+        self._tick = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def leased_count(self) -> int:
+        return len(self._owner)
+
+    def owner(self, slot: int) -> Optional[str]:
+        return self._owner.get(slot)
+
+    def lease(self, rid: str) -> Optional[int]:
+        """Lease the lowest free slot to `rid`; None when the arena is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._owner[slot] = rid
+        self._seq[slot] = self._tick
+        self._tick += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise KeyError(f"slot {slot} is not leased")
+        del self._owner[slot]
+        del self._seq[slot]
+        self._free.append(slot)
+        self._free.sort(reverse=True)                   # keep pop() lowest
+
+    def newest_leased(self) -> Optional[int]:
+        """The most recently leased slot (eviction victim candidate)."""
+        if not self._seq:
+            return None
+        return max(self._seq, key=self._seq.__getitem__)
+
+    def leased_by_recency(self) -> list:
+        """Leased slots, most recently leased first (eviction victim scan)."""
+        return sorted(self._seq, key=self._seq.__getitem__, reverse=True)
+
+
+def reset_slots(cache, slots) -> object:
+    """Re-initialise arena rows `slots` in place (lease-time hygiene).
+
+    cache: the arena pytree — every leaf shaped (n_groups, n_slots, ...).
+    Integer leaves are position maps (attention ``pos``): reset to -1
+    (empty).  Float leaves are KV values / recurrent states: reset to 0.
+    Matches ``init_cache`` for every cache family by construction.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def one(leaf):
+        fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+        return leaf.at[:, idx].set(jnp.asarray(fill, leaf.dtype))
+
+    return jax.tree.map(one, cache)
