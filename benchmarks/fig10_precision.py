@@ -8,9 +8,8 @@ nearest-rounded low-precision training stalls (updates below the quant
 step vanish), SR recovers fp32-level training, and SR-LO == SR.
 """
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row
 from repro.configs.paper_nets import GRUConfig
 from repro.core.rounding import FixedPointConfig, fixed_quantize
 from repro.models import rnn

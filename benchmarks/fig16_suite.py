@@ -14,7 +14,6 @@ Two reproductions:
 """
 import glob
 import json
-import os
 from dataclasses import replace
 
 import jax
@@ -22,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.configs.paper_nets import ALEXNET, GRU0, MLP0, VGG16, GRUConfig
+from repro.configs.paper_nets import ALEXNET, GRU0, VGG16, GRUConfig
 from repro.models import cnn, rnn
 
 

@@ -1,0 +1,181 @@
+"""CI perf gate: run the benchmark harness, record BENCH_3.json, compare
+against the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_3.json]
+        [--baseline benchmarks/baseline.json] [--update]
+
+Runs ``benchmarks.run`` (the smoke-sized figure/table suites) and
+``benchmarks.autotune_gemm --smoke`` as subprocesses, merges their CSV
+rows into one JSON artifact, then gates:
+
+  * every row named in the baseline's ``require_rows`` must be present
+    (a suite that silently stops producing a row fails the gate), and
+  * every entry in ``metrics`` must be within ``threshold`` (default 20%)
+    of its baseline value in the stated direction.
+
+Gated metrics are the autotuner's DETERMINISTIC cost-model numbers
+(pred_speedup, pred_bytes_ratio): bit-stable across machines, so a >20%
+move is a real model/search regression, not runner noise.  Wall-clock
+``us_per_call`` is recorded in the artifact for trend tracking but not
+gated.  ``--update`` rewrites the baseline from the current run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_SUITES = "all"
+GATED_KEYS = ("pred_speedup", "pred_bytes_ratio")
+
+
+def _parse_rows(text: str) -> dict:
+    """CSV rows -> {name: {"us": float, "derived": {key: float|str}}}."""
+    rows: dict = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if (not line or line.startswith("#")
+                or line.startswith("name,us_per_call")):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) != 3:
+            continue
+        name, us, derived_raw = parts
+        try:
+            us_f = float(us)
+        except ValueError:
+            continue
+        derived: dict = {}
+        for tok in derived_raw.split():
+            if "=" not in tok:
+                continue
+            k, v = tok.split("=", 1)
+            try:
+                derived[k] = float(v)
+            except ValueError:
+                derived[k] = v
+        rows[name] = {"us": us_f, "derived": derived}
+    return rows
+
+
+def _run(cmd: list) -> tuple:
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    return proc.returncode, proc.stdout
+
+
+def collect(suites: str) -> tuple:
+    """(rows, ok): run the harness + the autotune smoke, merge rows."""
+    ok = True
+    rows: dict = {}
+    if suites == "all":
+        # autotune runs as its own subprocess below (the CI contract is
+        # `run.py` + `autotune_gemm --smoke`); don't execute it twice
+        suites = "table1,fig10,fig13,fig16,table6,fig17,serve"
+    rc, out = _run([sys.executable, "-m", "benchmarks.run",
+                    "--only", suites])
+    ok &= rc == 0
+    rows.update(_parse_rows(out))
+    rc, out = _run([sys.executable, "-m", "benchmarks.autotune_gemm",
+                    "--smoke"])
+    ok &= rc == 0
+    rows.update(_parse_rows(out))
+    return rows, ok
+
+
+def gate(rows: dict, baseline: dict) -> list:
+    """List of violation strings (empty = green)."""
+    thr = float(baseline.get("threshold", 0.20))
+    bad = []
+    for name in baseline.get("require_rows", []):
+        if name not in rows:
+            bad.append(f"missing row: {name}")
+    for key, spec in baseline.get("metrics", {}).items():
+        row_name, metric = key.rsplit(":", 1)
+        r = rows.get(row_name)
+        if r is None:
+            bad.append(f"missing row for metric: {key}")
+            continue
+        val = r["us"] if metric == "us" else r["derived"].get(metric)
+        if not isinstance(val, (int, float)):
+            bad.append(f"missing metric: {key}")
+            continue
+        base = float(spec["value"])
+        direction = spec.get("direction", "higher")
+        if direction == "higher" and val < base * (1.0 - thr):
+            bad.append(f"{key}: {val:.4f} < {base:.4f} -{thr:.0%} (regression)")
+        elif direction == "lower" and val > base * (1.0 + thr):
+            bad.append(f"{key}: {val:.4f} > {base:.4f} +{thr:.0%} (regression)")
+    return bad
+
+
+def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
+    """Baseline from a run: gate all rows' presence + the deterministic
+    autotuner model metrics."""
+    metrics: dict = {}
+    for name, r in sorted(rows.items()):
+        for k in GATED_KEYS:
+            v = r["derived"].get(k)
+            if isinstance(v, (int, float)):
+                direction = "lower" if "ratio" in k else "higher"
+                metrics[f"{name}:{k}"] = {"value": v, "direction": direction}
+    return {"threshold": threshold, "require_rows": sorted(rows),
+            "metrics": metrics}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_3.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--suites", default=DEFAULT_SUITES,
+                    help="benchmarks.run --only value")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="override the baseline's regression threshold")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run")
+    args = ap.parse_args()
+
+    rows, suites_ok = collect(args.suites)
+    artifact = {"rows": rows, "suites": args.suites, "ok": suites_ok}
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"\n[gate] {len(rows)} rows -> {args.out}")
+
+    if args.update:
+        baseline = make_baseline(rows)
+        if args.threshold is not None:
+            baseline["threshold"] = args.threshold
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+        print(f"[gate] baseline updated -> {args.baseline}")
+        return 0 if suites_ok else 1
+
+    if not os.path.exists(args.baseline):
+        print(f"[gate] FAIL: no baseline at {args.baseline} "
+              f"(run with --update to create)")
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if args.threshold is not None:
+        baseline["threshold"] = args.threshold
+    bad = gate(rows, baseline)
+    if not suites_ok:
+        bad.append("a benchmark suite exited nonzero")
+    if bad:
+        print("[gate] FAIL:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print(f"[gate] PASS: {len(baseline.get('require_rows', []))} rows, "
+          f"{len(baseline.get('metrics', {}))} gated metrics within "
+          f"{baseline.get('threshold', 0.2):.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,14 +13,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
     args = ap.parse_args()
-    from benchmarks import (fig10_precision, fig13_alexnet, fig16_suite,
-                            fig17_scaling, serve_throughput, table1_mac,
-                            table6_efficiency)
+    from benchmarks import (autotune_gemm, fig10_precision, fig13_alexnet,
+                            fig16_suite, fig17_scaling, serve_throughput,
+                            table1_mac, table6_efficiency)
     suites = {
         "table1": table1_mac, "fig10": fig10_precision,
         "fig13": fig13_alexnet, "fig16": fig16_suite,
         "table6": table6_efficiency, "fig17": fig17_scaling,
-        "serve": serve_throughput,
+        "serve": serve_throughput, "autotune": autotune_gemm,
     }
     chosen = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

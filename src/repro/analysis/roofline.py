@@ -16,7 +16,6 @@ MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) per training step,
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, asdict
 
 from repro.analysis.hlo_stats import HloStats, analyze

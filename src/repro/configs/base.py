@@ -8,8 +8,7 @@ allocation).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 # ---------------------------------------------------------------------------

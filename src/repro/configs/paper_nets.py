@@ -10,7 +10,7 @@ benchmark harness; they are *not* part of the assigned arch × shape grid.
 - paper-mlp0         : TPU-paper style 5-layer MLP (Fig 16, [9])
 - paper-captioning   : AlexNet-conv5 features -> GRU (Fig 14/15, [29])
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -39,7 +39,6 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.phases import Phase
@@ -118,11 +117,20 @@ class OpPlan:
     mem_bytes_per_device: float
     padding_waste: float                  # fraction of padded (wasted) compute
     rationale: str
+    # Phase -> (tm, tn, tk) chosen by the mapping autotuner (repro/tuner);
+    # None = the kernels' default tiles.  Attached by compile_program so
+    # table()/describe() render the FULL mapping, not just the strategy.
+    tiling: Optional[dict] = None
 
     def describe(self) -> str:
         c = {str(k): f"{v/1e6:.1f}MB" for k, v in self.comm_bytes.items() if v}
+        tiles = "default"
+        if self.tiling:
+            tiles = " ".join(f"{p}:{'x'.join(map(str, t))}"
+                             for p, t in self.tiling.items())
         return (f"{self.op.name:<16} {self.strategy:<9} spec={self.weight_spec} "
-                f"mem/dev={self.mem_bytes_per_device/1e6:7.1f}MB comm={c} :: {self.rationale}")
+                f"mem/dev={self.mem_bytes_per_device/1e6:7.1f}MB comm={c} "
+                f"tiles={tiles} :: {self.rationale}")
 
 
 @dataclass
@@ -169,6 +177,28 @@ class DataflowPlan:
 
 def _divisible(n: int, k: int) -> bool:
     return n % k == 0
+
+
+def step_tokens_per_shard(mesh: MeshSpec, *, global_batch: int, seq_len: int,
+                          kind: str) -> tuple:
+    """(tokens per dp shard, sharded batch axes) for one step.
+
+    The batch dim shards over every batch axis whose size divides the
+    remaining batch; decode processes ONE new token per sequence (seq_len
+    is the KV length).  Shared by plan_model and the mapping autotuner so
+    both price the same per-device activation volume.
+    """
+    batch_axes: list = []
+    rem = global_batch
+    for a in mesh.batch_axes:
+        sz = mesh.axis_sizes[a]
+        if rem % sz == 0:
+            batch_axes.append(a)
+            rem //= sz
+    step_tokens = global_batch * (1 if kind == "decode" else seq_len)
+    tokens = step_tokens / max(1, math.prod(
+        mesh.axis_sizes[a] for a in batch_axes) or 1)
+    return tokens, tuple(batch_axes)
 
 
 def _shardable_dim(op: OpSpec, tp: int) -> Optional[int]:
@@ -267,9 +297,11 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             if force == Strategy.PARTITION or (force is None
                                                and sum(comm.values()) <= rep_cost):
                 return ep_plan
-            if force is None:
+            if force is None or force == Strategy.REPLICATE:
                 # replicating the (small) expert tables beats routing:
-                # dense local compute, dW merged like any replicated op
+                # dense local compute, dW merged like any replicated op.
+                # force=REPLICATE honoured here too (the mapping autotuner
+                # echoes the planner's choice back as an override).
                 comm_rep = ({Phase.UP: 2.0 * W * grad_bytes / op.dtype_bytes}
                             if train else {})
                 nd = len(op.weight_shape)
@@ -405,19 +437,9 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
     """Plan every op; enforce the HBM budget by flipping the
     worst (mem saved / comm added) REPLICATE ops to PARTITION."""
     dp = mesh.dp
-    # batch dim sharding: all batch axes whose product divides global_batch
-    batch_axes: list = []
-    rem = global_batch
-    for a in mesh.batch_axes:
-        sz = mesh.axis_sizes[a]
-        if rem % sz == 0:
-            batch_axes.append(a)
-            rem //= sz
-    # decode processes ONE new token per step; seq_len is the KV length.
     nm = max(1, microbatch)
-    step_tokens = global_batch * (1 if kind == "decode" else seq_len)
-    tokens_per_dp = step_tokens / max(1, math.prod(
-        mesh.axis_sizes[a] for a in batch_axes) or 1)
+    tokens_per_dp, batch_axes = step_tokens_per_shard(
+        mesh, global_batch=global_batch, seq_len=seq_len, kind=kind)
 
     seq_shardable = kind != "decode" and _divisible(seq_len, mesh.tp)
     plan = DataflowPlan(mesh=mesh, kind=kind, batch_spec=tuple(batch_axes),

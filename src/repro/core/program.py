@@ -11,7 +11,6 @@ artifact the runtime, the dry-run, and the roofline analysis consume.
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -202,6 +201,17 @@ class PEWord:
     # matvec path with NO SR entropy stream (nothing persistent written).
     prefill_kernel: str = "sr_matmul"
     decode_kernel: str = "matvec"
+    # per-phase LoopNest tiles from the mapping autotuner (repro/tuner):
+    # (("FF", (tm, tn, tk)), ...) — a tuple-of-pairs (not a dict) so the
+    # word stays hashable on the custom_vjp nondiff path.  Empty = the
+    # kernels' default tiles.
+    tiling: tuple = ()
+
+    def tiling_for(self, phase: Phase) -> Optional[tuple]:
+        for ph, tile in self.tiling:
+            if ph == str(phase):
+                return tuple(tile)
+        return None
 
     def kernel_for(self, phase: Phase) -> str:
         if phase == Phase.FF:
@@ -235,6 +245,9 @@ class Program:
     policy: PrecisionPolicy
     plan: DataflowPlan
     ops: list
+    # autotuned per-phase tiles: op name -> {Phase: (tm, tn, tk)}.  Empty
+    # for an untuned program (kernels run their default tiles).
+    tilings: dict = field(default_factory=dict)
 
     def weight_spec(self, op_name: str, *, stacked: bool = True) -> P:
         """PartitionSpec for a param; `stacked` adds the scan (L,) dim."""
@@ -280,7 +293,15 @@ class Program:
             op=op_name, strategy=strategy,
             ff_dtype=jnp.dtype(self.policy.compute_dtype(Phase.FF)).name,
             bp_dtype=jnp.dtype(self.policy.compute_dtype(Phase.BP)).name,
-            update_rounding=self.policy.update_rounding)
+            update_rounding=self.policy.update_rounding,
+            tiling=self._tiling_word(op_name))
+
+    def _tiling_word(self, op_name: str) -> tuple:
+        """The op's tuned tiles as the hashable PEWord encoding."""
+        tiles = self.tilings.get(op_name)
+        if not tiles:
+            return ()
+        return tuple(sorted((str(ph), tuple(t)) for ph, t in tiles.items()))
 
     # --- reporting ---------------------------------------------------------
 
@@ -314,6 +335,7 @@ class Program:
                     comm = next((p.comm_bytes[q]
                                  for q in (Phase.PREFILL, Phase.DECODE)
                                  if q in p.comm_bytes), 0.0)
+                tile = word.tiling_for(ph)
                 entries.append({
                     "op": name, "phase": str(ph),
                     "strategy": str(p.strategy),
@@ -324,6 +346,7 @@ class Program:
                     "rounding": (word.update_rounding
                                  if ph == Phase.UP else "nearest"),
                     "kernel": word.kernel_for(ph),
+                    "tiling": list(tile) if tile else None,
                     "comm_bytes": float(comm or 0.0),
                 })
         return entries
@@ -352,20 +375,60 @@ class Program:
                   f"{self.ibuffer_size_bytes()} bytes")
 
 
+def _normalize_tuning(tuning) -> tuple:
+    """(strategy overrides, tilings) from a tuner result.
+
+    Accepts a ``repro.tuner.ProgramTuning`` (duck-typed via as_overrides/
+    as_tilings — core never imports the tuner package) or its ``to_dict()``
+    JSON form ``{op: {"strategy": str, "tiles": {phase: [tm, tn, tk]}}}``.
+    """
+    if tuning is None:
+        return {}, {}
+    if hasattr(tuning, "as_overrides"):
+        return tuning.as_overrides(), tuning.as_tilings()
+    ops = tuning.get("ops", tuning)
+    overrides: dict = {}
+    tilings: dict = {}
+    for name, t in ops.items():
+        if t.get("strategy"):
+            overrides[name] = Strategy(t["strategy"])
+        tiles = {Phase(p): tuple(v) for p, v in (t.get("tiles") or {}).items()}
+        if tiles:
+            tilings[name] = tiles
+    return overrides, tilings
+
+
 def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                     *, precision: str = "paper_sr_bf16", microbatch: int = 1,
-                    overrides: Optional[dict] = None) -> Program:
-    """The 'host' step of Fig 12: DNN description -> loaded iBuffer."""
+                    overrides: Optional[dict] = None,
+                    tuning=None) -> Program:
+    """The 'host' step of Fig 12: DNN description -> loaded iBuffer.
+
+    tuning: a ``repro.tuner.ProgramTuning`` (or its to_dict() form) — the
+    autotuner's strategy winners join ``overrides`` (explicit overrides
+    take precedence) and its per-phase tiles load into the program words.
+    """
+    import dataclasses
+
     policy = get_policy(precision)
     ops = extract_ops(cfg)
     import jax.numpy as jnp
     state_bytes = (policy.bytes_per_param_state if shape.kind == "train"
                    else jnp.dtype(policy.param_dtype).itemsize)
+    tuned_overrides, tilings = _normalize_tuning(tuning)
+    merged = dict(tuned_overrides)
+    merged.update(overrides or {})
     plan = plan_model(
         ops, mesh_spec, global_batch=shape.global_batch, seq_len=shape.seq_len,
         kind=shape.kind, microbatch=microbatch,
         state_bytes_per_param=state_bytes,
         overrides={k: Strategy(v) if not isinstance(v, Strategy) else v
-                   for k, v in (overrides or {}).items()})
+                   for k, v in merged.items()})
+    # render the tuned tiles into the plan rows so table()/describe() (and
+    # the dry-run artifact) show the FULL mapping, not just the strategy
+    for name, tiles in tilings.items():
+        if name in plan.ops:
+            plan.ops[name] = dataclasses.replace(plan.ops[name],
+                                                 tiling=dict(tiles))
     return Program(cfg=cfg, shape=shape, mesh_spec=mesh_spec, policy=policy,
-                   plan=plan, ops=ops)
+                   plan=plan, ops=ops, tilings=tilings)

@@ -26,7 +26,6 @@ reproduction (fp32 vs fx32 vs fx32+SR vs fx32+SR-LO on an RNN).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

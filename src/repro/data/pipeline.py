@@ -21,8 +21,6 @@ import threading
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -86,16 +86,23 @@ class _StaticCfg:
     block: tuple
     transpose_w: bool
 
+    def block_for(self, phase: Phase) -> tuple:
+        """The phase's LoopNest tiles: the word's autotuned entry when the
+        program was tuned (repro/tuner), else the call-site default."""
+        t = self.word.tiling_for(phase)
+        return t if t is not None else self.block
+
 
 # ---------------------------------------------------------------------------
 # Pallas path: three-phase custom_vjp
 # ---------------------------------------------------------------------------
 
 
-def _ff(cfg: _StaticCfg, x2: jax.Array, w: jax.Array) -> jax.Array:
+def _ff(cfg: _StaticCfg, x2: jax.Array, w: jax.Array,
+        phase: Phase = Phase.FF) -> jax.Array:
     ffdt = jnp.dtype(cfg.word.ff_dtype)
     y = kops.sr_matmul(x2.astype(ffdt), w.astype(ffdt), None, sr=False,
-                       block=cfg.block, interpret=cfg.interpret,
+                       block=cfg.block_for(phase), interpret=cfg.interpret,
                        trans_b=cfg.transpose_w)
     return y.astype(x2.dtype)
 
@@ -118,7 +125,7 @@ def _pe_matmul_bwd(cfg, res, g):
     # (trans_b), never materialised.  f32 accumulation, no SR (the gradient
     # signal is transient, not persistent state).
     dx = kops.sr_matmul(g.astype(bpdt), w.astype(bpdt), None, sr=False,
-                        block=cfg.block, interpret=cfg.interpret,
+                        block=cfg.block_for(Phase.BP), interpret=cfg.interpret,
                         trans_b=not cfg.transpose_w)
     dx = dx.astype(x2.dtype)
     # UP: dW = X^T dY in ONE pass of the fused outer-product kernel; the
@@ -130,7 +137,8 @@ def _pe_matmul_bwd(cfg, res, g):
     dw = kops.outer_accum(xt.astype(bpdt), dyt.astype(bpdt),
                           up_key(key, dyt),
                           sr=sr, lo=word.update_rounding == "sr_lo",
-                          block=cfg.block, interpret=cfg.interpret)
+                          block=cfg.block_for(Phase.UP),
+                          interpret=cfg.interpret)
     dw = dw.astype(w.dtype)
     return dx, dw, np.zeros(key.shape, jdtypes.float0)
 
@@ -165,18 +173,20 @@ def _matvec(x: jax.Array, w: jax.Array, word: PEWord,
     return y.astype(x.dtype)
 
 
-def _pallas_fwd(x: jax.Array, w: jax.Array, cfg: "_StaticCfg") -> jax.Array:
+def _pallas_fwd(x: jax.Array, w: jax.Array, cfg: "_StaticCfg",
+                phase: Phase = Phase.PREFILL) -> jax.Array:
     """The PREFILL program word: the FF MAC-array kernel, forward-only.
 
     A prompt chunk is a batch of rows on the MAC array — same compute-bound
     flow as FF, minus the backward machinery (no residuals saved, no
-    entropy key threaded).
+    entropy key threaded).  `phase` selects the word's tuned tiling (a
+    DECODE word programmed onto the MAC array keeps its own tiles).
     """
     if w.ndim == 3:                      # one PE program word per expert
-        return jax.vmap(lambda xe, we: _pallas_fwd(xe, we, cfg))(x, w)
+        return jax.vmap(lambda xe, we: _pallas_fwd(xe, we, cfg, phase))(x, w)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y2 = _ff(cfg, x2, w)
+    y2 = _ff(cfg, x2, w, phase)
     n = w.shape[0] if cfg.transpose_w else w.shape[-1]
     return y2.reshape(*lead, n)
 
@@ -223,6 +233,10 @@ def pe_dot(x: jax.Array, w: jax.Array, *,
     `phase` selects the word's kernel: FF (default) rides the three-phase
     custom_vjp (autodiff dispatches BP/UP); PREFILL and DECODE are the
     forward-only serving words.
+
+    `block` is the untuned default tiling; a word carrying autotuned
+    ``PEWord.tiling`` entries (repro/tuner) overrides it per phase, so a
+    tuned program's mapping is what actually executes.
     """
     if word is None:
         word = DEFAULT_WORD
@@ -239,7 +253,7 @@ def pe_dot(x: jax.Array, w: jax.Array, *,
             return _matvec(x, w, word, transpose_w)
         return _pallas_fwd(x, w, _StaticCfg(word=word, interpret=interpret,
                                             block=block,
-                                            transpose_w=transpose_w))
+                                            transpose_w=transpose_w), phase)
     cfg = _StaticCfg(word=word, interpret=interpret, block=block,
                      transpose_w=transpose_w)
     if key is None:

@@ -26,15 +26,25 @@ _LOW_MASK = 0xFFFF
 
 
 def _outer_kernel(x_ref, dy_ref, r_ref, o_ref, acc_ref, *,
-                  n_l: int, scale: float, sr: bool):
+                  n_l: int, scale: float, sr: bool, t_rem: int = 0):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    x = x_ref[...]
+    dy = dy_ref[...]
+    if t_rem:
+        # ragged token tail: pad rows of an input block are UNDEFINED
+        # (NaN in interpret mode, garbage on TPU) — zero BOTH operands
+        # past T on the contraction axis.  Static no-op when bt | T.
+        lim = jnp.where(pl.program_id(2) == n_l - 1, t_rem, x.shape[0])
+        tx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        x = jnp.where(tx < lim, x, jnp.zeros_like(x))
+        ty = jax.lax.broadcasted_iota(jnp.int32, dy.shape, 0)
+        dy = jnp.where(ty < lim, dy, jnp.zeros_like(dy))
     # x tile arrives as (tl, ti): contract over tokens on the LEFT operand
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], dy_ref[...],
-        dimension_numbers=(((0,), (0,)), ((), ())),
+        x, dy, dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_l - 1)
@@ -66,7 +76,7 @@ def outer_accum(x: jax.Array, dy: jax.Array, *, scale: float = 1.0,
     if not sr:
         rbits = jnp.zeros((d, f), jnp.uint32)
     kernel = functools.partial(_outer_kernel, n_l=nest.dim("l").steps,
-                               scale=scale, sr=sr)
+                               scale=scale, sr=sr, t_rem=t % bt)
     return pl.pallas_call(
         kernel,
         grid=nest.grid,

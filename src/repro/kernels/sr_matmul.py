@@ -26,22 +26,34 @@ _LOW_MASK = 0xFFFF
 
 
 def _mm_kernel(a_ref, b_ref, r_ref, o_ref, acc_ref, *, n_l: int, sr: bool,
-               trans_b: bool = False):
+               trans_b: bool = False, k_rem: int = 0):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    a = a_ref[...]
+    b = b_ref[...]
+    if k_rem:
+        # ragged reduction tail: the last l-step's tile hangs past K, and
+        # the pad region of an input block is UNDEFINED (NaN in interpret
+        # mode, garbage on TPU) — mask BOTH operands to zero there
+        # (0 * NaN is still NaN, so masking one side is not enough).
+        # Static no-op when the tile divides K.
+        lim = jnp.where(pl.program_id(2) == n_l - 1, k_rem, a.shape[1])
+        ka = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        a = jnp.where(ka < lim, a, jnp.zeros_like(a))
+        kb_axis = 1 if trans_b else 0
+        kb = jax.lax.broadcasted_iota(jnp.int32, b.shape, kb_axis)
+        b = jnp.where(kb < lim, b, jnp.zeros_like(b))
     if trans_b:
         # B tile arrives as (tj, tl): contract the trailing axis of BOTH
         # operands — the PMAG counter-swept W^T (BP), no materialised
         # transpose.
         acc_ref[...] += jax.lax.dot_general(
-            a_ref[...], b_ref[...],
-            dimension_numbers=(((1,), (1,)), ((), ())),
+            a, b, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
     else:
-        acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                                preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_l - 1)
     def _write():
@@ -80,7 +92,7 @@ def sr_matmul(a: jax.Array, b: jax.Array,
         rbits = jnp.zeros((m, n), jnp.uint32)
     out_dtype = jnp.bfloat16 if sr else jnp.float32
     kernel = functools.partial(_mm_kernel, n_l=nest.dim("l").steps, sr=sr,
-                               trans_b=trans_b)
+                               trans_b=trans_b, k_rem=k % bk)
     return pl.pallas_call(
         kernel,
         grid=nest.grid,

@@ -34,16 +34,33 @@ def _named(mesh, specs):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def tune_cell(arch: str, shape_name: str, mesh, *,
+              train_cfg: TrainConfig | None = None):
+    """Run the mapping autotuner (cost model only) for one cell, under the
+    SAME microbatch/backend the cell will compile with (GATHER comm scales
+    with microbatch, so tuning under a different one skews the search)."""
+    from repro.core import extract_ops
+    from repro.tuner import tune_program
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tc = train_cfg or TrainConfig()
+    return tune_program(extract_ops(cfg), mesh_spec_for(mesh),
+                        global_batch=shape.global_batch,
+                        seq_len=shape.seq_len, kind=shape.kind,
+                        backend=tc.kernel_backend,
+                        microbatch=max(1, tc.microbatch))
+
+
 def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
-               train_cfg: TrainConfig, overrides=None):
+               train_cfg: TrainConfig, overrides=None, tuning=None):
     """Build program + jit + lower for one cell.  Returns (lowered, program,
     extra) without compiling (so callers can reuse for perf iteration)."""
-    from jax.sharding import PartitionSpec as P
-
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     program = compile_program(cfg, shape, mesh_spec_for(mesh),
                               precision=precision, overrides=overrides,
+                              tuning=tuning,
                               microbatch=max(1, train_cfg.microbatch))
     batch_specs = _named(mesh, tl.batch_pspecs(cfg, shape, program))
     bshapes = input_specs(cfg, shape)
@@ -88,16 +105,20 @@ def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
 
 
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
-             precision: str, train_cfg: TrainConfig, overrides=None) -> dict:
+             precision: str, train_cfg: TrainConfig, overrides=None,
+             tuned: bool = False) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skip", "reason": why}
+    tuning = (tune_cell(arch, shape_name, mesh, train_cfg=train_cfg)
+              if tuned else None)
     t0 = time.monotonic()
     lowered, program = lower_cell(arch, shape_name, mesh, precision=precision,
-                                  train_cfg=train_cfg, overrides=overrides)
+                                  train_cfg=train_cfg, overrides=overrides,
+                                  tuning=tuning)
     t_lower = time.monotonic() - t0
     t0 = time.monotonic()
     compiled = lowered.compile()
@@ -148,6 +169,9 @@ def main():
     ap.add_argument("--remat", default="block")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="run the mapping autotuner per cell; the plan "
+                         "table then shows the chosen tilings")
     args = ap.parse_args()
 
     jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
@@ -174,7 +198,7 @@ def main():
                 try:
                     r = run_cell(arch, shape_name, mesh, mesh_name,
                                  precision=args.precision,
-                                 train_cfg=train_cfg)
+                                 train_cfg=train_cfg, tuned=args.tuned)
                 except Exception as e:
                     r = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                          "status": "error", "error": f"{type(e).__name__}: {e}",

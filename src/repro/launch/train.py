@@ -11,7 +11,6 @@ straggler detection, stateless-by-step data pipeline).
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +42,9 @@ def main(argv=None):
                     choices=("reference", "pallas"),
                     help="engine matmul path: reference jnp or the Pallas "
                          "PE kernels (interpret mode on CPU)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="run the mapping autotuner and execute the tuned "
+                         "strategy/tiling winners (repro/tuner)")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--remat", default="block")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
@@ -59,8 +61,18 @@ def main(argv=None):
         shape = ShapeConfig("custom", seq_len=args.seq,
                             global_batch=args.batch, kind="train")
     mesh = make_host_mesh()
+    tuning = None
+    if args.tuned:
+        from repro.core import extract_ops
+        from repro.tuner import tune_program
+        tuning = tune_program(extract_ops(cfg), mesh_spec_for(mesh),
+                              global_batch=shape.global_batch,
+                              seq_len=shape.seq_len, kind=shape.kind,
+                              backend=args.kernel_backend,
+                              microbatch=max(1, args.microbatch))
+        print(tuning.describe())
     program = compile_program(cfg, shape, mesh_spec_for(mesh),
-                              precision=args.precision,
+                              precision=args.precision, tuning=tuning,
                               microbatch=max(1, args.microbatch))
     print(program.describe())
 

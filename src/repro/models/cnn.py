@@ -9,8 +9,6 @@ kernels/ and analysed in the roofline.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
-
 import jax
 import jax.numpy as jnp
 

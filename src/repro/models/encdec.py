@@ -17,8 +17,8 @@ from repro.configs.base import ModelConfig
 from repro.models.attention import (attention_block, attn_params,
                                     decode_attend, init_kv_cache, split_qkv,
                                     update_cache)
-from repro.models.layers import (Sharder, apply_norm, cross_entropy, embed,
-                                 mlp, mlp_params, norm_params)
+from repro.models.layers import (Sharder, apply_norm, embed, mlp,
+                                 mlp_params, norm_params)
 
 
 def init(key, cfg: ModelConfig) -> dict:

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +25,8 @@ from repro.models.attention import (attention_block, attn_params,
                                     chunk_attend, decode_attend,
                                     init_kv_cache, split_qkv, update_cache,
                                     update_cache_chunk)
-from repro.models.layers import (Sharder, apply_norm, apply_rope,
-                                 cross_entropy, embed, lm_logits, mlp,
-                                 mlp_params, norm_params)
+from repro.models.layers import (Sharder, apply_norm, apply_rope, embed,
+                                 lm_logits, mlp, mlp_params, norm_params)
 from repro.models.moe import moe_block, moe_params
 
 

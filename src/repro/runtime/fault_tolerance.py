@@ -55,7 +55,7 @@ class StepTimer:
 def elastic_replan(cfg, shape, new_mesh, host_state, train_cfg,
                    precision: str):
     """Re-plan + re-place state for a changed mesh (elastic scaling)."""
-    from repro.core import MeshSpec, compile_program
+    from repro.core import compile_program
     from repro.launch.mesh import mesh_spec_for
     from repro.runtime import train_loop as tl
 

@@ -14,9 +14,7 @@ over the data axis (ZeRO-1) when divisible.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

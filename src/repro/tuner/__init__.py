@@ -1,0 +1,33 @@
+"""Mapping autotuner: search per-op tilings + strategies, execute winners.
+
+The "intelligent" in the paper's intelligent memory module, made real:
+instead of three fixed strategies with hard-coded tiles, the tuner searches
+the joint (Strategy x LoopNest tiling) space per (op x phase x backend)
+against a bytes-moved + roofline cost model, optionally refines the top-K
+by on-device timing, persists winners in a JSON cache, and threads the
+chosen tiles into the executable program words (``PEWord.tiling``) so the
+tuned mapping is what the PE engine actually runs.
+
+    from repro.tuner import tune_program, TuningCache
+    tuning = tune_program(extract_ops(cfg), mesh_spec, global_batch=...,
+                          seq_len=..., kind="train")
+    program = compile_program(cfg, shape, mesh_spec, tuning=tuning.to_dict())
+
+CLI: ``python -m repro.launch.tune`` — see docs/PROGRAMMING_MODEL.md §6.
+"""
+from repro.tuner.cache import (DEFAULT_CACHE_PATH, TuningCache, cache_key,
+                               mesh_tag)
+from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
+                              candidate_tiles, conv_im2col_gemm,
+                              gemm_for_phase, tile_cost)
+from repro.tuner.search import (OpTuning, ProgramTuning, TunedGemm,
+                                default_tile_for, speedup_model, tune_gemm,
+                                tune_op, tune_program)
+
+__all__ = [
+    "DEFAULT_CACHE_PATH", "TuningCache", "cache_key", "mesh_tag",
+    "DEFAULT_TILE", "GemmShape", "TileCost", "candidate_tiles",
+    "conv_im2col_gemm", "gemm_for_phase", "tile_cost",
+    "OpTuning", "ProgramTuning", "TunedGemm", "default_tile_for",
+    "speedup_model", "tune_gemm", "tune_op", "tune_program",
+]

@@ -1,0 +1,120 @@
+"""Persistent tuning cache: (op shape x phase x mesh x backend) -> tile.
+
+JSON on disk so a tuned config pays the search (and any on-device timing)
+once.  Format — one flat object under "entries", human-diffable:
+
+    {
+      "version": 1,
+      "entries": {
+        "m4096n11008k4096|FF|data16-model16|pallas": {
+          "tile": [256, 512, 512],
+          "time_s": 1.93e-4,
+          "source": "model"            // model | measured
+        },
+        ...
+      }
+    }
+
+The key is the GemmShape tag (local per-device gemm, SR flag included),
+the phase, the mesh tag, and the kernel backend — everything the winning
+tile can depend on.  Entries are insert-ordered; `merge=True` loads keep
+existing in-memory winners (a measured entry is never clobbered by a
+model-only one).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.core.dataflow import MeshSpec
+from repro.core.phases import Phase
+from repro.tuner.cost import GemmShape
+
+CACHE_VERSION = 1
+DEFAULT_CACHE_PATH = "artifacts/tuner/cache.json"
+
+
+def mesh_tag(mesh: MeshSpec) -> str:
+    return "-".join(f"{a}{s}" for a, s in sorted(mesh.axis_sizes.items()))
+
+
+def cache_key(shape: GemmShape, phase: Phase, mesh: str, backend: str) -> str:
+    return f"{shape.tag()}|{phase}|{mesh}|{backend}"
+
+
+class TuningCache:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def get(self, shape: GemmShape, phase: Phase, mesh: str,
+            backend: str) -> Optional[dict]:
+        e = self.entries.get(cache_key(shape, phase, mesh, backend))
+        if e is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return e
+
+    def put(self, shape: GemmShape, phase: Phase, mesh: str, backend: str,
+            *, tile: tuple, time_s: float, source: str = "model",
+            measured_us: Optional[float] = None) -> None:
+        """time_s is always the MODEL estimate (comparable across entries);
+        measured_us records the probe timing that picked the tile, for
+        provenance only."""
+        key = cache_key(shape, phase, mesh, backend)
+        old = self.entries.get(key)
+        if old is not None and old.get("source") == "measured" \
+                and source != "measured":
+            return                       # never downgrade a measured entry
+        entry = {"tile": list(tile), "time_s": float(time_s),
+                 "source": source}
+        if measured_us is not None:
+            entry["measured_us"] = float(measured_us)
+        self.entries[key] = entry
+
+    def load(self, path: Optional[str] = None, *, merge: bool = True) -> None:
+        path = path or self.path
+        assert path is not None
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("version") != CACHE_VERSION:
+            raise ValueError(f"tuner cache {path}: unknown version "
+                             f"{data.get('version')!r}")
+        if merge:
+            for k, v in data.get("entries", {}).items():
+                old = self.entries.get(k)
+                if old is not None and old.get("source") == "measured" \
+                        and v.get("source") != "measured":
+                    continue
+                self.entries[k] = v
+        else:
+            self.entries = dict(data.get("entries", {}))
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        assert path is not None, "no cache path given"
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": self.entries},
+                      f, indent=1)
+        return path
+
+    def describe(self) -> str:
+        rows = [f"  {k:<56} tile={'x'.join(map(str, v['tile']))} "
+                f"t={v['time_s']*1e6:9.1f}us [{v['source']}]"
+                for k, v in sorted(self.entries.items())]
+        hdr = (f"TuningCache[{self.path or '(memory)'}] "
+               f"{len(self.entries)} entries, hits={self.hits} "
+               f"misses={self.misses}")
+        return "\n".join([hdr] + rows)

@@ -1,0 +1,203 @@
+"""Tiling cost model: bytes-moved + roofline for one PMAG loop nest.
+
+The paper's host picks the memory mapping per kernel by estimating data
+movement (§3.1-3.2); Memory Slices (arXiv:1803.06068) makes the same call
+against a bytes-moved model.  This module is that model for the Pallas
+analogue: given a gemm (M, N, K) and a candidate tile (tm, tn, tk), it
+prices the HBM traffic implied by the (i, j, l) loop nest of
+``kernels/sr_matmul.py`` / ``kernels/outer_accum.py``:
+
+  A bytes   : every (i, j) output tile streams A(i, :) — A is read
+              ceil(N/tn) times end to end,
+  B bytes   : symmetrically, B is read ceil(M/tm) times,
+  out bytes : the f32 accumulator tile stays resident in VMEM across l
+              (the paper's partial-sum output buffer), so the output and
+              the SR entropy tile move exactly once.
+
+The roofline term converts traffic to time against the v5e constants in
+``core/dataflow.py`` (also used by ``analysis/roofline.py``), the compute
+term charges MXU padding for tiles off the (16, 128) bf16 grain, and a
+VMEM budget rules out tiles whose double-buffered working set does not
+fit on chip.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.dataflow import (HBM_BW, OpSpec, PEAK_FLOPS_BF16, Strategy,
+                                 _shardable_dim)
+from repro.core.phases import Phase
+
+# Pallas guide: ~16 MB VMEM/core; leave headroom for the kernel's own
+# spills and the double-buffering pipeline state.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET = int(0.75 * VMEM_BYTES)
+# bf16 native tile grain on the MXU: (sublane, lane) = (16, 128).
+SUBLANE, LANE = 16, 128
+# Fixed per-grid-step cost (dispatch + pipeline bubble): dominates when a
+# tiling shatters the nest into thousands of tiny steps.
+GRID_STEP_S = 2e-7
+
+DEFAULT_TILE = (256, 256, 512)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_up(x: int, g: int) -> int:
+    return _ceil_div(x, g) * g
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    """One phase of one op as the MAC array sees it: (M, K) @ (K, N)."""
+    m: int
+    n: int
+    k: int
+    a_bytes: int = 2                  # bf16 operands
+    b_bytes: int = 2
+    out_bytes: int = 2
+    rbits: bool = False               # SR writeback reads a u32 entropy tile
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.k
+
+    def tag(self) -> str:
+        sr = "+sr" if self.rbits else ""
+        return f"m{self.m}n{self.n}k{self.k}{sr}"
+
+
+@dataclass(frozen=True)
+class TileCost:
+    tile: tuple                       # (tm, tn, tk)
+    time_s: float                     # roofline estimate (inf if infeasible)
+    hbm_bytes: float
+    flops_padded: float
+    vmem_bytes: int
+    grid_steps: int
+    feasible: bool
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of MXU work spent on pad lanes/sublanes."""
+        if self.flops_padded <= 0:
+            return 0.0
+        return 1.0 - min(1.0, self._useful / self.flops_padded)
+
+    # stashed by tile_cost (useful flops of the unpadded problem)
+    _useful: float = 0.0
+
+
+def clip_tile(shape: GemmShape, tile: tuple) -> tuple:
+    """Clamp a tile to the problem dims (the kernels do the same)."""
+    tm, tn, tk = tile
+    return (min(tm, shape.m), min(tn, shape.n), min(tk, shape.k))
+
+
+def tile_cost(shape: GemmShape, tile: tuple) -> TileCost:
+    """Price one candidate tiling of the canonical (i, j, l) nest."""
+    tm, tn, tk = clip_tile(shape, tile)
+    si = _ceil_div(shape.m, tm)
+    sj = _ceil_div(shape.n, tn)
+    sl = _ceil_div(shape.k, tk)
+    steps = si * sj * sl
+
+    # HBM traffic under the nest's re-read pattern (tiles move whole, so a
+    # ragged edge still pays the full tile).
+    a_traffic = si * sl * tm * tk * shape.a_bytes * sj
+    b_traffic = sl * sj * tk * tn * shape.b_bytes * si
+    out_traffic = si * sj * tm * tn * (shape.out_bytes
+                                       + (4 if shape.rbits else 0))
+    hbm = float(a_traffic + b_traffic + out_traffic)
+
+    # MXU compute with tiles padded to the bf16 (16, 128) grain.
+    flops_padded = (2.0 * steps * _pad_up(tm, SUBLANE) * _pad_up(tn, LANE)
+                    * _pad_up(tk, LANE))
+
+    # Double-buffered working set: operand tiles + entropy/output tiles x2,
+    # plus the single resident f32 accumulator.
+    vmem = 2 * ((tm * tk) * shape.a_bytes + (tk * tn) * shape.b_bytes
+                + tm * tn * ((4 if shape.rbits else 0) + shape.out_bytes))
+    vmem += tm * tn * 4
+    feasible = vmem <= VMEM_BUDGET
+
+    t = max(flops_padded / PEAK_FLOPS_BF16, hbm / HBM_BW) + steps * GRID_STEP_S
+    return TileCost(tile=(tm, tn, tk),
+                    time_s=t if feasible else math.inf,
+                    hbm_bytes=hbm, flops_padded=flops_padded,
+                    vmem_bytes=vmem, grid_steps=steps, feasible=feasible,
+                    _useful=shape.flops)
+
+
+def candidate_tiles(shape: GemmShape, extra: tuple = ()) -> list:
+    """The search grid: power-of-two tiles on the MXU grain, clipped to the
+    problem, plus any caller-supplied extras (always includes DEFAULT_TILE
+    so the tuner can never regress the status quo)."""
+    tms = {min(t, shape.m) for t in (64, 128, 256, 512)}
+    tns = {min(t, shape.n) for t in (128, 256, 512)}
+    tks = {min(t, shape.k) for t in (128, 256, 512, 1024)}
+    cands = {(tm, tn, tk) for tm in tms for tn in tns for tk in tks}
+    cands.add(clip_tile(shape, DEFAULT_TILE))
+    for t in extra:
+        cands.add(clip_tile(shape, tuple(t)))
+    return sorted(cands)
+
+
+# ---------------------------------------------------------------------------
+# OpSpec x Phase -> GemmShape
+# ---------------------------------------------------------------------------
+
+
+def _local_weight(op: OpSpec, tp: int, strategy: Strategy) -> tuple:
+    """Per-device (K, N) of the weight during COMPUTE for a strategy.
+
+    3D expert tables tune the per-expert gemm (the PE word is vmapped over
+    the expert dim); PARTITION divides the shardable dim by tp; GATHER and
+    REPLICATE compute against the full (broadcast / duplicated) weight.
+    """
+    wshape = list(op.weight_shape[-2:])
+    if strategy == Strategy.PARTITION and tp > 1:
+        sd = _shardable_dim(op, tp)
+        if sd is not None and sd >= len(op.weight_shape) - 2:
+            local = sd - (len(op.weight_shape) - 2)
+            wshape[local] = max(1, wshape[local] // tp)
+    return tuple(wshape)
+
+
+def gemm_for_phase(op: OpSpec, phase: Phase, *, tokens: float,
+                   tp: int = 1, strategy: Strategy = Strategy.REPLICATE,
+                   seq_shardable: bool = False,
+                   sr_update: bool = True) -> Optional[GemmShape]:
+    """The local matmul one phase of this op runs under a strategy.
+
+    tokens: rows fed to the op per device per step (B*S/dp; decode: B/dp).
+    REPLICATE with a shardable sequence also splits the token dim over tp
+    (the planner's batch/seq-partitioned flow).
+    """
+    kw, nw = _local_weight(op, tp, strategy)
+    t = tokens
+    if strategy == Strategy.REPLICATE and seq_shardable and tp > 1:
+        t = tokens / tp
+    t = max(1, int(round(t)))
+    if phase in (Phase.FF, Phase.PREFILL, Phase.DECODE):
+        return GemmShape(m=t, n=nw, k=kw)
+    if phase == Phase.BP:
+        # dX = dY @ W^T — counter-swept read, contraction over N.
+        return GemmShape(m=t, n=kw, k=nw)
+    if phase == Phase.UP:
+        # dW = X^T dY — outer_accum's (i, j, l) = (K, N, tokens) nest.
+        return GemmShape(m=kw, n=nw, k=t, rbits=sr_update)
+    return None
+
+
+def conv_im2col_gemm(*, batch: int, out_hw: int, kernel: int, in_ch: int,
+                     out_ch: int) -> GemmShape:
+    """The paper's Fig 6 conv lowering as a gemm: im2col patches
+    (B*Ho*Wo, k*k*Ci) @ (k*k*Ci, Co) — what `cnn.conv_up_as_matmul`
+    executes tap by tap, priced here as the fused whole."""
+    return GemmShape(m=batch * out_hw * out_hw,
+                     n=out_ch, k=kernel * kernel * in_ch)

@@ -1,0 +1,266 @@
+"""Mapping autotuner: joint (Strategy x tiling) search per op and phase.
+
+Closes the loop the planner leaves open: ``dataflow.plan_op`` scores the
+three dataflow strategies on ICI bytes alone, with the kernel tiling fixed
+at the module default.  The tuner searches the JOINT space — for every
+candidate strategy it prices the per-device gemm each phase actually runs
+(``cost.gemm_for_phase``) over the tile grid (``cost.candidate_tiles``),
+adds the strategy's comm time (reusing ``plan_op``'s bytes-moved model),
+and keeps the cheapest total.  Winners thread into the compiled program
+(``compile_program(tuning=...)``) as strategy overrides + per-phase
+``PEWord.tiling`` entries, so the tuned mapping is what executes.
+
+Optionally the top-K model candidates are re-ranked by on-device timing
+(``measure=``, a ``tile -> seconds`` callable); results persist in a
+:class:`~repro.tuner.cache.TuningCache` keyed by op shape/phase/mesh/
+backend, so a tuned config pays the search once.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.dataflow import (ICI_BW, MeshSpec, OpSpec, Strategy,
+                                 _divisible, _shardable_dim, plan_model,
+                                 plan_op, step_tokens_per_shard)
+from repro.core.phases import Phase
+from repro.tuner.cache import TuningCache, mesh_tag
+from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
+                              candidate_tiles, gemm_for_phase, tile_cost)
+
+PHASES_FOR_KIND = {
+    "train": (Phase.FF, Phase.BP, Phase.UP),
+    "prefill": (Phase.PREFILL,),
+    "decode": (Phase.PREFILL, Phase.DECODE),
+}
+
+
+@dataclass(frozen=True)
+class TunedGemm:
+    shape: GemmShape
+    best: TileCost
+    n_candidates: int
+    measured_us: Optional[float] = None   # on-device time of `best.tile`
+    source: str = "model"                 # model | measured | cache
+
+
+def tune_gemm(shape: GemmShape, *, top_k: int = 0,
+              measure: Optional[Callable] = None,
+              extra_tiles: tuple = ()) -> TunedGemm:
+    """Pick the cheapest feasible tiling for one gemm.
+
+    measure: optional ``tile -> seconds`` callable; when given, the top_k
+    candidates by model cost are re-RANKED by measured time.  The
+    measurement only picks the winner — the returned/propagated cost stays
+    the winner's MODEL time, because the probe runs a capped shape (and in
+    interpret mode on CPU), so its absolute seconds are not on the same
+    scale as the model estimates the strategy comparison sums.
+    """
+    cands = candidate_tiles(shape, extra=extra_tiles)
+    scored = sorted((tile_cost(shape, t) for t in cands),
+                    key=lambda c: (c.time_s, c.grid_steps))
+    best = scored[0]
+    if measure is None or top_k <= 1:
+        return TunedGemm(shape=shape, best=best, n_candidates=len(cands))
+    timed = []
+    for c in scored[:top_k]:
+        if not c.feasible:
+            continue
+        timed.append((measure(c.tile), c))
+    if not timed:
+        return TunedGemm(shape=shape, best=best, n_candidates=len(cands))
+    t_s, c = min(timed, key=lambda tc: tc[0])
+    return TunedGemm(shape=shape, best=c, n_candidates=len(cands),
+                     measured_us=t_s * 1e6, source="measured")
+
+
+@dataclass
+class OpTuning:
+    """The winning mapping for one op: strategy + per-phase tiles."""
+    op: str
+    strategy: Strategy
+    tiles: dict = field(default_factory=dict)        # Phase -> (tm, tn, tk)
+    kernel_s: dict = field(default_factory=dict)     # Phase -> model seconds
+    comm_s: float = 0.0
+    total_s: float = 0.0
+    source: str = "model"
+
+    def to_dict(self) -> dict:
+        return {
+            "strategy": str(self.strategy),
+            "tiles": {str(p): list(t) for p, t in self.tiles.items()},
+            "kernel_s": {str(p): s for p, s in self.kernel_s.items()},
+            "comm_s": self.comm_s,
+            "total_s": self.total_s,
+            "source": self.source,
+        }
+
+
+@dataclass
+class ProgramTuning:
+    """Tuned mapping for one (model x shape x mesh x backend) cell."""
+    mesh: MeshSpec
+    kind: str
+    backend: str
+    ops: dict = field(default_factory=dict)          # name -> OpTuning
+
+    def as_overrides(self) -> dict:
+        return {name: t.strategy for name, t in self.ops.items()}
+
+    def as_tilings(self) -> dict:
+        return {name: dict(t.tiles) for name, t in self.ops.items()}
+
+    def to_dict(self) -> dict:
+        return {
+            "mesh": mesh_tag(self.mesh),
+            "kind": self.kind,
+            "backend": self.backend,
+            "ops": {k: v.to_dict() for k, v in self.ops.items()},
+        }
+
+    def describe(self) -> str:
+        rows = []
+        for name in sorted(self.ops):
+            t = self.ops[name]
+            tiles = " ".join(f"{p}:{'x'.join(map(str, tl))}"
+                             for p, tl in t.tiles.items())
+            rows.append(f"  {name:<16} {t.strategy:<9} "
+                        f"t={t.total_s*1e6:9.1f}us "
+                        f"(comm={t.comm_s*1e6:8.1f}us) {tiles} [{t.source}]")
+        hdr = (f"ProgramTuning kind={self.kind} backend={self.backend} "
+               f"mesh={mesh_tag(self.mesh)}")
+        return "\n".join([hdr] + rows)
+
+
+def _strategy_candidates(op: OpSpec, mesh: MeshSpec) -> list:
+    if op.role in ("expert_in", "expert_out") and op.top_k > 0:
+        # experts: the planner's EP-vs-replicate call is already a cost
+        # decision; tune tiles under whichever it picks
+        return [None]
+    cands = [Strategy.REPLICATE]
+    if mesh.tp > 1 and _shardable_dim(op, mesh.tp) is not None:
+        cands += [Strategy.PARTITION, Strategy.GATHER]
+    return cands
+
+
+def _score_strategy(op: OpSpec, mesh: MeshSpec, force: Optional[Strategy], *,
+                    kind: str, tokens_per_dp_shard: float,
+                    seq_shardable: bool, backend: str, sr_update: bool,
+                    cache: Optional[TuningCache],
+                    measure: Optional[Callable],
+                    top_k: int, microbatch: int) -> OpTuning:
+    """Tile every phase of one op under one strategy; price comm + kernels."""
+    phases = PHASES_FOR_KIND[kind]
+    tag = mesh_tag(mesh)
+    plan = plan_op(op, mesh, tokens_per_dp_shard=tokens_per_dp_shard,
+                   kind=kind, force=force, seq_shardable=seq_shardable,
+                   microbatch=microbatch)
+    comm_s = sum(plan.comm_bytes.values()) / ICI_BW
+    cand = OpTuning(op=op.name, strategy=plan.strategy, comm_s=comm_s)
+    total = comm_s
+    for phase in phases:
+        shape = gemm_for_phase(op, phase, tokens=tokens_per_dp_shard,
+                               tp=mesh.tp, strategy=plan.strategy,
+                               seq_shardable=seq_shardable,
+                               sr_update=sr_update)
+        if shape is None:
+            continue
+        hit = (cache.get(shape, phase, tag, backend)
+               if cache is not None else None)
+        if hit is not None:
+            tile = tuple(hit["tile"])
+            t_s = float(hit["time_s"])
+            cand.source = "cache"
+        else:
+            tuned = tune_gemm(shape, top_k=top_k, measure=measure)
+            tile = tuned.best.tile
+            # model time even when measured: the probe's absolute seconds
+            # are a different scale (capped shape, interpret mode) — the
+            # measurement chose the tile, the model prices it comparably
+            t_s = tuned.best.time_s
+            if tuned.source == "measured":
+                cand.source = "measured"
+            if cache is not None:
+                cache.put(shape, phase, tag, backend,
+                          tile=tile, time_s=t_s, source=tuned.source,
+                          measured_us=tuned.measured_us)
+        cand.tiles[phase] = tile
+        cand.kernel_s[phase] = t_s
+        total += t_s * op.n_layers
+    cand.total_s = total
+    return cand
+
+
+def tune_op(op: OpSpec, mesh: MeshSpec, *, kind: str,
+            tokens_per_dp_shard: float, seq_shardable: bool,
+            backend: str = "pallas", sr_update: bool = True,
+            cache: Optional[TuningCache] = None,
+            measure: Optional[Callable] = None,
+            top_k: int = 3, microbatch: int = 1) -> Optional[OpTuning]:
+    """Joint strategy x tiling search for one op.  None for VPU-path ops
+    ('state' role: router logits, conv taps — never on the MAC array)."""
+    if op.role == "state":
+        return None
+    best: Optional[OpTuning] = None
+    for force in _strategy_candidates(op, mesh):
+        cand = _score_strategy(
+            op, mesh, force, kind=kind,
+            tokens_per_dp_shard=tokens_per_dp_shard,
+            seq_shardable=seq_shardable, backend=backend,
+            sr_update=sr_update, cache=cache, measure=measure,
+            top_k=top_k, microbatch=microbatch)
+        if best is None or cand.total_s < best.total_s:
+            best = cand
+    return best
+
+
+def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
+                 seq_len: int, kind: str, backend: str = "pallas",
+                 sr_update: bool = True, cache: Optional[TuningCache] = None,
+                 measure: Optional[Callable] = None, top_k: int = 3,
+                 microbatch: int = 1) -> ProgramTuning:
+    """Tune every MAC-array op of a model; mirrors plan_model's shape math
+    so comm estimates line up with the plan the program will compile."""
+    tokens, _ = step_tokens_per_shard(mesh, global_batch=global_batch,
+                                      seq_len=seq_len, kind=kind)
+    seq_shardable = kind != "decode" and _divisible(seq_len, mesh.tp)
+    out = ProgramTuning(mesh=mesh, kind=kind, backend=backend)
+    for op in ops:
+        t = tune_op(op, mesh, kind=kind, tokens_per_dp_shard=tokens,
+                    seq_shardable=seq_shardable, backend=backend,
+                    sr_update=sr_update, cache=cache, measure=measure,
+                    top_k=top_k, microbatch=microbatch)
+        if t is not None:
+            out.ops[op.name] = t
+    # HBM-budget reconciliation: the planner's budget pass may flip per-op
+    # winners (REPLICATE -> PARTITION / zero3) to fit memory.  Re-tune the
+    # tiles of any op whose surviving strategy differs, so the tiles match
+    # the LOCAL gemm that will actually execute.
+    plan = plan_model(ops, mesh, global_batch=global_batch, seq_len=seq_len,
+                      kind=kind, microbatch=microbatch,
+                      overrides=out.as_overrides())
+    for op in ops:
+        t = out.ops.get(op.name)
+        if t is None or op.name not in plan.ops:
+            continue
+        final = plan.ops[op.name].strategy
+        if final != t.strategy:
+            out.ops[op.name] = _score_strategy(
+                op, mesh, final, kind=kind, tokens_per_dp_shard=tokens,
+                seq_shardable=seq_shardable, backend=backend,
+                sr_update=sr_update, cache=cache, measure=measure,
+                top_k=top_k, microbatch=microbatch)
+    return out
+
+
+def default_tile_for(shape: GemmShape) -> TileCost:
+    """The status-quo mapping's cost — the baseline the tuner must beat."""
+    return tile_cost(shape, DEFAULT_TILE)
+
+
+def speedup_model(shape: GemmShape, tile: tuple) -> float:
+    """Predicted default/tuned time ratio (>1 = tuned wins)."""
+    d = default_tile_for(shape).time_s
+    t = tile_cost(shape, tile).time_s
+    return d / t if t > 0 and math.isfinite(t) else 0.0

@@ -1,10 +1,7 @@
 """Checkpoint/restore: roundtrip, async, GC, restart-exact recovery."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_reduced

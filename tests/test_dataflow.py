@@ -5,10 +5,9 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="requirements-dev.txt not installed")
 from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
-from repro.core import MeshSpec, Strategy, compile_program, extract_ops
+from repro.core import MeshSpec, Strategy, compile_program
 from repro.core.dataflow import plan_model
 
 MESH = MeshSpec(axis_sizes={"data": 16, "model": 16}, batch_axes=("data",))

@@ -1,7 +1,6 @@
 """HLO static analyzer: scan-trip exactness vs unrolled ground truth."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.analysis.hlo_stats import analyze, parse_hlo
 

@@ -9,7 +9,6 @@ from repro.kernels import ops, ref
 from repro.kernels.outer_accum import outer_accum as k_outer
 from repro.kernels.sr_matmul import sr_matmul as k_mm
 from repro.kernels.sr_round import sr_round as k_round
-from repro.kernels.wkv6 import wkv6 as k_wkv
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,7 +1,6 @@
 """Optimizers: convergence, SR-bf16 state fidelity, ZeRO-1 spec helper."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import TrainConfig
@@ -55,7 +54,6 @@ def test_sr_bf16_adam_tracks_fp32_adam():
 
 
 def test_zero1_spec_adds_data_axis():
-    import os
     from jax.sharding import PartitionSpec as P
     from repro.runtime.train_loop import zero1_spec
 

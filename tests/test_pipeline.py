@@ -1,8 +1,7 @@
 """Data pipeline: determinism, host sharding, prefetch, modality stubs."""
 import numpy as np
-import pytest
 
-from repro.configs import SHAPES, get_reduced
+from repro.configs import get_reduced
 from repro.configs.base import ShapeConfig
 from repro.data import Prefetcher, SyntheticLM
 

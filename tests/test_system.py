@@ -1,15 +1,10 @@
 """End-to-end behaviour tests for the paper's system."""
-import subprocess
-import sys
-import os
-
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_reduced
 from repro.configs.base import ShapeConfig, TrainConfig
-from repro.core import MeshSpec, Phase, compile_program
+from repro.core import MeshSpec, compile_program
 from repro.data import SyntheticLM
 from repro.runtime import train_loop as tl
 

@@ -1,0 +1,359 @@
+"""Mapping autotuner (repro/tuner) + PMAG LoopNest edge cases.
+
+Acceptance gates:
+  * tuned tilings are bit-exact with default tilings on the reference
+    backend (tiling must never leak into the reference path), and the
+    tuned Pallas path still matches the reference at bf16 tolerance;
+  * the cost model ranks a deliberately bad tiling below the tuned one
+    for at least one FC and one conv op;
+  * winners actually reach the kernels (BlockSpec spy on the dispatch);
+  * the JSON cache round-trips and is keyed by shape/phase/mesh/backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import (MeshSpec, Phase, compile_program, extract_ops,
+                        LoopDim, LoopNest, matmul_nest)
+from repro.core.dataflow import Strategy
+from repro.core.program import PEWord
+from repro.engine import PEContext, pe_dot
+from repro.models import transformer as tfm
+from repro.tuner import (DEFAULT_TILE, GemmShape, TuningCache, cache_key,
+                         conv_im2col_gemm, default_tile_for, gemm_for_phase,
+                         mesh_tag, tile_cost, tune_gemm, tune_program)
+
+KEY = jax.random.PRNGKey(11)
+MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1}, batch_axes=("data",))
+MESH = MeshSpec(axis_sizes={"data": 16, "model": 16}, batch_axes=("data",))
+BF16_TOL = dict(rtol=2e-2, atol=2e-3)
+
+FC_SHAPE = GemmShape(m=2560, n=2560, k=2560)                  # paper MLP0 FC
+CONV_SHAPE = conv_im2col_gemm(batch=32, out_hw=27, kernel=5,  # AlexNet conv2
+                              in_ch=96, out_ch=256)
+
+
+def _tuning_for(cfg, shape, mesh):
+    return tune_program(extract_ops(cfg), mesh,
+                        global_batch=shape.global_batch,
+                        seq_len=shape.seq_len, kind=shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Cost model ranking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [FC_SHAPE, CONV_SHAPE],
+                         ids=["fc", "conv"])
+def test_cost_model_ranks_bad_tiling_below_tuned(shape):
+    """A deliberately bad tiling (tiny tiles: max re-reads, max grid
+    overhead, off the MXU grain) must score worse than the tuned one."""
+    tuned = tune_gemm(shape)
+    bad = tile_cost(shape, (8, 8, 8))
+    assert tuned.best.time_s < bad.time_s
+    # and the bad tiling moves strictly more HBM bytes
+    assert tuned.best.hbm_bytes < bad.hbm_bytes
+
+
+@pytest.mark.parametrize("shape", [FC_SHAPE, CONV_SHAPE],
+                         ids=["fc", "conv"])
+def test_tuned_never_loses_to_default(shape):
+    """The default tile is in the candidate set, so the winner costs at
+    most as much as the status quo."""
+    tuned = tune_gemm(shape)
+    assert tuned.best.time_s <= default_tile_for(shape).time_s
+
+
+def test_infeasible_tiles_rejected():
+    """Tiles whose working set blows VMEM never win."""
+    big = tile_cost(GemmShape(m=4096, n=4096, k=4096), (4096, 4096, 1024))
+    assert not big.feasible
+    tuned = tune_gemm(GemmShape(m=4096, n=4096, k=4096))
+    assert tuned.best.feasible
+
+
+def test_gemm_for_phase_orientations():
+    """FF/BP/UP see the right local gemms; PARTITION shards the weight."""
+    op = extract_ops(get_reduced("qwen2-0.5b"))  # reduced: d=64, ffn=128
+    ffn_in = next(o for o in op if o.name == "ffn_in")
+    ff = gemm_for_phase(ffn_in, Phase.FF, tokens=512)
+    bp = gemm_for_phase(ffn_in, Phase.BP, tokens=512)
+    up = gemm_for_phase(ffn_in, Phase.UP, tokens=512)
+    k, n = ffn_in.weight_shape
+    assert (ff.m, ff.k, ff.n) == (512, k, n)
+    assert (bp.m, bp.k, bp.n) == (512, n, k)       # dY @ W^T
+    assert (up.m, up.k, up.n) == (k, 512, n)       # X^T dY
+    assert up.rbits and not ff.rbits
+    part = gemm_for_phase(ffn_in, Phase.FF, tokens=512, tp=4,
+                          strategy=Strategy.PARTITION)
+    assert part.n == n // 4                        # proj_in shards out dim
+
+
+# ---------------------------------------------------------------------------
+# Parity: tuned tiles are bit-exact on reference, tolerance on pallas
+# ---------------------------------------------------------------------------
+
+
+def test_reference_backend_ignores_tiling_bit_exact():
+    """ACCEPTANCE: tuned vs default words are bit-identical on the
+    reference backend — tiling rides only the Pallas path."""
+    x = jax.random.normal(KEY, (32, 48), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (48, 64), jnp.bfloat16)
+    tuned_word = PEWord(op="t", tiling=(("FF", (16, 16, 16)),
+                                        ("BP", (8, 8, 8)),
+                                        ("UP", (16, 32, 8))))
+    y_d = pe_dot(x, w, word=PEWord(op="t"), backend="reference")
+    y_t = pe_dot(x, w, word=tuned_word, backend="reference")
+    assert jnp.all(y_d == y_t)
+
+
+def test_model_level_reference_parity_bit_exact():
+    """ACCEPTANCE: whole-model loss with a TUNED program equals the
+    untuned one bit-for-bit on the reference backend."""
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    tuning = _tuning_for(cfg, shape, MESH1)
+    assert tuning.ops, "tuner produced no op tunings"
+    prog_d = compile_program(cfg, shape, MESH1)
+    prog_t = compile_program(cfg, shape, MESH1, tuning=tuning)
+    assert prog_t.tilings, "tuning did not attach tilings"
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                     cfg.vocab_size),
+    }
+    losses = []
+    for prog in (prog_d, prog_t):
+        sh = PEContext(program=prog, backend="reference")
+        losses.append(float(tfm.loss_fn(cfg, params, batch, sh,
+                                        remat="none")))
+    assert losses[0] == losses[1]
+
+
+def test_pallas_tuned_matches_reference():
+    """Tuned tiles through the real kernel dispatch stay within bf16
+    tolerance of the reference (FF fwd + BP/UP grads)."""
+    x = jax.random.normal(KEY, (96, 160), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (160, 224),
+                          jnp.bfloat16)
+    word = PEWord(op="t", tiling=(("FF", (64, 128, 96)),
+                                  ("BP", (64, 64, 224)),
+                                  ("UP", (64, 128, 96))))
+
+    def loss(backend, wd, x, w):
+        y = pe_dot(x, w, word=wd, backend=backend, key=KEY)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    y_ref = pe_dot(x, w, word=word, backend="reference")
+    y_pal = pe_dot(x, w, word=word, backend="pallas", key=KEY)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32), **BF16_TOL)
+    gr = jax.grad(loss, argnums=(2, 3))("reference", word, x, w)
+    gp = jax.grad(loss, argnums=(2, 3))("pallas", word, x, w)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **BF16_TOL)
+
+
+def test_dispatch_uses_word_tiling(monkeypatch):
+    """Spy on the kernel layer: the block that reaches sr_matmul is the
+    word's tuned FF tile, not the call-site default."""
+    from repro.kernels import ops as kops
+
+    seen = []
+    orig = kops.sr_matmul
+
+    def spy(a, b, key=None, **kw):
+        seen.append(kw.get("block"))
+        return orig(a, b, key, **kw)
+
+    monkeypatch.setattr("repro.engine.dispatch.kops.sr_matmul", spy)
+    x = jax.random.normal(KEY, (32, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96), jnp.bfloat16)
+    tile = (16, 32, 64)
+    word = PEWord(op="t", tiling=(("FF", tile),))
+    pe_dot(x, w, word=word, backend="pallas", key=KEY)
+    assert seen == [tile]
+    seen.clear()
+    pe_dot(x, w, word=PEWord(op="t"), backend="pallas", key=KEY)
+    assert seen == [(256, 256, 512)]
+
+
+# ---------------------------------------------------------------------------
+# Program threading + rendering
+# ---------------------------------------------------------------------------
+
+
+def test_program_threads_tilings_and_renders_them():
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    tuning = _tuning_for(cfg, shape, MESH1)
+    prog = compile_program(cfg, shape, MESH1, tuning=tuning)
+    word = prog.pe_word("ffn_in")
+    assert word.tiling_for(Phase.FF) == tuning.ops["ffn_in"].tiles[Phase.FF]
+    # the satellite fix: table()/describe() render the chosen tiling
+    table = prog.plan.table()
+    assert "tiles=FF:" in table
+    row = prog.plan["ffn_in"].describe()
+    tm, tn, tk = tuning.ops["ffn_in"].tiles[Phase.FF]
+    assert f"{tm}x{tn}x{tk}" in row
+    # untuned plans say so rather than hiding the mapping
+    prog_d = compile_program(cfg, shape, MESH1)
+    assert "tiles=default" in prog_d.plan["ffn_in"].describe()
+    # the iBuffer image mirrors the executable word
+    entries = [e for e in prog.ibuffer_entries()
+               if e["op"] == "ffn_in" and e["phase"] == "FF"]
+    assert entries and entries[0]["tiling"] == list(
+        tuning.ops["ffn_in"].tiles[Phase.FF])
+
+
+def test_tuning_dict_roundtrip():
+    """to_dict() form drives compile_program identically (the launch CLI
+    emits exactly this JSON)."""
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    tuning = _tuning_for(cfg, shape, MESH1)
+    a = compile_program(cfg, shape, MESH1, tuning=tuning)
+    b = compile_program(cfg, shape, MESH1, tuning=tuning.to_dict())
+    for op in tuning.ops:
+        assert a.pe_word(op) == b.pe_word(op)
+
+
+def test_joint_search_covers_strategies():
+    """On a real 16x16 mesh the tuner picks per-op strategies (not one
+    global answer) and tiles every MAC-array phase."""
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("t4k", seq_len=4096, global_batch=256, kind="train")
+    tuning = _tuning_for(cfg, shape, MESH)
+    assert set(tuning.ops["ffn_in"].tiles) == {Phase.FF, Phase.BP, Phase.UP}
+    strategies = {t.strategy for t in tuning.ops.values()}
+    assert strategies <= set(Strategy)
+    # 'state'-role ops (router/conv taps) are never tuned: VPU path
+    assert "moe_router" not in tuning.ops
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip_and_keying(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cache = TuningCache(path)
+    shape = GemmShape(m=128, n=128, k=128)
+    cache.put(shape, Phase.FF, "data1-model1", "pallas",
+              tile=(64, 64, 128), time_s=1e-6)
+    # keyed by shape AND phase AND mesh AND backend
+    assert cache.get(shape, Phase.FF, "data1-model1", "pallas") is not None
+    assert cache.get(shape, Phase.BP, "data1-model1", "pallas") is None
+    assert cache.get(shape, Phase.FF, "data2-model1", "pallas") is None
+    assert cache.get(shape, Phase.FF, "data1-model1", "reference") is None
+    other = GemmShape(m=256, n=128, k=128)
+    assert cache.get(other, Phase.FF, "data1-model1", "pallas") is None
+    cache.save()
+    loaded = TuningCache(path)
+    hit = loaded.get(shape, Phase.FF, "data1-model1", "pallas")
+    assert hit is not None and tuple(hit["tile"]) == (64, 64, 128)
+    # measured entries survive model-only overwrites
+    loaded.put(shape, Phase.FF, "data1-model1", "pallas",
+               tile=(32, 32, 32), time_s=9.0, source="measured")
+    loaded.put(shape, Phase.FF, "data1-model1", "pallas",
+               tile=(64, 64, 128), time_s=1e-6, source="model")
+    kept = loaded.get(shape, Phase.FF, "data1-model1", "pallas")
+    assert kept["source"] == "measured"
+
+
+def test_tune_program_hits_cache_second_time(tmp_path):
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    cache = TuningCache(str(tmp_path / "c.json"))
+    t1 = _tuning_for_cached(cfg, shape, cache)
+    assert cache.misses > 0 and cache.hits == 0
+    n_entries = len(cache)
+    cache.hits = cache.misses = 0
+    t2 = _tuning_for_cached(cfg, shape, cache)
+    assert cache.misses == 0 and cache.hits > 0
+    assert len(cache) == n_entries
+    assert t2.as_tilings() == t1.as_tilings()
+    assert all(t.source == "cache" for t in t2.ops.values())
+
+
+def _tuning_for_cached(cfg, shape, cache):
+    return tune_program(extract_ops(cfg), MESH1,
+                        global_batch=shape.global_batch,
+                        seq_len=shape.seq_len, kind=shape.kind, cache=cache)
+
+
+def test_cache_key_includes_sr_flag():
+    a = GemmShape(m=8, n=8, k=8)
+    b = GemmShape(m=8, n=8, k=8, rbits=True)
+    assert (cache_key(a, Phase.UP, "m", "pallas")
+            != cache_key(b, Phase.UP, "m", "pallas"))
+    assert mesh_tag(MESH) == "data16-model16"
+
+
+# ---------------------------------------------------------------------------
+# PMAG LoopNest / block_spec edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_loopnest_non_divisible_tiles():
+    """Ragged edges: steps = ceil(size/tile); the grid covers the tail."""
+    nest = matmul_nest(100, 70, 33, tm=64, tn=32, tk=32)
+    assert nest.grid == (2, 3, 2)
+    assert nest.dim("i").steps == 2
+    # pallas pads the ragged tail tile; kernel output must still be exact
+    a = jax.random.normal(KEY, (100, 33), jnp.bfloat16)
+    b = jax.random.normal(jax.random.fold_in(KEY, 3), (33, 70), jnp.bfloat16)
+    from repro.kernels import ops as kops
+    y = kops.sr_matmul(a, b, None, sr=False, block=(64, 32, 32),
+                       interpret=True)
+    ref = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), **BF16_TOL)
+
+
+def test_loopnest_degenerate_one_step_dims():
+    """tile >= size collapses a dim to a single counter step."""
+    nest = LoopNest((LoopDim("i", 4, 8), LoopDim("j", 1, 1)))
+    assert nest.grid == (1, 1)
+    spec = nest.block_spec(("i", "j"))
+    assert tuple(spec.block_shape) == (8, 1)
+
+
+def test_blockspec_wiring_order_vs_counter_order():
+    """The index_map returns block indices in WIRING order, regardless of
+    counter (grid) order — this is the counter-swept transpose."""
+    nest = matmul_nest(64, 64, 64, tm=16, tn=16, tk=16)
+    fwd = nest.block_spec(("l", "j"))       # B as (K, N)
+    swp = nest.block_spec(("j", "l"))       # B^T: same counters, swapped
+    # counters arrive in grid order (i, j, l)
+    assert fwd.index_map(1, 2, 3) == (3, 2)
+    assert swp.index_map(1, 2, 3) == (2, 3)
+    # un-wired axis pins to block 0 and needs an explicit shape
+    whole = nest.block_spec((None, "j"), block_shape=(64, 16))
+    assert whole.index_map(1, 2, 3) == (0, 2)
+    with pytest.raises(ValueError):
+        nest.block_spec((None, "j"))
+
+
+def test_loopnest_validation():
+    with pytest.raises(ValueError):
+        LoopNest(tuple(LoopDim(f"d{i}", 8, 2) for i in range(8)))  # > r7
+    with pytest.raises(ValueError):
+        LoopNest((LoopDim("i", 8, 2), LoopDim("i", 8, 2)))
+    with pytest.raises(KeyError):
+        matmul_nest(8, 8, 8, tm=2, tn=2, tk=2).dim("z")
+
+
+def test_default_tile_constant_matches_dispatch_default():
+    """The tuner's notion of 'default' must equal pe_dot's call-site
+    default, or the baseline comparison benchmarks lie."""
+    import inspect
+    sig = inspect.signature(pe_dot)
+    assert sig.parameters["block"].default == DEFAULT_TILE
