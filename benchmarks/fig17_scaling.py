@@ -1,15 +1,25 @@
-"""Fig 17 — scaling to multiple modules (sync data parallelism).
+"""Fig 17 — scaling to multiple modules.
 
 The paper models N NeuroTrainers + a central updater: per-minibatch time
   T(N) = T_train + N * T_update + 2N * T_link,
 concluding scaling is off-chip-limited (13x at 64 modules vs one P100).
 
-We reproduce the PAPER's model with its constants (VGG16, 138M params,
-T_train 63.1 ms, K1 update 42.4 ms, link 4.61 ms) and then the TPU-pod
-analog where the update is itself data-parallel and dW moves over ICI
-as a ring all-reduce with optional bf16/int8 compression:
-  T(N) = T_train + 2 * dW_bytes * c / ici_bw   (N-independent ring!)
-— the structural reason pods scale where the hub-and-spoke K1 does not.
+Three sections:
+
+  * the PAPER's hub-and-spoke model with its constants (VGG16, 138M
+    params, T_train 63.1 ms, K1 update 42.4 ms, link 4.61 ms);
+  * the TPU-pod data-parallel analog where dW moves as a ring all-reduce
+    (N-independent!) with optional bf16/int8 compression;
+  * the inter-module PIPELINE analog routed through the REAL stage
+    partitioner (repro/pipeline): N modules each own a balanced
+    contiguous layer group of qwen2-0.5b, and per-minibatch time follows
+    the 1F1B schedule clock
+
+        T(N) = max_stage_cost * (M + N - 1) / M,
+
+    so the figure reflects the exact stage mapping `train.py
+    --pipeline-stages N` executes (imbalance and bubble included), not a
+    perfect-T/N idealisation.
 """
 from benchmarks.common import row
 
@@ -19,6 +29,10 @@ T_K1_UPDATE = 42.4e-3
 T_LINK = 4.61e-3
 BATCH = 32
 ICI_BW = 50e9
+
+PIPE_ARCH = "qwen2-0.5b"
+PIPE_BATCH, PIPE_SEQ = 32, 1024
+PIPE_MICRO = 16
 
 
 def run() -> list:
@@ -38,4 +52,27 @@ def run() -> list:
             ips = n * BATCH / t
             rows.append(row(f"fig17/pod_ring_{cname}_n{n}", t * 1e6,
                             f"img_per_s={ips:.0f}"))
+
+    # pipeline slicing through the real partitioner: executed mappings
+    from repro.configs import get_config
+    from repro.pipeline import make_schedule, partition_model
+
+    cfg = get_config(PIPE_ARCH)
+    tokens = PIPE_BATCH * PIPE_SEQ
+    t1 = None
+    for n in (1, 2, 4, 8, 16):
+        pplan = partition_model(cfg, n, global_batch=PIPE_BATCH,
+                                seq_len=PIPE_SEQ)
+        sched = make_schedule(n, PIPE_MICRO)
+        t_stage = max(s.cost for s in pplan.stages)
+        # one tick = one F or B of one microbatch ~ t_stage / (2M); the
+        # minibatch takes the schedule's full makespan of them
+        t = t_stage * sched.makespan / (2 * PIPE_MICRO)
+        t1 = t1 or t
+        tps = tokens / t
+        rows.append(row(
+            f"fig17/pipeline_{PIPE_ARCH}_n{n}", t * 1e6,
+            f"tok_per_s={tps:.0f} speedup={t1 / t:.2f} "
+            f"bubble={sched.bubble_fraction():.4f} "
+            f"imbalance={pplan.imbalance:.4f}"))
     return rows

@@ -28,7 +28,11 @@ import subprocess
 import sys
 
 DEFAULT_SUITES = "all"
-GATED_KEYS = ("pred_speedup", "pred_bytes_ratio")
+# deterministic model metrics only (bit-stable across runners): the
+# autotuner's predicted speedup/bytes and the pipeline partitioner's
+# predicted bubble/imbalance/speedup
+GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
+              "pred_imbalance")
 
 
 def _parse_rows(text: str) -> dict:
@@ -76,7 +80,7 @@ def collect(suites: str) -> tuple:
     if suites == "all":
         # autotune runs as its own subprocess below (the CI contract is
         # `run.py` + `autotune_gemm --smoke`); don't execute it twice
-        suites = "table1,fig10,fig13,fig16,table6,fig17,serve"
+        suites = "table1,fig10,fig13,fig16,table6,fig17,serve,pipeline"
     rc, out = _run([sys.executable, "-m", "benchmarks.run",
                     "--only", suites])
     ok &= rc == 0
@@ -122,7 +126,9 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
         for k in GATED_KEYS:
             v = r["derived"].get(k)
             if isinstance(v, (int, float)):
-                direction = "lower" if "ratio" in k else "higher"
+                direction = ("lower" if any(t in k for t in
+                                            ("ratio", "bubble", "imbalance"))
+                             else "higher")
                 metrics[f"{name}:{k}"] = {"value": v, "direction": direction}
     return {"threshold": threshold, "require_rows": sorted(rows),
             "metrics": metrics}

@@ -1,0 +1,98 @@
+"""Pipeline scaling: predicted bubble/balance + executed 1F1B step time.
+
+Two row families:
+
+  pipeline/pred_<arch>_s<S>  — deterministic partitioner/schedule numbers
+      for the FULL config: 1F1B bubble fraction at M=2S microbatches,
+      stage-cost imbalance (max/mean), and the predicted pipeline speedup
+      over one module  S / (imbalance * (1 + bubble)).  Bit-stable across
+      machines -> gated by benchmarks/gate.py.
+  pipeline/exec_s<S>         — wall time of one jitted pipeline train step
+      on the reduced config (reference backend, virtual stages), vs the
+      single-module step with the same microbatching.  Recorded for trend
+      tracking, not gated (runner noise).
+
+    PYTHONPATH=src python -m benchmarks.pipeline_scaling [--smoke]
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_fn
+
+PRED_ARCH = "qwen2-0.5b"
+PRED_STAGES = (2, 4, 8)
+EXEC_STAGES = (1, 2)
+
+
+def _pred_rows() -> list:
+    from repro.configs import get_config
+    from repro.pipeline import ideal_bubble, make_schedule, partition_model
+
+    rows = []
+    cfg = get_config(PRED_ARCH)
+    for s in PRED_STAGES:
+        pplan = partition_model(cfg, s, global_batch=32, seq_len=1024)
+        m = 2 * s
+        sched = make_schedule(s, m)
+        bub = sched.bubble_fraction()
+        speedup = s / (pplan.imbalance * (1.0 + bub))
+        rows.append(row(
+            f"pipeline/pred_{PRED_ARCH}_s{s}", 0.0,
+            f"pred_bubble={bub:.4f} pred_imbalance={pplan.imbalance:.4f} "
+            f"pred_speedup={speedup:.4f} ideal_bubble={ideal_bubble(s, m):.4f} "
+            f"microbatches={m}"))
+    return rows
+
+
+def _exec_rows(steps: int) -> list:
+    from repro.configs import get_reduced
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.core import MeshSpec, compile_program
+    from repro.core.program import compile_stage_programs
+    from repro.data import SyntheticLM
+    from repro.pipeline import make_pipeline_train_step, partition_model
+    from repro.runtime import train_loop as tl
+
+    cfg = get_reduced(PRED_ARCH)
+    shape = ShapeConfig("bench", seq_len=64, global_batch=8, kind="train")
+    ms = MeshSpec(axis_sizes={"data": 1, "model": 1})
+    tc = TrainConfig(optimizer="adamw", microbatch=4)
+    pipe = SyntheticLM(cfg, shape)
+    batch = pipe.batch_at(0)
+    key = jax.random.key(0)
+
+    rows = []
+    base_us = None
+    for s in EXEC_STAGES:
+        prog = compile_program(cfg, shape, ms, microbatch=4)
+        if s == 1:
+            step_fn, opt = tl.make_train_step(cfg, prog, tc, None)
+        else:
+            pplan = partition_model(cfg, s, global_batch=8, seq_len=64)
+            sprogs = compile_stage_programs(cfg, shape, ms,
+                                            pplan.layer_bounds, microbatch=4)
+            step_fn, opt = make_pipeline_train_step(cfg, sprogs, pplan,
+                                                    tc, None)
+        state = tl.init_state(cfg, prog, tc, jax.random.PRNGKey(0), opt)
+        jstep = jax.jit(step_fn)
+        us = time_fn(lambda: jstep(state, batch, key), warmup=1, iters=steps)
+        base_us = base_us or us
+        tag = "single_module" if s == 1 else "virtual_stages"
+        rows.append(row(f"pipeline/exec_s{s}", us,
+                        f"mode={tag} rel_step_time={us / base_us:.3f}"))
+    return rows
+
+
+def run(steps: int = 3) -> list:
+    return _pred_rows() + _exec_rows(steps)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer timed iterations)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(steps=2 if args.smoke else 5)

@@ -61,14 +61,27 @@ class Strategy(str, enum.Enum):
 
 @dataclass(frozen=True)
 class MeshSpec:
-    """Logical description of the device mesh the plan targets."""
+    """Logical description of the device mesh the plan targets.
+
+    The optional `stage` axis is the inter-module pipeline dimension
+    (repro/pipeline): each stage models one memory module owning a
+    contiguous layer group.  It never carries batch or tensor shards —
+    `plan_model` plans *within* one module; the per-stage scoping comes
+    from compiling one program per stage (`compile_stage_programs`).
+    """
     axis_sizes: dict                      # name -> size, e.g. {'data':16,'model':16}
     batch_axes: tuple = ("data",)         # axes carrying the batch dim
     tp_axis: str = "model"
+    stage_axis: str = "stage"             # inter-module pipeline axis
 
     @property
     def tp(self) -> int:
         return self.axis_sizes[self.tp_axis]
+
+    @property
+    def pp(self) -> int:
+        """Pipeline stages (1 when the mesh has no stage axis)."""
+        return self.axis_sizes.get(self.stage_axis, 1)
 
     @property
     def dp(self) -> int:

@@ -129,18 +129,33 @@ def _ssm_ops(cfg: ModelConfig, n_layers: int) -> list:
     ]
 
 
-def extract_ops(cfg: ModelConfig) -> list:
-    """Weight-bearing op list, one OpSpec per scanned layer-class."""
-    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
-    ops: list = [OpSpec("embed", (V, d), "embed", act_in_features=0,
-                        act_out_features=d, flops_per_token=0.0)]
-    if not cfg.tie_embeddings:
+def extract_ops(cfg: ModelConfig, *, layer_range: Optional[tuple] = None,
+                include_embed: bool = True, include_head: bool = True) -> list:
+    """Weight-bearing op list, one OpSpec per scanned layer-class.
+
+    layer_range=(l0, l1) scopes the list to one pipeline stage's layers
+    (repro/pipeline): layer counts restrict to the half-open range, and
+    the embed/head ops join only the stage that owns them.  A tied head
+    keeps the ``embed`` spec alive wherever the head lives.
+    """
+    d, V = cfg.d_model, cfg.vocab_size
+    l0, l1 = layer_range if layer_range is not None else (0, cfg.n_layers)
+    if layer_range is not None and cfg.enc_layers:
+        raise ValueError(f"{cfg.name}: encoder/decoder models cannot be "
+                         f"layer-range scoped (pipeline stages are "
+                         f"decoder-only)")
+    L = l1 - l0
+    ops: list = []
+    if include_embed or (include_head and cfg.tie_embeddings):
+        ops.append(OpSpec("embed", (V, d), "embed", act_in_features=0,
+                          act_out_features=d, flops_per_token=0.0))
+    if include_head and not cfg.tie_embeddings:
         ops.append(OpSpec("lm_head", (d, V), "lm_head", act_in_features=d,
                           act_out_features=V, flops_per_token=2 * d * V))
 
-    n_attn = sum(1 for i in range(L) if cfg.is_attention_layer(i))
+    n_attn = sum(1 for i in range(l0, l1) if cfg.is_attention_layer(i))
     n_ssm = L - n_attn
-    n_moe = sum(1 for i in range(L) if cfg.is_moe_layer(i))
+    n_moe = sum(1 for i in range(l0, l1) if cfg.is_moe_layer(i))
     n_dense_ffn = L - n_moe
 
     if n_attn:
@@ -167,7 +182,7 @@ def extract_ops(cfg: ModelConfig) -> list:
                           n_layers=L, act_in_features=a.n_heads * a.head_dim,
                           act_out_features=d,
                           flops_per_token=2 * a.n_heads * a.head_dim * d))
-    if cfg.frontend == "vision_stub":
+    if cfg.frontend == "vision_stub" and include_embed:
         ops.append(OpSpec("vlm_proj", (d, d), "proj_in", act_in_features=d,
                           act_out_features=d, flops_per_token=2 * d * d))
     return ops
@@ -401,17 +416,26 @@ def _normalize_tuning(tuning) -> tuple:
 def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                     *, precision: str = "paper_sr_bf16", microbatch: int = 1,
                     overrides: Optional[dict] = None,
-                    tuning=None) -> Program:
+                    tuning=None, layer_range: Optional[tuple] = None,
+                    include_embed: bool = True,
+                    include_head: bool = True) -> Program:
     """The 'host' step of Fig 12: DNN description -> loaded iBuffer.
 
     tuning: a ``repro.tuner.ProgramTuning`` (or its to_dict() form) — the
     autotuner's strategy winners join ``overrides`` (explicit overrides
     take precedence) and its per-phase tiles load into the program words.
+
+    layer_range / include_embed / include_head scope the program to one
+    pipeline stage (one memory module): its iBuffer carries only the ops
+    that stage executes, and the HBM budget pass sees only that stage's
+    state — the per-stage budget.  `compile_stage_programs` drives this
+    for a whole `repro.pipeline` stage map.
     """
     import dataclasses
 
     policy = get_policy(precision)
-    ops = extract_ops(cfg)
+    ops = extract_ops(cfg, layer_range=layer_range,
+                      include_embed=include_embed, include_head=include_head)
     import jax.numpy as jnp
     state_bytes = (policy.bytes_per_param_state if shape.kind == "train"
                    else jnp.dtype(policy.param_dtype).itemsize)
@@ -432,3 +456,26 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                                                  tiling=dict(tiles))
     return Program(cfg=cfg, shape=shape, mesh_spec=mesh_spec, policy=policy,
                    plan=plan, ops=ops, tilings=tilings)
+
+
+def compile_stage_programs(cfg: ModelConfig, shape: ShapeConfig,
+                           mesh_spec: MeshSpec, layer_bounds,
+                           *, precision: str = "paper_sr_bf16",
+                           microbatch: int = 1,
+                           tuning=None) -> list:
+    """One iBuffer per memory-module stage (repro/pipeline).
+
+    layer_bounds: [(l0, l1), ...] contiguous stage layer ranges (a
+    ``PipelinePlan.layer_bounds``).  Stage 0 owns the embedding, the last
+    stage owns the LM head; every stage's program is planned against its
+    OWN per-stage HBM budget (its ops only), which is what lets a model
+    that busts one module's budget fit across several.
+    """
+    n = len(layer_bounds)
+    return [
+        compile_program(cfg, shape, mesh_spec, precision=precision,
+                        microbatch=microbatch, tuning=tuning,
+                        layer_range=tuple(layer_bounds[s]),
+                        include_embed=(s == 0), include_head=(s == n - 1))
+        for s in range(n)
+    ]

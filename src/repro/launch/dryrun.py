@@ -104,6 +104,31 @@ def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
     return lowered, program
 
 
+def pipeline_summary(arch: str, shape_name: str, num_stages: int,
+                     microbatch: int) -> dict:
+    """Stage table + 1F1B bubble accounting for one cell (repro/pipeline).
+
+    Pure host-side arithmetic — no lowering: the stage map is the
+    partitioner's, the bubble is the schedule's, so the dry-run artifact
+    records the same mapping `train.py --pipeline-stages` executes.
+    """
+    from repro.pipeline import make_schedule, partition_model, summarize
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    try:
+        pplan = partition_model(cfg, num_stages,
+                                global_batch=shape.global_batch,
+                                seq_len=shape.seq_len, kind=shape.kind)
+    except ValueError as e:
+        return {"status": "skip", "reason": str(e)}
+    nm = max(2 * num_stages, microbatch)     # enough microbatches to fill
+    sched = make_schedule(num_stages, nm)
+    return {"status": "ok", "plan": pplan.to_dict(),
+            "table": pplan.table(), "schedule": summarize(sched),
+            "timeline": sched.render()}
+
+
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
              precision: str, train_cfg: TrainConfig, overrides=None,
              tuned: bool = False) -> dict:
@@ -172,6 +197,9 @@ def main():
     ap.add_argument("--tuned", action="store_true",
                     help="run the mapping autotuner per cell; the plan "
                          "table then shows the chosen tilings")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="also render the inter-module stage table + 1F1B "
+                         "bubble fraction for this many stages per cell")
     args = ap.parse_args()
 
     jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
@@ -184,6 +212,7 @@ def main():
                             microbatch=args.microbatch)
 
     results = []
+    pipe_cache: dict = {}
     for multi in meshes:
         mesh = make_production_mesh(multi_pod=multi)
         mesh_name = "pod2x16x16" if multi else "pod16x16"
@@ -203,6 +232,22 @@ def main():
                     r = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                          "status": "error", "error": f"{type(e).__name__}: {e}",
                          "traceback": traceback.format_exc()[-4000:]}
+                if args.pipeline_stages > 1:
+                    # mesh-independent: compute (and print) once per
+                    # (arch, shape), reuse for the other mesh's artifact
+                    if (arch, shape_name) not in pipe_cache:
+                        p = pipeline_summary(arch, shape_name,
+                                             args.pipeline_stages,
+                                             max(1, args.microbatch))
+                        pipe_cache[(arch, shape_name)] = p
+                        if p["status"] == "ok":
+                            print(p["table"])
+                            print(f"  1F1B bubble="
+                                  f"{p['schedule']['bubble_fraction']:.1%} "
+                                  f"(M={p['schedule']['num_microbatches']}) "
+                                  f"imbalance={p['plan']['imbalance']:.3f}",
+                                  flush=True)
+                    r["pipeline"] = pipe_cache[(arch, shape_name)]
                 with open(path, "w") as f:
                     json.dump(r, f, indent=1)
                 if r["status"] == "ok":

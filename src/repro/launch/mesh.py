@@ -17,7 +17,9 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def mesh_spec_for(mesh) -> MeshSpec:
-    """Planner-facing description of a jax Mesh."""
+    """Planner-facing description of a jax Mesh.  A `stage` axis (the
+    inter-module pipeline dimension) is never a batch axis: it slices
+    *layers*, not data."""
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     batch_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
     return MeshSpec(axis_sizes=axis_sizes, batch_axes=batch_axes,
@@ -32,3 +34,29 @@ def make_host_mesh(n_devices: int | None = None, *, data: int | None = None,
         model = 1
         data = n
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_pipeline_mesh(num_stages: int, n_devices: int | None = None):
+    """("stage", "data", "model") mesh: one stage row per memory module.
+
+    Returns None when the host devices cannot honour the stage axis
+    (e.g. a single-device CPU run) — the pipeline runner then executes
+    the same schedule with virtual stages and identity handoffs, which
+    is bit-identical to the ppermute path.
+    """
+    n = n_devices or len(jax.devices())
+    if num_stages < 2 or n % num_stages != 0:
+        return None
+    return jax.make_mesh((num_stages, n // num_stages, 1),
+                         ("stage", "data", "model"))
+
+
+def pipeline_mesh_spec(num_stages: int, base: MeshSpec | None = None) -> MeshSpec:
+    """MeshSpec with the stage axis prepended (base defaults to 1x1)."""
+    sizes = dict(base.axis_sizes) if base is not None else {"data": 1,
+                                                            "model": 1}
+    sizes = {"stage": num_stages, **{k: v for k, v in sizes.items()
+                                     if k != "stage"}}
+    return MeshSpec(axis_sizes=sizes,
+                    batch_axes=base.batch_axes if base else ("data",),
+                    tp_axis=base.tp_axis if base else "model")

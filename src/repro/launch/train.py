@@ -46,6 +46,12 @@ def main(argv=None):
                     help="run the mapping autotuner and execute the tuned "
                          "strategy/tiling winners (repro/tuner)")
     ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="inter-module pipeline stages (layer groups on "
+                         "memory-module stages, 1F1B microbatch schedule); "
+                         "1 = single-module training")
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    choices=("1f1b", "gpipe"))
     ap.add_argument("--remat", default="block")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -84,8 +90,36 @@ def main(argv=None):
                             checkpoint_dir=args.ckpt_dir,
                             checkpoint_every=args.ckpt_every)
 
-    use_mesh = mesh if mesh.devices.size > 1 else None
-    step_fn, opt = tl.make_train_step(cfg, program, train_cfg, use_mesh)
+    if args.pipeline_stages > 1:
+        from repro.core.program import compile_stage_programs
+        from repro.launch.mesh import make_pipeline_mesh, pipeline_mesh_spec
+        from repro.pipeline import (make_pipeline_train_step, make_schedule,
+                                    partition_model)
+        pplan = partition_model(cfg, args.pipeline_stages,
+                                global_batch=shape.global_batch,
+                                seq_len=shape.seq_len)
+        print(pplan.table())
+        nm = max(1, args.microbatch)
+        sched = make_schedule(args.pipeline_stages, nm,
+                              args.pipeline_schedule)
+        print(sched.render())
+        pmesh = make_pipeline_mesh(args.pipeline_stages)
+        # per-stage programs must see the PER-STAGE data shard count (the
+        # pipeline mesh divides the devices), not the undivided host mesh
+        sspec = (mesh_spec_for(pmesh) if pmesh
+                 else pipeline_mesh_spec(args.pipeline_stages))
+        sprogs = compile_stage_programs(cfg, shape, sspec, pplan.layer_bounds,
+                                        precision=args.precision, tuning=tuning,
+                                        microbatch=nm)
+        step_fn, opt = make_pipeline_train_step(
+            cfg, sprogs, pplan, train_cfg, pmesh,
+            schedule=args.pipeline_schedule)
+        print(f"pipeline: {args.pipeline_stages} stages x {nm} microbatches, "
+              f"{'ppermute mesh' if pmesh else 'virtual stages'}, "
+              f"bubble={sched.bubble_fraction():.1%}")
+    else:
+        use_mesh = mesh if mesh.devices.size > 1 else None
+        step_fn, opt = tl.make_train_step(cfg, program, train_cfg, use_mesh)
     jstep = jax.jit(step_fn, donate_argnums=(0,))
     state = tl.init_state(cfg, program, train_cfg, jax.random.PRNGKey(args.seed), opt)
 

@@ -217,38 +217,57 @@ def _unit_forward(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
     return x, aux, cache
 
 
-def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
-            *, compute_dtype=jnp.bfloat16, vision_embeds=None,
-            return_cache: bool = False, remat: str = "none",
-            return_hidden: bool = False):
-    """tokens: (B, S_text).  Returns (logits f32 | hidden, aux[, caches])."""
-    pattern = layer_pattern(cfg)
+def prologue(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
+             *, compute_dtype=jnp.bfloat16, vision_embeds=None):
+    """Embedding + modality frontend + residual layout: everything before
+    the first layer group.  Pipeline stage 0 runs exactly this (the
+    remaining stages receive the residual stream instead)."""
     x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
     if cfg.frontend == "vision_stub":
         assert vision_embeds is not None
         v = sh.dot("vlm_proj", vision_embeds.astype(compute_dtype),
                    params["vlm_proj"])
         x = jnp.concatenate([v, x], axis=1)
-    S = x.shape[1]
-    positions = jnp.arange(S, dtype=jnp.int32)
-    x = sh.residual(x)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return sh.residual(x), positions
+
+
+def group_scan(cfg: ModelConfig, x: jax.Array, aux: jax.Array, groups,
+               sh: Sharder, positions: jax.Array, *, remat: str = "none",
+               collect_cache: bool = False):
+    """Scan a contiguous slice of scan groups: the body of `forward`, and
+    of one pipeline stage (`groups` then holds that stage's param slice).
+    Returns (x, aux, caches) — caches is None unless collect_cache."""
+    pattern = layer_pattern(cfg)
 
     def group_step(carry, gparams):
         x, aux = carry
         caches = {}
         for i, u in enumerate(pattern):
-            x, a, c = _unit_forward(cfg, x, gparams[f"u{i}"], u, sh, positions,
-                                    return_cache)
+            x, a, c = _unit_forward(cfg, x, gparams[f"u{i}"], u, sh,
+                                    positions, collect_cache)
             aux = aux + a
             if c:
                 caches[f"u{i}"] = c
-        return (x, aux), caches if return_cache else None
+        return (x, aux), caches if collect_cache else None
 
     if remat == "block":
         group_step = jax.checkpoint(group_step)
+    (x, aux), caches = jax.lax.scan(group_step, (x, aux), groups)
+    return x, aux, caches
 
-    (x, aux), caches = jax.lax.scan(
-        group_step, (x, jnp.zeros((), jnp.float32)), params["groups"])
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
+            *, compute_dtype=jnp.bfloat16, vision_embeds=None,
+            return_cache: bool = False, remat: str = "none",
+            return_hidden: bool = False):
+    """tokens: (B, S_text).  Returns (logits f32 | hidden, aux[, caches])."""
+    x, positions = prologue(cfg, params, tokens, sh,
+                            compute_dtype=compute_dtype,
+                            vision_embeds=vision_embeds)
+    x, aux, caches = group_scan(cfg, x, jnp.zeros((), jnp.float32),
+                                params["groups"], sh, positions, remat=remat,
+                                collect_cache=return_cache)
     x = apply_norm(cfg, x, params.get("final_norm"))
     if return_hidden:
         if return_cache:
@@ -260,6 +279,20 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
     return logits, aux
 
 
+def head_loss(cfg: ModelConfig, params: dict, hidden: jax.Array,
+              aux: jax.Array, labels: jax.Array, sh: Sharder,
+              *, aux_weight: float = 0.01):
+    """Loss head on the final-normed hidden states: the tail of `loss_fn`,
+    and of the LAST pipeline stage (which receives `aux` accumulated
+    across every upstream stage)."""
+    if cfg.frontend == "vision_stub":
+        # loss on the text positions only
+        hidden = hidden[:, -labels.shape[1]:]
+    from repro.models.layers import lm_loss_chunked
+    return lm_loss_chunked(cfg, hidden, params, labels, sh) \
+        + aux_weight * aux
+
+
 def loss_fn(cfg: ModelConfig, params: dict, batch: dict, sh: Sharder,
             *, compute_dtype=jnp.bfloat16, remat: str = "none",
             aux_weight: float = 0.01):
@@ -267,12 +300,8 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, sh: Sharder,
                           compute_dtype=compute_dtype,
                           vision_embeds=batch.get("vision_embeds"),
                           remat=remat, return_hidden=True)
-    if cfg.frontend == "vision_stub":
-        # loss on the text positions only
-        hidden = hidden[:, -batch["labels"].shape[1]:]
-    from repro.models.layers import lm_loss_chunked
-    return lm_loss_chunked(cfg, hidden, params, batch["labels"], sh) \
-        + aux_weight * aux
+    return head_loss(cfg, params, hidden, aux, batch["labels"], sh,
+                     aux_weight=aux_weight)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,22 @@
+"""Inter-module pipeline parallelism: layer groups on memory-module stages.
+
+The scale-out axis the paper's multi-module claim implies (and Memory
+Slices makes explicit): `partition` balances layers into contiguous
+stage groups, `schedule` emits the GPipe / 1F1B microbatch clocks as
+explicit (stage, microbatch, phase) events, `runner` executes them over
+per-stage iBuffer programs with ppermute activation/grad handoffs.
+"""
+from repro.pipeline.partition import (LayerCost, PipelinePlan, StageSpec,
+                                      layer_costs, partition_model)
+from repro.pipeline.runner import make_pipeline_train_step
+from repro.pipeline.schedule import (PipeEvent, PipeSchedule, SCHEDULES,
+                                     build_schedule, bubble_fraction,
+                                     events_at, ideal_bubble, make_schedule,
+                                     summarize, validate)
+
+__all__ = [
+    "LayerCost", "PipelinePlan", "StageSpec", "layer_costs",
+    "partition_model", "make_pipeline_train_step", "PipeEvent",
+    "PipeSchedule", "SCHEDULES", "build_schedule", "bubble_fraction",
+    "events_at", "ideal_bubble", "make_schedule", "summarize", "validate",
+]

@@ -1,0 +1,275 @@
+"""Stage partitioner: map contiguous layer groups onto memory-module stages.
+
+One pipeline stage models one NeuroTrainer memory module (Memory Slices'
+"slice"): it owns a contiguous run of layers, holds their weights in its
+vaults, and runs their FF/BP/UP program words.  The partitioner decides
+where the module boundaries fall: it prices every layer with the same
+arithmetic the mapping autotuner uses (`tuner/cost.py::gemm_for_phase` —
+per-phase gemm FLOPs — plus weight bytes against the `core/dataflow.py`
+roofline constants) and greedily balances the prefix sums into
+``num_stages`` contiguous groups.
+
+Boundaries snap to *scan-group* granularity (`models/transformer.py`
+stacks params over groups of one layer-pattern period), so a stage's
+parameters are a contiguous slice of every stacked leaf — which is what
+lets the runner feed each stage with ``groups[g0:g1]`` and lets a
+``("stage", ...)`` mesh shard the stacking dim when stages divide evenly.
+The embedding is pinned to stage 0 and the LM head (tied or not) to the
+last stage; their costs ride the greedy like any layer's.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core.dataflow import HBM_BW, PEAK_FLOPS_BF16
+from repro.core.phases import Phase
+from repro.core.program import (_attn_ops, _ffn_ops, _moe_ops, _ssm_ops,
+                                extract_ops)
+from repro.tuner.cost import gemm_for_phase
+
+TRAIN_PHASES = (Phase.FF, Phase.BP, Phase.UP)
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    """Roofline price of one model layer (one unit of the layer pattern)."""
+    index: int
+    flops: float              # per step, all phases
+    weight_bytes: float
+
+    @property
+    def cost(self) -> float:
+        """Time-like score: compute + one end-to-end weight read."""
+        return self.flops / PEAK_FLOPS_BF16 + self.weight_bytes / HBM_BW
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One memory-module stage: a contiguous [start_layer, end_layer) run."""
+    index: int
+    start_layer: int          # inclusive
+    end_layer: int            # exclusive
+    start_group: int          # scan-group granularity (runner slices these)
+    end_group: int
+    flops: float
+    weight_bytes: float
+    cost: float
+    has_embed: bool
+    has_head: bool
+
+    @property
+    def n_layers(self) -> int:
+        return self.end_layer - self.start_layer
+
+    def describe(self) -> str:
+        extras = "".join([" +embed" if self.has_embed else "",
+                          " +head" if self.has_head else ""])
+        return (f"stage {self.index}: layers [{self.start_layer:3d},"
+                f"{self.end_layer:3d}) groups [{self.start_group},"
+                f"{self.end_group}) flops={self.flops:.3e} "
+                f"weights={self.weight_bytes/1e6:8.1f}MB "
+                f"cost={self.cost*1e3:7.3f}ms{extras}")
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """The compiled stage map for one (model, num_stages, shape)."""
+    cfg_name: str
+    num_stages: int
+    unit_layers: int          # layers per scan group (the pattern period)
+    stages: tuple             # StageSpec per stage
+    tokens_per_step: float
+
+    @property
+    def group_bounds(self) -> tuple:
+        return tuple((s.start_group, s.end_group) for s in self.stages)
+
+    @property
+    def layer_bounds(self) -> tuple:
+        return tuple((s.start_layer, s.end_layer) for s in self.stages)
+
+    @property
+    def imbalance(self) -> float:
+        """max stage cost / mean stage cost — 1.0 is a perfect split; the
+        pipeline clock runs at the max, so this is the stretch factor."""
+        costs = [s.cost for s in self.stages]
+        mean = sum(costs) / len(costs)
+        return max(costs) / mean if mean > 0 else 1.0
+
+    def table(self) -> str:
+        hdr = (f"# PipelinePlan {self.cfg_name} stages={self.num_stages} "
+               f"unit={self.unit_layers} layers/group "
+               f"imbalance={self.imbalance:.3f}")
+        return "\n".join([hdr] + [s.describe() for s in self.stages])
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.cfg_name,
+            "num_stages": self.num_stages,
+            "unit_layers": self.unit_layers,
+            "imbalance": round(self.imbalance, 6),
+            "stages": [{
+                "index": s.index, "layers": [s.start_layer, s.end_layer],
+                "groups": [s.start_group, s.end_group],
+                "flops": s.flops, "weight_bytes": s.weight_bytes,
+                "cost_s": s.cost, "embed": s.has_embed, "head": s.has_head,
+            } for s in self.stages],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-layer pricing (tuner/cost.py arithmetic)
+# ---------------------------------------------------------------------------
+
+
+def _price_ops(ops: list, tokens: float, kind: str) -> tuple:
+    """(flops, weight_bytes) of one layer's op list via gemm_for_phase."""
+    phases = TRAIN_PHASES if kind == "train" else (Phase.FF,)
+    flops = 0.0
+    wbytes = 0.0
+    for op in ops:
+        wbytes += op.weight_bytes
+        if op.role == "state":        # VPU ops: negligible MAC work
+            continue
+        if op.role in ("expert_in", "expert_out") and op.top_k > 0:
+            # E per-expert gemms see tokens*top_k/E rows each
+            n_exp = op.weight_shape[0]
+            t_eff = tokens * op.top_k / n_exp
+            mult = n_exp
+        else:
+            t_eff, mult = tokens, 1
+        for ph in phases:
+            g = gemm_for_phase(op, ph, tokens=t_eff)
+            if g is not None:
+                flops += mult * g.flops
+    return flops, wbytes
+
+
+def layer_costs(cfg: ModelConfig, *, tokens_per_step: float,
+                kind: str = "train") -> list:
+    """Per-layer roofline prices, one LayerCost per model layer."""
+    out = []
+    for i in range(cfg.n_layers):
+        ops = (_attn_ops(cfg, 1) if cfg.is_attention_layer(i)
+               else _ssm_ops(cfg, 1))
+        if cfg.is_moe_layer(i):
+            ops = ops + _moe_ops(cfg, 1)
+            if cfg.moe is not None and cfg.moe.dense_residual:
+                ops = ops + _ffn_ops(cfg, 1)
+        else:
+            ops = ops + _ffn_ops(cfg, 1)
+        f, w = _price_ops(ops, tokens_per_step, kind)
+        out.append(LayerCost(index=i, flops=f, weight_bytes=w))
+    return out
+
+
+def _edge_costs(cfg: ModelConfig, tokens_per_step: float, kind: str) -> tuple:
+    """((flops, bytes) of the embedding, (flops, bytes) of the LM head).
+
+    A tied head is priced like an untied one — the same gemm runs on the
+    head stage every phase, and the V x d table is read there end to end
+    — only its *storage* stays booked on stage 0."""
+    n_ph = len(TRAIN_PHASES if kind == "train" else (Phase.FF,))
+    embed_f, embed_w = 0.0, 0.0
+    head_f, head_w = 0.0, 0.0
+    for op in extract_ops(cfg):
+        if op.role == "embed":
+            embed_w += op.weight_bytes          # lookup: no MAC flops
+            if cfg.tie_embeddings:              # tied head reads it again
+                head_f += n_ph * 2.0 * tokens_per_step \
+                    * math.prod(op.weight_shape)
+                head_w += op.weight_bytes
+        elif op.role == "lm_head":
+            g = gemm_for_phase(op, Phase.FF, tokens=tokens_per_step)
+            head_f += n_ph * (g.flops if g else 0.0)
+            head_w += op.weight_bytes
+    return (embed_f, embed_w), (head_f, head_w)
+
+
+# ---------------------------------------------------------------------------
+# Greedy contiguous partition
+# ---------------------------------------------------------------------------
+
+
+def _greedy_bounds(unit_costs: list, num_stages: int) -> list:
+    """Contiguous [b0=0, b1, ..., bS=n) minimizing deviation from the
+    ideal prefix targets; every stage gets at least one unit."""
+    n = len(unit_costs)
+    prefix = [0.0]
+    for c in unit_costs:
+        prefix.append(prefix[-1] + c)
+    total = prefix[-1]
+    bounds = [0]
+    for s in range(1, num_stages):
+        target = total * s / num_stages
+        lo = bounds[-1] + 1                    # at least one unit behind us
+        hi = n - (num_stages - s)              # leave one per later stage
+        best = min(range(lo, hi + 1),
+                   key=lambda b: abs(prefix[b] - target))
+        bounds.append(best)
+    bounds.append(n)
+    return bounds
+
+
+def partition_model(cfg: ModelConfig, num_stages: int, *,
+                    global_batch: int = 8, seq_len: int = 128,
+                    kind: str = "train") -> PipelinePlan:
+    """Balance the model's layers into `num_stages` memory-module stages.
+
+    Raises ValueError when there are more stages than scan groups — a
+    stage must own at least one group (params stack over groups, so a
+    finer split would tear a stacked leaf).
+    """
+    from repro.models.transformer import layer_pattern, n_groups
+
+    if num_stages < 1:
+        raise ValueError(f"num_stages must be >= 1, got {num_stages}")
+    if cfg.family == "audio":
+        raise ValueError("pipeline stages target decoder-only families; "
+                         "the whisper encoder/decoder is not sliceable yet")
+    period = len(layer_pattern(cfg))
+    ng = n_groups(cfg)
+    if num_stages > ng:
+        raise ValueError(
+            f"{cfg.name}: {num_stages} stages > {ng} scan groups "
+            f"({cfg.n_layers} layers in groups of {period}); params stack "
+            f"over groups, so a stage needs at least one whole group")
+
+    tokens = float(global_batch) * float(seq_len)
+    lcosts = layer_costs(cfg, tokens_per_step=tokens, kind=kind)
+    (emb_f, emb_w), (head_f, head_w) = _edge_costs(cfg, tokens, kind)
+
+    def _cost(f, w):
+        return f / PEAK_FLOPS_BF16 + w / HBM_BW
+
+    # aggregate to scan-group units; pin embed/head costs to the edges so
+    # the greedy accounts for them when placing interior boundaries
+    unit_costs = []
+    for g in range(ng):
+        c = sum(lcosts[i].cost for i in range(g * period, (g + 1) * period))
+        if g == 0:
+            c += _cost(emb_f, emb_w)
+        if g == ng - 1:
+            c += _cost(head_f, head_w)
+        unit_costs.append(c)
+    bounds = _greedy_bounds(unit_costs, num_stages)
+
+    stages = []
+    for s in range(num_stages):
+        g0, g1 = bounds[s], bounds[s + 1]
+        l0, l1 = g0 * period, g1 * period
+        f = sum(lc.flops for lc in lcosts[l0:l1])
+        w = sum(lc.weight_bytes for lc in lcosts[l0:l1])
+        if s == 0:
+            f, w = f + emb_f, w + emb_w
+        if s == num_stages - 1:
+            f, w = f + head_f, w + head_w
+        stages.append(StageSpec(
+            index=s, start_layer=l0, end_layer=l1, start_group=g0,
+            end_group=g1, flops=f, weight_bytes=w, cost=_cost(f, w),
+            has_embed=(s == 0), has_head=(s == num_stages - 1)))
+    return PipelinePlan(cfg_name=cfg.name, num_stages=num_stages,
+                        unit_layers=period, stages=tuple(stages),
+                        tokens_per_step=tokens)

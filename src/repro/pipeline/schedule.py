@@ -1,0 +1,255 @@
+"""Microbatch pipeline schedules: GPipe and 1F1B as explicit event lists.
+
+A NeuroTrainer system scales past one memory module by composing modules
+into a *sliced* pipeline (Memory Slices, arXiv:1803.06068): each module
+owns a contiguous layer group and streams activations to its right
+neighbour, gradients to its left.  The module-level iBuffer story is
+unchanged — every stage still runs its own FF/BP/UP program words — so a
+pipeline schedule is just the *clock* that says which (stage, microbatch,
+phase) word fires when.
+
+This module emits that clock as data: a list of :class:`PipeEvent`
+``(t, stage, microbatch, phase)`` built by list-scheduling each stage's
+action order under the handoff dependencies
+
+  FF(s, m)  needs  FF(s-1, m)   one tick earlier (activation arrives),
+  BP(s, m)  needs  BP(s+1, m)   one tick earlier (grad arrives), and
+  BP(S-1, m) needs FF(S-1, m)   (the loss seeds its own backward),
+
+with one event per stage per tick (a module runs one phase at a time).
+``UP`` fires once per stage after its last BP — the 1F1B cooldown — which
+is where the runner's gradient-accumulated optimizer step lands.
+
+The same event list drives three consumers: the pipeline runner executes
+it (repro/pipeline/runner.py), the dry-run renders it, and the tests
+assert its invariants; bubble accounting (`bubble_fraction`) prices the
+idle slots the benchmarks and fig17 report.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.phases import Phase
+
+SCHEDULES = ("1f1b", "gpipe")
+
+
+@dataclass(frozen=True)
+class PipeEvent:
+    """One program-word firing: stage `stage` runs `phase` on microbatch
+    `microbatch` during clock tick `t` (UP events carry microbatch=-1:
+    the update consumes the whole accumulated dW, not one microbatch)."""
+    t: int
+    stage: int
+    microbatch: int
+    phase: Phase
+
+
+@dataclass(frozen=True)
+class PipeSchedule:
+    kind: str                       # '1f1b' | 'gpipe'
+    num_stages: int
+    num_microbatches: int
+    events: tuple                   # PipeEvent, sorted by (t, stage)
+
+    @property
+    def makespan(self) -> int:
+        """Clock ticks from first FF to last BP (UP rides the final tick)."""
+        return 1 + max(e.t for e in self.events
+                       if e.phase in (Phase.FF, Phase.BP))
+
+    def stage_events(self, stage: int) -> list:
+        return [e for e in self.events if e.stage == stage]
+
+    def bubble_fraction(self) -> float:
+        return bubble_fraction(self)
+
+    def peak_in_flight(self, stage: int) -> int:
+        """Max microbatches whose FF ran on `stage` but whose BP has not —
+        the live-activation (vjp residual) footprint 1F1B bounds."""
+        live = peak = 0
+        for e in sorted(self.stage_events(stage), key=lambda e: e.t):
+            if e.phase == Phase.FF:
+                live += 1
+                peak = max(peak, live)
+            elif e.phase == Phase.BP:
+                live -= 1
+        return peak
+
+    def render(self, width: int = 120) -> str:
+        """ASCII timeline, one row per stage: F3 = FF of microbatch 3,
+        B3 = BP, U = the cooldown UP, . = bubble."""
+        span = 1 + max(e.t for e in self.events)      # incl. the UP tick
+        cell = max(2, len(str(self.num_microbatches - 1)) + 1)
+        grid = [["." * cell] * span for _ in range(self.num_stages)]
+        for e in self.events:
+            tag = "U" * cell if e.phase == Phase.UP else \
+                f"{'F' if e.phase == Phase.FF else 'B'}{e.microbatch}"
+            grid[e.stage][e.t] = tag.ljust(cell)
+        rows = [f"s{s} |" + "|".join(grid[s])[: width - 4]
+                for s in range(self.num_stages)]
+        head = (f"# {self.kind} S={self.num_stages} M={self.num_microbatches} "
+                f"makespan={span} bubble={self.bubble_fraction():.1%}")
+        return "\n".join([head] + rows)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage action orders
+# ---------------------------------------------------------------------------
+
+
+def _orders_gpipe(S: int, M: int) -> list:
+    """All forwards, then all backwards (flush at the barrier)."""
+    return [[(Phase.FF, m) for m in range(M)] + [(Phase.BP, m) for m in range(M)]
+            for _ in range(S)]
+
+
+def _orders_1f1b(S: int, M: int) -> list:
+    """PipeDream-flush: stage s warms up with min(M, S-1-s) forwards, then
+    alternates 1F1B through the steady state, then drains backwards.  Same
+    bubble as GPipe, but peak in-flight activations drop from M to
+    min(M, S-s)."""
+    orders = []
+    for s in range(S):
+        warm = min(M, S - 1 - s)
+        seq = [(Phase.FF, m) for m in range(warm)]
+        f = warm
+        for b in range(M):
+            if f < M:
+                seq.append((Phase.FF, f))
+                f += 1
+            seq.append((Phase.BP, b))
+        orders.append(seq)
+    return orders
+
+
+def build_schedule(kind: str, num_stages: int, num_microbatches: int) -> PipeSchedule:
+    """List-schedule the per-stage action orders under handoff deps."""
+    S, M = num_stages, num_microbatches
+    if S < 1:
+        raise ValueError(f"num_stages must be >= 1, got {S}")
+    if M < 1:
+        raise ValueError(f"num_microbatches must be >= 1, got {M}")
+    if kind not in SCHEDULES:
+        raise ValueError(f"unknown schedule {kind!r}; known: {SCHEDULES}")
+    orders = _orders_1f1b(S, M) if kind == "1f1b" else _orders_gpipe(S, M)
+
+    done: dict = {}                  # (phase, stage, mb) -> completion tick
+    next_free = [0] * S              # first free tick per stage
+    idx = [0] * S                    # progress through each stage's order
+    events: list = []
+    remaining = sum(len(o) for o in orders)
+    while remaining:
+        progressed = False
+        for s in range(S):
+            if idx[s] >= len(orders[s]):
+                continue
+            phase, m = orders[s][idx[s]]
+            if phase == Phase.FF:
+                dep = done.get((Phase.FF, s - 1, m)) if s > 0 else None
+            else:
+                if s < S - 1:
+                    dep = done.get((Phase.BP, s + 1, m))
+                else:                # loss stage: BP follows its own FF
+                    dep = done.get((Phase.FF, s, m))
+                    if dep is not None:
+                        dep -= 1     # may run the very next tick
+            if phase == Phase.FF and s == 0:
+                t = next_free[s]
+            elif dep is None:
+                continue             # dependency not yet scheduled
+            else:
+                t = max(next_free[s], dep + 1)
+            events.append(PipeEvent(t, s, m, phase))
+            done[(phase, s, m)] = t
+            next_free[s] = t + 1
+            idx[s] += 1
+            remaining -= 1
+            progressed = True
+        if not progressed:
+            raise RuntimeError(f"{kind} schedule deadlocked at {events[-5:]}")
+
+    # UP: once per stage, after its last BP (the 1F1B cooldown).
+    for s in range(S):
+        t_last = max(e.t for e in events if e.stage == s and e.phase == Phase.BP)
+        events.append(PipeEvent(t_last + 1, s, -1, Phase.UP))
+    events.sort(key=lambda e: (e.t, e.stage))
+    return PipeSchedule(kind=kind, num_stages=S, num_microbatches=M,
+                        events=tuple(events))
+
+
+# ---------------------------------------------------------------------------
+# Accounting + invariants
+# ---------------------------------------------------------------------------
+
+
+def bubble_fraction(sched: PipeSchedule) -> float:
+    """Idle fraction of the (stages x makespan) grid during FF+BP.  Both
+    GPipe and 1F1B with uniform stage times sit at (S-1)/(M+S-1)."""
+    span = sched.makespan
+    busy = sum(1 for e in sched.events if e.phase in (Phase.FF, Phase.BP))
+    return 1.0 - busy / (span * sched.num_stages)
+
+
+def ideal_bubble(num_stages: int, num_microbatches: int) -> float:
+    """Closed form for uniform stages: (S-1) / (M + S-1)."""
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def validate(sched: PipeSchedule) -> None:
+    """Raise AssertionError on any broken pipeline invariant.  Shared by
+    the runner (debug) and tests/test_pipeline.py."""
+    S, M = sched.num_stages, sched.num_microbatches
+    t_of = {(e.phase, e.stage, e.microbatch): e.t for e in sched.events
+            if e.phase != Phase.UP}
+    # every (stage, mb) runs FF and BP exactly once
+    assert len(t_of) == 2 * S * M, "missing or duplicate events"
+    busy: dict = {}
+    for e in sched.events:
+        if e.phase == Phase.UP:
+            continue
+        key = (e.stage, e.t)
+        assert key not in busy, f"stage {e.stage} double-booked at t={e.t}"
+        busy[key] = e
+    for m in range(M):
+        for s in range(S):
+            f, b = t_of[(Phase.FF, s, m)], t_of[(Phase.BP, s, m)]
+            assert f < b, f"BP before FF for stage {s} mb {m}"
+            if s > 0:
+                assert t_of[(Phase.FF, s - 1, m)] < f, \
+                    f"FF({s},{m}) before its input exists"
+            if s < S - 1:
+                assert t_of[(Phase.BP, s + 1, m)] < b, \
+                    f"BP({s},{m}) before its grad exists"
+    for s in range(S):
+        ups = [e for e in sched.events if e.stage == s and e.phase == Phase.UP]
+        assert len(ups) == 1, f"stage {s} must fire UP exactly once"
+        last_bp = max(t for (p, st, _), t in t_of.items()
+                      if st == s and p == Phase.BP)
+        assert ups[0].t > last_bp, f"stage {s} UP before its last BP"
+
+
+def events_at(sched: PipeSchedule, t: int) -> list:
+    return [e for e in sched.events if e.t == t]
+
+
+def summarize(sched: PipeSchedule) -> dict:
+    """JSON-ready summary for the dry-run artifact / benchmarks."""
+    return {
+        "kind": sched.kind,
+        "num_stages": sched.num_stages,
+        "num_microbatches": sched.num_microbatches,
+        "makespan": sched.makespan,
+        "bubble_fraction": round(sched.bubble_fraction(), 6),
+        "ideal_bubble": round(ideal_bubble(sched.num_stages,
+                                           sched.num_microbatches), 6),
+        "peak_in_flight": [sched.peak_in_flight(s)
+                           for s in range(sched.num_stages)],
+    }
+
+
+def make_schedule(num_stages: int, num_microbatches: int,
+                  kind: Optional[str] = None) -> PipeSchedule:
+    """Default entry point: 1F1B unless asked otherwise."""
+    return build_schedule(kind or "1f1b", num_stages, num_microbatches)

@@ -114,6 +114,17 @@ def cast_params(params, dtype):
         lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, params)
 
 
+def split_microbatches(batch: dict, nm: int) -> dict:
+    """Strided microbatch split: micro-batch m takes rows r with r % nm == m
+    so every data shard contributes to every micro-batch.  Leaves become
+    (nm, B/nm, ...).  Shared by the single-module gradient-accumulation
+    scan and the pipeline runner (repro/pipeline/runner.py) so both paths
+    feed bit-identical microbatches."""
+    return jax.tree.map(
+        lambda x: x.reshape(x.shape[0] // nm, nm, *x.shape[1:]).swapaxes(0, 1),
+        batch)
+
+
 def make_train_step(cfg: ModelConfig, program: Program,
                     train_cfg: TrainConfig, mesh=None):
     policy = program.policy
@@ -158,11 +169,7 @@ def make_train_step(cfg: ModelConfig, program: Program,
                 gi = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gi)
                 return (l + li, gi), None
 
-            # strided split: micro-batch m takes rows r with r % nm == m so
-            # every data shard contributes to every micro-batch
-            micro = jax.tree.map(
-                lambda x: x.reshape(x.shape[0] // nm, nm,
-                                    *x.shape[1:]).swapaxes(0, 1), batch)
+            micro = split_microbatches(batch, nm)
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             if zspecs is not None:
                 g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0, zspecs)

@@ -1,0 +1,136 @@
+"""Docs health gate: links resolve, quickstarts execute.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks over README.md, DESIGN.md, ROADMAP.md and docs/*.md:
+
+  * every relative markdown link ``[text](path)`` must point at a file
+    or directory that exists (anchors stripped; http/mailto skipped);
+  * every ``python -m <module> ...`` command inside a fenced ```bash
+    block is re-run as ``python -m <module> --help`` — the cheapest
+    proof the documented entry point still imports and parses args.
+    Leading ``VAR=VAL`` prefixes are honoured; non-python lines (pip
+    install, output samples) are skipped.
+
+Exit nonzero on any broken link or failing quickstart, listing all
+violations (CI: the `docs` job).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_GLOBS = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list:
+    files = [os.path.join(ROOT, f) for f in DOC_GLOBS
+             if os.path.exists(os.path.join(ROOT, f))]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        files += [os.path.join(docs_dir, f)
+                  for f in sorted(os.listdir(docs_dir)) if f.endswith(".md")]
+    return files
+
+
+def check_links(path: str) -> list:
+    bad = []
+    text = open(path).read()
+    base = os.path.dirname(path)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            bad.append(f"{os.path.relpath(path, ROOT)}: broken link -> {target}")
+    return bad
+
+
+def _commands(block: str) -> list:
+    """Merged command lines (backslash continuations folded)."""
+    merged: list = []
+    cur = ""
+    for line in block.splitlines():
+        line = line.rstrip()
+        if cur:
+            cur += " " + line.strip()
+        else:
+            cur = line.strip()
+        if cur.endswith("\\"):
+            cur = cur[:-1].rstrip()
+            continue
+        if cur:
+            merged.append(cur)
+        cur = ""
+    if cur:
+        merged.append(cur)
+    return merged
+
+
+def check_quickstarts(path: str) -> tuple:
+    """(violations, n_checked) for one file's fenced bash blocks."""
+    bad: list = []
+    checked = 0
+    text = open(path).read()
+    for block in _FENCE.findall(text):
+        for cmd in _commands(block):
+            if cmd.startswith("#"):
+                continue
+            try:
+                toks = shlex.split(cmd)
+            except ValueError:
+                continue
+            env = dict(os.environ)
+            while toks and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", toks[0]):
+                k, v = toks.pop(0).split("=", 1)
+                env[k] = v
+            if not toks or toks[0] not in ("python", "python3"):
+                continue
+            if "-m" not in toks:
+                continue
+            module = toks[toks.index("-m") + 1]
+            env.setdefault("PYTHONPATH", "src")
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            checked += 1
+            proc = subprocess.run(
+                [sys.executable, "-m", module, "--help"], env=env, cwd=ROOT,
+                capture_output=True, text=True, timeout=300)
+            if proc.returncode != 0:
+                bad.append(
+                    f"{os.path.relpath(path, ROOT)}: `{cmd}` -> "
+                    f"`python -m {module} --help` exited "
+                    f"{proc.returncode}: {proc.stderr.strip()[-300:]}")
+    return bad, checked
+
+
+def main() -> int:
+    files = doc_files()
+    bad: list = []
+    n_cmds = 0
+    for f in files:
+        bad += check_links(f)
+        b, n = check_quickstarts(f)
+        bad += b
+        n_cmds += n
+    print(f"[docs] {len(files)} files, {n_cmds} quickstart commands checked")
+    if bad:
+        print("[docs] FAIL:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print("[docs] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
