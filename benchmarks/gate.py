@@ -1,7 +1,7 @@
-"""CI perf gate: run the benchmark harness, record BENCH_3.json, compare
+"""CI perf gate: run the benchmark harness, record BENCH_5.json, compare
 against the committed baseline.
 
-    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_3.json]
+    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_5.json]
         [--baseline benchmarks/baseline.json] [--update]
 
 Runs ``benchmarks.run`` (the smoke-sized figure/table suites) and
@@ -29,10 +29,13 @@ import sys
 
 DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
-# autotuner's predicted speedup/bytes and the pipeline partitioner's
-# predicted bubble/imbalance/speedup
+# autotuner's predicted speedup/bytes, the pipeline partitioner's
+# predicted bubble/imbalance/speedup, and the memory planner's
+# planned peak/fragmentation
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
-              "pred_imbalance")
+              "pred_imbalance", "pred_peak_mb", "pred_frag")
+# metrics where bigger is worse (gate direction "lower")
+LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag")
 
 
 def _parse_rows(text: str) -> dict:
@@ -80,7 +83,8 @@ def collect(suites: str) -> tuple:
     if suites == "all":
         # autotune runs as its own subprocess below (the CI contract is
         # `run.py` + `autotune_gemm --smoke`); don't execute it twice
-        suites = "table1,fig10,fig13,fig16,table6,fig17,serve,pipeline"
+        suites = ("table1,fig10,fig13,fig16,table6,fig17,serve,pipeline,"
+                  "memory_plan")
     rc, out = _run([sys.executable, "-m", "benchmarks.run",
                     "--only", suites])
     ok &= rc == 0
@@ -126,8 +130,7 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
         for k in GATED_KEYS:
             v = r["derived"].get(k)
             if isinstance(v, (int, float)):
-                direction = ("lower" if any(t in k for t in
-                                            ("ratio", "bubble", "imbalance"))
+                direction = ("lower" if any(t in k for t in LOWER_IS_BETTER)
                              else "higher")
                 metrics[f"{name}:{k}"] = {"value": v, "direction": direction}
     return {"threshold": threshold, "require_rows": sorted(rows),
@@ -136,7 +139,7 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_3.json")
+    ap.add_argument("--out", default="BENCH_5.json")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--suites", default=DEFAULT_SUITES,
                     help="benchmarks.run --only value")

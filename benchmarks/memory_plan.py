@@ -1,0 +1,119 @@
+"""Planned-memory benchmark: deterministic peak bytes + fragmentation per
+paper net (memory planner, repro/memory).
+
+Rows (all pure host arithmetic — bit-stable across machines, gated by
+benchmarks/gate.py):
+
+  memory_plan/alexnet          — the paper's Fig 13 net, conv/fc lifetimes
+      hand-derived (CNNConfig carries no scan groups) and allocated by
+      the SAME first-fit arena the LLM planner uses.
+  memory_plan/<family>_none    — transformer / RWKV / MoE assigned archs
+      at train_4k on the production mesh, remat=none: the raw peak.
+  memory_plan/<family>_auto    — the policy search's chosen point for a
+      deliberately tight 8GB module budget (forces remat/microbatch
+      choices on the bigger nets): peak, rematted groups, microbatch.
+
+    PYTHONPATH=src python -m benchmarks.memory_plan [--smoke]
+
+(--smoke is accepted for CI symmetry; the suite is pure host arithmetic
+and already CI-sized, so smoke and full runs emit identical rows — a
+requirement for gating them against one committed baseline.)
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+
+ARCHS = (("transformer", "qwen2-0.5b"),
+         ("rwkv", "rwkv6-1.6b"),
+         ("moe", "granite-moe-1b-a400m"))
+ALEXNET_BATCH = 128
+
+
+def _alexnet_row():
+    from repro.configs.paper_nets import ALEXNET
+    from repro.memory import allocate
+    from repro.memory.liveness import LivenessTable, TensorInterval
+
+    layers = []                      # (name, weight_bytes, act_bytes)
+    hw, in_ch = ALEXNET.in_hw, ALEXNET.in_ch
+    for i, c in enumerate(ALEXNET.convs):
+        hw = (hw - c.kernel) // c.stride + 1 if c.pad == "VALID" \
+            else -(-hw // c.stride)
+        w = c.kernel * c.kernel * in_ch * c.out_ch * 2
+        if c.pool:
+            hw //= c.pool
+        layers.append((f"conv{i + 1}", w,
+                       ALEXNET_BATCH * hw * hw * c.out_ch * 2))
+        in_ch = c.out_ch
+    feat = hw * hw * in_ch
+    for i, width in enumerate(ALEXNET.fcs + (ALEXNET.n_classes,)):
+        layers.append((f"fc{i + 1}", feat * width * 2,
+                       ALEXNET_BATCH * width * 2))
+        feat = width
+    L = len(layers)
+    T = 2 * L + 1                    # FF sweep, BP sweep, UP
+    table = LivenessTable(
+        tick_phases=["FF"] * L + ["BP"] * L + ["UP"])
+    for i, (name, w, a) in enumerate(layers):
+        params = w // 2
+        table.intervals += [
+            TensorInterval(name=name, region="weights", bytes=w,
+                           birth=0, death=T, phase="FF"),
+            TensorInterval(name=f"{name}.opt", region="optim",
+                           bytes=params * 4, birth=0, death=T, phase="UP"),
+            TensorInterval(name=f"{name}.grad", region="grads",
+                           bytes=params * 4, birth=L, death=T, phase="BP"),
+            # act of layer i: written by FF tick i, consumed by BP tick
+            # 2L-1-i (reverse order)
+            TensorInterval(name=f"{name}.act", region="activation", bytes=a,
+                           birth=i, death=2 * L - i, phase="FF"),
+        ]
+    plan = allocate(table)
+    return [row("memory_plan/alexnet", 0.0,
+                f"pred_peak_mb={plan.arena_bytes / 1e6:.3f} "
+                f"pred_frag={plan.fragmentation:.4f} "
+                f"batch={ALEXNET_BATCH} layers={L}")]
+
+
+AUTO_BUDGET = 8e9
+
+
+def _arch_rows():
+    from repro.configs import SHAPES, get_config
+    from repro.core import MeshSpec, compile_program
+    from repro.memory import choose_policy
+
+    mesh = MeshSpec(axis_sizes={"data": 16, "model": 16})
+    shape = SHAPES["train_4k"]
+    rows = []
+    for tag, arch in ARCHS:
+        cfg = get_config(arch)
+        prog = compile_program(cfg, shape, mesh, remat="none")
+        plan = prog.memory_plan()
+        rows.append(row(
+            f"memory_plan/{tag}_none", 0.0,
+            f"pred_peak_mb={plan.arena_bytes / 1e6:.3f} "
+            f"pred_frag={plan.fragmentation:.4f}"))
+        pol = choose_policy(cfg, shape, mesh, hbm_budget=AUTO_BUDGET)
+        rows.append(row(
+            f"memory_plan/{tag}_auto", 0.0,
+            f"pred_peak_mb={pol.peak_bytes / 1e6:.3f} "
+            f"pred_frag={pol.plan.fragmentation:.4f} "
+            f"remat_groups={pol.n_rematted} microbatch={pol.microbatch} "
+            f"fits={int(pol.fits)}"))
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    del smoke                      # identical rows by design (see docstring)
+    return _alexnet_row() + _arch_rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smaller microbatch search)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -1,0 +1,39 @@
+"""Version seams for jax API drift.
+
+One import site for symbols that moved between the jax versions this
+repo runs on (CI tracks latest; local containers may pin 0.4.x):
+
+- ``shard_map``: ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (<= 0.4.x), including the
+  ``check_vma`` -> ``check_rep`` keyword rename.  Import it from here —
+  ``pipeline/runner.py``, ``engine/context.py`` and ``models/moe.py``
+  all resolve the seam through this module, so a jax bump is a one-file
+  change.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                          # jax >= 0.6
+    _shard_map = jax.shard_map
+except AttributeError:                        # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# keyword rename: check_rep (old) -> check_vma (new).  Normalise on the
+# NEW spelling so call sites are written once, against current jax.
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+_HAS_CHECK_REP = "check_rep" in _PARAMS
+
+
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` across jax versions (accepts ``check_vma=``)."""
+    if "check_vma" in kwargs and not _HAS_CHECK_VMA:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "check_rep" in kwargs and not _HAS_CHECK_REP:  # pragma: no cover
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if f is None:
+        return lambda g: _shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)

@@ -156,6 +156,10 @@ class DataflowPlan:
     batch_spec: tuple = ()                # sharding of the batch dim
     seq_spec: Optional[str] = None        # axis sharding the sequence dim (SP) or None
     notes: list = field(default_factory=list)
+    # byte-accounting inputs recorded by plan_model so downstream totals
+    # use the precision policy's dtypes, not a hard-coded f32 assumption
+    state_bytes_per_param: int = 6        # param + 2 moments (policy dtypes)
+    grad_bytes: int = 4                   # dW signal bytes (param dtype)
 
     def __getitem__(self, name: str) -> OpPlan:
         return self.ops[name]
@@ -171,8 +175,27 @@ class DataflowPlan:
                 out[ph] = out.get(ph, 0.0) + b
         return out
 
-    def total_mem_bytes(self) -> float:
+    def total_weight_bytes(self) -> float:
+        """Per-device parameter storage only."""
         return sum(p.mem_bytes_per_device for p in self.ops.values())
+
+    def total_mem_bytes(self) -> float:
+        """Per-device persistent state: params + optimizer moments at the
+        PRECISION POLICY's m/v dtype (``state_bytes_per_param``) — not the
+        historical weights-only / f32-moments arithmetic.  Serve-kind
+        plans record ``state_bytes_per_param == param itemsize``, so this
+        degrades to the weight total there."""
+        return sum(p.mem_bytes_per_device * self.state_bytes_per_param
+                   / p.op.dtype_bytes for p in self.ops.values())
+
+    def total_state_bytes(self) -> float:
+        """total_mem_bytes plus the transient f32 dW accumulator train
+        steps carry (the HBM-budget pass measure)."""
+        tot = self.total_mem_bytes()
+        if self.kind == "train":
+            tot += sum(p.mem_bytes_per_device * 4.0 / p.op.dtype_bytes
+                       for p in self.ops.values())
+        return tot
 
     def table(self) -> str:
         hdr = (f"# DataflowPlan kind={self.kind} mesh={self.mesh.axis_sizes} "
@@ -446,9 +469,18 @@ def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4,
 def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
                kind: str, hbm_budget: float = 0.9 * HBM_BYTES,
                state_bytes_per_param: int = 6, microbatch: int = 1,
-               overrides: Optional[dict] = None) -> DataflowPlan:
+               overrides: Optional[dict] = None, grad_bytes: int = 4,
+               reserved_bytes: float = 0.0) -> DataflowPlan:
     """Plan every op; enforce the HBM budget by flipping the
-    worst (mem saved / comm added) REPLICATE ops to PARTITION."""
+    worst (mem saved / comm added) REPLICATE ops to PARTITION.
+
+    grad_bytes: dW signal bytes per element — the engine emits weight
+    cotangents at the PARAM dtype (engine/context._grad_layout), so the
+    precision policy decides this, not a hard-coded f32.
+    reserved_bytes: transient bytes the budget pass must leave free —
+    the memory planner's activation/workspace/cache peak
+    (core.program.compile_program routes its budget pass through here).
+    """
     dp = mesh.dp
     nm = max(1, microbatch)
     tokens_per_dp, batch_axes = step_tokens_per_shard(
@@ -456,7 +488,9 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
 
     seq_shardable = kind != "decode" and _divisible(seq_len, mesh.tp)
     plan = DataflowPlan(mesh=mesh, kind=kind, batch_spec=tuple(batch_axes),
-                        seq_spec=mesh.tp_axis if seq_shardable else None)
+                        seq_spec=mesh.tp_axis if seq_shardable else None,
+                        state_bytes_per_param=state_bytes_per_param,
+                        grad_bytes=grad_bytes)
     if len(batch_axes) < len(mesh.batch_axes):
         plan.notes.append(
             f"batch={global_batch} not divisible by full dp={dp}; "
@@ -467,19 +501,14 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
         plan.ops[op.name] = plan_op(
             op, mesh, tokens_per_dp_shard=tokens_per_dp, kind=kind,
             force=overrides.get(op.name), seq_shardable=seq_shardable,
-            microbatch=nm)
+            microbatch=nm, grad_bytes=grad_bytes)
 
-    # HBM budget pass: params + optimizer state + the transient f32 dW
-    # accumulator (REPLICATE ops accumulate a FULL-size gradient per device
-    # through the backward scan — measured 3.6 GB/leaf on minitron).
+    # HBM budget pass: params + optimizer state (policy dtypes) + the
+    # transient f32 dW accumulator (REPLICATE ops accumulate a FULL-size
+    # gradient per device through the backward scan — measured 3.6 GB/leaf
+    # on minitron) + the planner's reserved transient peak.
     def state_mem() -> float:
-        tot = 0.0
-        for p in plan.ops.values():
-            scale = state_bytes_per_param / p.op.dtype_bytes
-            tot += p.mem_bytes_per_device * scale
-            if kind == "train":
-                tot += p.mem_bytes_per_device * 4.0 / p.op.dtype_bytes
-        return tot
+        return plan.total_state_bytes() + reserved_bytes
 
     flips = 0
     while state_mem() > hbm_budget:
@@ -493,7 +522,7 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
         plan.ops[worst.op.name] = plan_op(
             worst.op, mesh, tokens_per_dp_shard=tokens_per_dp, kind=kind,
             force=Strategy.PARTITION, seq_shardable=seq_shardable,
-            microbatch=nm)
+            microbatch=nm, grad_bytes=grad_bytes)
         flips += 1
     if flips:
         plan.notes.append(f"HBM budget pass flipped {flips} ops to PARTITION")
@@ -507,7 +536,8 @@ def plan_model(ops: list, mesh: MeshSpec, *, global_batch: int, seq_len: int,
         fwd_phase = {"decode": Phase.DECODE, "prefill": Phase.PREFILL}.get(
             kind, Phase.FF)
         for c in cands:
-            z = add_zero3_data(c, mesh, fwd_phase=fwd_phase)
+            z = add_zero3_data(c, mesh, fwd_phase=fwd_phase,
+                               grad_bytes=grad_bytes)
             if z is not None:
                 plan.ops[c.op.name] = z
                 zflips += 1

@@ -17,8 +17,8 @@ from typing import Optional
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.dataflow import (DataflowPlan, MeshSpec, OpSpec, Strategy,
-                                 plan_model)
+from repro.core.dataflow import (DataflowPlan, HBM_BYTES, MeshSpec, OpSpec,
+                                 Strategy, plan_model)
 from repro.core.phases import Phase
 from repro.core.precision import PrecisionPolicy, get_policy
 
@@ -127,6 +127,24 @@ def _ssm_ops(cfg: ModelConfig, n_layers: int) -> list:
                act_in_features=di, act_out_features=d,
                flops_per_token=2 * di * d),
     ]
+
+
+def layer_ops(cfg: ModelConfig, i: int) -> list:
+    """One model layer's weight-bearing ops (n_layers=1 specs).
+
+    The per-layer view of :func:`extract_ops`'s aggregated list — shared
+    by the pipeline partitioner's per-layer pricing and the memory
+    planner's per-scan-group activation accounting.
+    """
+    ops = (_attn_ops(cfg, 1) if cfg.is_attention_layer(i)
+           else _ssm_ops(cfg, 1))
+    if cfg.is_moe_layer(i):
+        ops = ops + _moe_ops(cfg, 1)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            ops = ops + _ffn_ops(cfg, 1)
+    else:
+        ops = ops + _ffn_ops(cfg, 1)
+    return ops
 
 
 def extract_ops(cfg: ModelConfig, *, layer_range: Optional[tuple] = None,
@@ -263,6 +281,14 @@ class Program:
     # autotuned per-phase tiles: op name -> {Phase: (tm, tn, tk)}.  Empty
     # for an untuned program (kernels run their default tiles).
     tilings: dict = field(default_factory=dict)
+    # memory planner attachment (repro/memory): the lifetime table this
+    # program was budgeted with, the remat/microbatch it assumed, and the
+    # stage scope it was compiled for.  `memory_plan()` allocates lazily.
+    memory_table: Optional[object] = None      # memory.liveness.LivenessTable
+    remat: object = "none"                     # str | per-group tuple
+    microbatch: int = 1
+    layer_range: Optional[tuple] = None
+    _memory_plan: Optional[object] = field(default=None, repr=False)
 
     def weight_spec(self, op_name: str, *, stacked: bool = True) -> P:
         """PartitionSpec for a param; `stacked` adds the scan (L,) dim."""
@@ -318,6 +344,21 @@ class Program:
             return ()
         return tuple(sorted((str(ph), tuple(t)) for ph, t in tiles.items()))
 
+    # --- memory ------------------------------------------------------------
+
+    def memory_plan(self):
+        """The allocated arena for this program (lazy, cached).
+
+        ``memory_table`` (the liveness intervals) is built eagerly by
+        ``compile_program``; the first-fit allocation is deferred to the
+        consumers that want offsets/timeline (dry-run artifact, CLI
+        prints, the policy search's fit confirmation).
+        """
+        if self._memory_plan is None and self.memory_table is not None:
+            from repro.memory.arena import allocate
+            self._memory_plan = allocate(self.memory_table)
+        return self._memory_plan
+
     # --- reporting ---------------------------------------------------------
 
     def ibuffer_entries(self) -> list:
@@ -371,6 +412,12 @@ class Program:
         return 22 * len(self.ibuffer_entries())
 
     def to_json(self) -> str:
+        mem = None
+        if self.memory_table is not None:
+            mem = {"peak_bytes": self.memory_table.peak_bytes(),
+                   "phase_peaks": self.memory_table.phase_peaks(),
+                   "transient_peak": self.memory_table.transient_peak(),
+                   "notes": self.memory_table.notes}
         return json.dumps({
             "arch": self.cfg.name, "shape": self.shape.name,
             "mesh": self.mesh_spec.axis_sizes,
@@ -379,15 +426,23 @@ class Program:
             "seq_spec": self.plan.seq_spec,
             "ibuffer": self.ibuffer_entries(),
             "ibuffer_bytes": self.ibuffer_size_bytes(),
+            "memory": mem,
             "notes": self.plan.notes,
         }, indent=1)
 
     def describe(self) -> str:
-        return (f"Program[{self.cfg.name} x {self.shape.name} @ "
-                f"{self.mesh_spec.axis_sizes}] precision={self.policy.name}\n"
-                + self.plan.table()
-                + f"\niBuffer: {len(self.ibuffer_entries())} words, "
-                  f"{self.ibuffer_size_bytes()} bytes")
+        out = (f"Program[{self.cfg.name} x {self.shape.name} @ "
+               f"{self.mesh_spec.axis_sizes}] precision={self.policy.name}\n"
+               + self.plan.table()
+               + f"\niBuffer: {len(self.ibuffer_entries())} words, "
+                 f"{self.ibuffer_size_bytes()} bytes")
+        if self.memory_table is not None:
+            peaks = " ".join(f"{p}={b / 1e6:.0f}MB" for p, b in
+                             self.memory_table.phase_peaks().items())
+            out += (f"\nmemory: planned peak="
+                    f"{self.memory_table.peak_bytes() / 1e9:.2f}GB/dev "
+                    f"({peaks})")
+        return out
 
 
 def _normalize_tuning(tuning) -> tuple:
@@ -413,12 +468,42 @@ def _normalize_tuning(tuning) -> tuple:
     return overrides, tilings
 
 
+def _build_liveness(cfg, plan, shape, policy, *, microbatch: int, remat,
+                    layer_range, in_flight: int = 1):
+    """The program's lifetime table (None for families without a layer
+    pattern — cnn/rnn paper nets don't scan groups)."""
+    if cfg.family in ("cnn", "rnn"):
+        return None
+    import jax.numpy as jnp
+
+    from repro.memory import serving_liveness, train_liveness
+    act_bytes = jnp.dtype(policy.ff_dtype).itemsize
+    if shape.kind == "train":
+        table = train_liveness(
+            cfg, plan, global_batch=shape.global_batch, seq_len=shape.seq_len,
+            microbatch=microbatch, remat=remat, layer_range=layer_range,
+            state_itemsize=jnp.dtype(policy.state_dtype).itemsize,
+            param_itemsize=jnp.dtype(policy.param_dtype).itemsize,
+            act_dtype_bytes=act_bytes, in_flight=in_flight)
+    else:
+        table = serving_liveness(cfg, plan, n_slots=shape.global_batch,
+                                 max_len=shape.seq_len,
+                                 act_dtype_bytes=act_bytes)
+    if cfg.enc_layers:
+        table.notes.append("encoder stack not in the lifetime table "
+                           "(decoder-only scan groups)")
+    return table
+
+
 def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                     *, precision: str = "paper_sr_bf16", microbatch: int = 1,
                     overrides: Optional[dict] = None,
                     tuning=None, layer_range: Optional[tuple] = None,
                     include_embed: bool = True,
-                    include_head: bool = True) -> Program:
+                    include_head: bool = True,
+                    remat="block",
+                    hbm_budget: float = 0.9 * HBM_BYTES,
+                    in_flight: int = 1) -> Program:
     """The 'host' step of Fig 12: DNN description -> loaded iBuffer.
 
     tuning: a ``repro.tuner.ProgramTuning`` (or its to_dict() form) — the
@@ -430,6 +515,14 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
     that stage executes, and the HBM budget pass sees only that stage's
     state — the per-stage budget.  `compile_stage_programs` drives this
     for a whole `repro.pipeline` stage map.
+
+    remat ('none' | 'block' | per-scan-group tuple) and microbatch feed
+    the memory planner (repro/memory): the HBM budget pass no longer
+    sums state bytes alone — it reserves the planner's transient peak
+    (activations / recompute workspace / serve caches) so "does it fit"
+    is answered against the whole step's lifetimes.  The resulting
+    lifetime table rides the Program (``memory_table`` /
+    ``memory_plan()``).
     """
     import dataclasses
 
@@ -439,15 +532,38 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
     import jax.numpy as jnp
     state_bytes = (policy.bytes_per_param_state if shape.kind == "train"
                    else jnp.dtype(policy.param_dtype).itemsize)
+    # dW cotangents are emitted at the PARAM dtype (engine _grad_layout),
+    # so comm/state grad arithmetic follows the policy, not f32
+    grad_bytes = jnp.dtype(policy.param_dtype).itemsize
     tuned_overrides, tilings = _normalize_tuning(tuning)
     merged = dict(tuned_overrides)
     merged.update(overrides or {})
-    plan = plan_model(
-        ops, mesh_spec, global_batch=shape.global_batch, seq_len=shape.seq_len,
-        kind=shape.kind, microbatch=microbatch,
-        state_bytes_per_param=state_bytes,
-        overrides={k: Strategy(v) if not isinstance(v, Strategy) else v
-                   for k, v in merged.items()})
+    merged = {k: Strategy(v) if not isinstance(v, Strategy) else v
+              for k, v in merged.items()}
+    plan_kw = dict(global_batch=shape.global_batch, seq_len=shape.seq_len,
+                   kind=shape.kind, microbatch=microbatch,
+                   state_bytes_per_param=state_bytes, grad_bytes=grad_bytes,
+                   hbm_budget=hbm_budget, overrides=merged)
+    plan = plan_model(ops, mesh_spec, **plan_kw)
+    table = _build_liveness(cfg, plan, shape, policy, microbatch=microbatch,
+                            remat=remat, layer_range=layer_range,
+                            in_flight=in_flight)
+    if table is not None:
+        # route the HBM budget pass through the planner: when state PLUS
+        # the transient peak busts the module budget, replan with that
+        # peak reserved (flips more ops to PARTITION/zero3), then rebuild
+        # the lifetimes against the final byte truth
+        transient = table.transient_peak()
+        if transient and plan.total_state_bytes() + transient > hbm_budget:
+            plan = plan_model(ops, mesh_spec, reserved_bytes=transient,
+                              **plan_kw)
+            plan.notes.append(
+                f"budget pass reserved {transient / 1e9:.2f}GB of planned "
+                f"transient peak (memory planner)")
+            table = _build_liveness(cfg, plan, shape, policy,
+                                    microbatch=microbatch, remat=remat,
+                                    layer_range=layer_range,
+                                    in_flight=in_flight)
     # render the tuned tiles into the plan rows so table()/describe() (and
     # the dry-run artifact) show the FULL mapping, not just the strategy
     for name, tiles in tilings.items():
@@ -455,27 +571,46 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
             plan.ops[name] = dataclasses.replace(plan.ops[name],
                                                  tiling=dict(tiles))
     return Program(cfg=cfg, shape=shape, mesh_spec=mesh_spec, policy=policy,
-                   plan=plan, ops=ops, tilings=tilings)
+                   plan=plan, ops=ops, tilings=tilings, memory_table=table,
+                   remat=remat, microbatch=max(1, microbatch),
+                   layer_range=layer_range)
 
 
 def compile_stage_programs(cfg: ModelConfig, shape: ShapeConfig,
                            mesh_spec: MeshSpec, layer_bounds,
                            *, precision: str = "paper_sr_bf16",
                            microbatch: int = 1,
-                           tuning=None) -> list:
+                           tuning=None, remat="block",
+                           hbm_budget: float = 0.9 * HBM_BYTES) -> list:
     """One iBuffer per memory-module stage (repro/pipeline).
 
     layer_bounds: [(l0, l1), ...] contiguous stage layer ranges (a
     ``PipelinePlan.layer_bounds``).  Stage 0 owns the embedding, the last
-    stage owns the LM head; every stage's program is planned against its
-    OWN per-stage HBM budget (its ops only), which is what lets a model
-    that busts one module's budget fit across several.
+    stage owns the LM head; every stage's program is planned (and its
+    lifetimes budgeted) against its OWN per-stage HBM budget — its ops
+    only — which is what lets a model that busts one module's budget fit
+    across several.
+
+    remat: one global mode, or a per-stage sequence (each entry again a
+    mode or a per-group tuple — ``PipelinePlan.stage_remat`` plugs in
+    here directly).
     """
     n = len(layer_bounds)
+    if isinstance(remat, str):
+        stage_remat = [remat] * n
+    elif len(remat) == n:
+        stage_remat = list(remat)
+    else:
+        raise ValueError(f"remat must be a mode string or one entry per "
+                         f"stage ({n}), got {remat!r}")
     return [
         compile_program(cfg, shape, mesh_spec, precision=precision,
                         microbatch=microbatch, tuning=tuning,
                         layer_range=tuple(layer_bounds[s]),
-                        include_embed=(s == 0), include_head=(s == n - 1))
+                        include_embed=(s == 0), include_head=(s == n - 1),
+                        remat=stage_remat[s], hbm_budget=hbm_budget,
+                        # 1F1B warmup: stage s holds residuals for up to
+                        # min(M, S - s) in-flight microbatches
+                        in_flight=min(max(1, microbatch), n - s))
         for s in range(n)
     ]

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core.phases import Phase
 from repro.engine.dispatch import DEFAULT_WORD, op_key, pe_dot
 
@@ -75,6 +76,16 @@ class PEContext:
         return pe_dot(x, w, word=self.word(op_name), backend=self.backend,
                       key=key, interpret=self.interpret,
                       transpose_w=transpose_w, phase=self.phase)
+
+    def shard_map(self, *, in_specs, out_specs, check_vma: bool = True):
+        """Decorator: ``shard_map`` over THIS context's mesh, through the
+        jax-version seam (``repro.compat``).  The sharded-MoE block (and
+        any future per-shard region) enters manual mode here so model
+        code never spells the jax API drift itself."""
+        if self.mesh is None:
+            raise ValueError("shard_map needs a mesh-backed PEContext")
+        return _shard_map(mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
 
     # --- layout constraints (the PMAG re-programming points) ---------------
 

@@ -60,7 +60,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
     shape = SHAPES[shape_name]
     program = compile_program(cfg, shape, mesh_spec_for(mesh),
                               precision=precision, overrides=overrides,
-                              tuning=tuning,
+                              tuning=tuning, remat=train_cfg.remat,
                               microbatch=max(1, train_cfg.microbatch))
     batch_specs = _named(mesh, tl.batch_pspecs(cfg, shape, program))
     bshapes = input_specs(cfg, shape)
@@ -105,28 +105,53 @@ def lower_cell(arch: str, shape_name: str, mesh, *, precision: str,
 
 
 def pipeline_summary(arch: str, shape_name: str, num_stages: int,
-                     microbatch: int) -> dict:
-    """Stage table + 1F1B bubble accounting for one cell (repro/pipeline).
+                     microbatch: int, mesh_spec=None,
+                     precision: str = "paper_sr_bf16") -> dict:
+    """Stage table + 1F1B bubble + per-stage memory headroom for one cell.
 
     Pure host-side arithmetic — no lowering: the stage map is the
-    partitioner's, the bubble is the schedule's, so the dry-run artifact
-    records the same mapping `train.py --pipeline-stages` executes.
+    partitioner's, the bubble is the schedule's, and the per-stage
+    planned peak comes from the memory planner fitting each stage to the
+    module budget (remat chosen per scan group).  A stage that busts the
+    arena even fully rematted fails the cell with a message naming the
+    first op past the budget — not a bare assert.
     """
+    from repro.core.dataflow import HBM_BYTES, MeshSpec
+    from repro.memory.arena import MemoryBudgetError
     from repro.pipeline import make_schedule, partition_model, summarize
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    budget = 0.9 * HBM_BYTES
+    ms = mesh_spec or MeshSpec(axis_sizes={"data": 1, "model": 1})
     try:
         pplan = partition_model(cfg, num_stages,
                                 global_batch=shape.global_batch,
-                                seq_len=shape.seq_len, kind=shape.kind)
+                                seq_len=shape.seq_len, kind=shape.kind,
+                                hbm_budget=budget, mesh_spec=ms,
+                                microbatch=max(1, microbatch),
+                                precision=precision)
     except ValueError as e:
         return {"status": "skip", "reason": str(e)}
+    except MemoryBudgetError as e:
+        return {"status": "error", "error": f"stage memory plan: {e}"}
+    headroom = [{"stage": s.index, "peak_bytes": s.peak_bytes,
+                 "budget": budget, "headroom_bytes": budget - s.peak_bytes,
+                 "remat": list(s.remat), "fits": s.fits}
+                for s in pplan.stages]
+    if not pplan.fits:
+        worst = min(headroom, key=lambda h: h["headroom_bytes"])
+        return {"status": "error",
+                "error": (f"stage {worst['stage']} planned peak "
+                          f"{worst['peak_bytes'] / 1e9:.2f}GB exceeds the "
+                          f"{budget / 1e9:.2f}GB module budget even with "
+                          f"full remat ({'; '.join(pplan.notes)})"),
+                "plan": pplan.to_dict(), "stage_memory": headroom}
     nm = max(2 * num_stages, microbatch)     # enough microbatches to fill
     sched = make_schedule(num_stages, nm)
     return {"status": "ok", "plan": pplan.to_dict(),
             "table": pplan.table(), "schedule": summarize(sched),
-            "timeline": sched.render()}
+            "timeline": sched.render(), "stage_memory": headroom}
 
 
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
@@ -181,7 +206,17 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
         "plan_notes": program.plan.notes,
         "precision": precision,
         "ibuffer_bytes": program.ibuffer_size_bytes(),
+        "memory_plan": _memory_artifact(program),
     }
+
+
+def _memory_artifact(program) -> dict | None:
+    """The planner's view of the cell: plan table + ASCII timeline +
+    per-phase peaks, next to XLA's measured memory_analysis."""
+    mp = program.memory_plan()
+    if mp is None:
+        return None
+    return {**mp.to_dict(), "table": mp.table(), "timeline": mp.render()}
 
 
 def main():
@@ -233,13 +268,16 @@ def main():
                          "status": "error", "error": f"{type(e).__name__}: {e}",
                          "traceback": traceback.format_exc()[-4000:]}
                 if args.pipeline_stages > 1:
-                    # mesh-independent: compute (and print) once per
-                    # (arch, shape), reuse for the other mesh's artifact
-                    if (arch, shape_name) not in pipe_cache:
+                    # compute (and print) once per (arch, shape, mesh):
+                    # the per-stage memory fit depends on the mesh shards
+                    ck = (arch, shape_name, mesh_name)
+                    if ck not in pipe_cache:
                         p = pipeline_summary(arch, shape_name,
                                              args.pipeline_stages,
-                                             max(1, args.microbatch))
-                        pipe_cache[(arch, shape_name)] = p
+                                             max(1, args.microbatch),
+                                             mesh_spec=mesh_spec_for(mesh),
+                                             precision=args.precision)
+                        pipe_cache[ck] = p
                         if p["status"] == "ok":
                             print(p["table"])
                             print(f"  1F1B bubble="
@@ -247,7 +285,20 @@ def main():
                                   f"(M={p['schedule']['num_microbatches']}) "
                                   f"imbalance={p['plan']['imbalance']:.3f}",
                                   flush=True)
-                    r["pipeline"] = pipe_cache[(arch, shape_name)]
+                            for h in p["stage_memory"]:
+                                print(f"  stage {h['stage']}: planned peak "
+                                      f"{h['peak_bytes'] / 1e9:5.2f}GB / "
+                                      f"budget {h['budget'] / 1e9:.1f}GB "
+                                      f"(headroom "
+                                      f"{h['headroom_bytes'] / 1e9:+.2f}GB, "
+                                      f"remat "
+                                      f"{sum(x == 'block' for x in h['remat'])}"
+                                      f"/{len(h['remat'])} groups)",
+                                      flush=True)
+                        elif p["status"] == "error":
+                            print(f"[ERR] pipeline {arch} {shape_name}: "
+                                  f"{p['error']}", flush=True)
+                    r["pipeline"] = pipe_cache[ck]
                 with open(path, "w") as f:
                     json.dump(r, f, indent=1)
                 if r["status"] == "ok":

@@ -53,6 +53,15 @@ def main(argv=None):
     ap.add_argument("--pipeline-schedule", default="1f1b",
                     choices=("1f1b", "gpipe"))
     ap.add_argument("--remat", default="block")
+    ap.add_argument("--auto-memory", action="store_true",
+                    help="let the memory planner (repro/memory) choose "
+                         "per-scan-group remat and the microbatch count "
+                         "to fit the module HBM budget, and print the "
+                         "memory plan (overrides --remat/--microbatch; "
+                         "with --pipeline-stages, fits each stage)")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="per-module HBM budget for --auto-memory "
+                         "(default: 90%% of the v5e 16GB)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -77,15 +86,31 @@ def main(argv=None):
                               backend=args.kernel_backend,
                               microbatch=max(1, args.microbatch))
         print(tuning.describe())
+    remat, microbatch = args.remat, args.microbatch
+    budget = (args.hbm_budget_gb * 1e9 if args.hbm_budget_gb else None)
+    if args.auto_memory and args.pipeline_stages <= 1:
+        from repro.memory import choose_policy
+        from repro.memory.policy import DEFAULT_BUDGET
+        pol = choose_policy(cfg, shape, mesh_spec_for(mesh),
+                            hbm_budget=budget or DEFAULT_BUDGET,
+                            precision=args.precision, tuning=tuning)
+        print(pol.describe())
+        print(pol.plan.render())
+        print(pol.plan.table())
+        if not pol.fits:
+            raise SystemExit(f"--auto-memory: no (remat, microbatch) point "
+                             f"fits {pol.budget / 1e9:.2f}GB; best plan "
+                             f"peaks at {pol.peak_bytes / 1e9:.2f}GB")
+        remat, microbatch = pol.remat, pol.microbatch
     program = compile_program(cfg, shape, mesh_spec_for(mesh),
                               precision=args.precision, tuning=tuning,
-                              microbatch=max(1, args.microbatch))
+                              microbatch=max(1, microbatch), remat=remat)
     print(program.describe())
 
     train_cfg = TrainConfig(optimizer=args.optimizer, lr=args.lr,
-                            precision=args.precision, remat=args.remat,
+                            precision=args.precision, remat=remat,
                             kernel_backend=args.kernel_backend,
-                            microbatch=args.microbatch, seed=args.seed,
+                            microbatch=microbatch, seed=args.seed,
                             steps=args.steps,
                             checkpoint_dir=args.ckpt_dir,
                             checkpoint_every=args.ckpt_every)
@@ -95,25 +120,43 @@ def main(argv=None):
         from repro.launch.mesh import make_pipeline_mesh, pipeline_mesh_spec
         from repro.pipeline import (make_pipeline_train_step, make_schedule,
                                     partition_model)
-        pplan = partition_model(cfg, args.pipeline_stages,
-                                global_batch=shape.global_batch,
-                                seq_len=shape.seq_len)
-        print(pplan.table())
         nm = max(1, args.microbatch)
-        sched = make_schedule(args.pipeline_stages, nm,
-                              args.pipeline_schedule)
-        print(sched.render())
         pmesh = make_pipeline_mesh(args.pipeline_stages)
         # per-stage programs must see the PER-STAGE data shard count (the
         # pipeline mesh divides the devices), not the undivided host mesh
         sspec = (mesh_spec_for(pmesh) if pmesh
                  else pipeline_mesh_spec(args.pipeline_stages))
+        if args.auto_memory:
+            from repro.memory.policy import DEFAULT_BUDGET
+            pplan = partition_model(cfg, args.pipeline_stages,
+                                    global_batch=shape.global_batch,
+                                    seq_len=shape.seq_len,
+                                    hbm_budget=budget or DEFAULT_BUDGET,
+                                    mesh_spec=sspec, microbatch=nm,
+                                    precision=args.precision)
+            if not pplan.fits:
+                for n in pplan.notes:
+                    print(f"note: {n}")
+                raise SystemExit("--auto-memory: a stage busts its module "
+                                 "budget even with full remat; add stages "
+                                 "or microbatches")
+        else:
+            pplan = partition_model(cfg, args.pipeline_stages,
+                                    global_batch=shape.global_batch,
+                                    seq_len=shape.seq_len)
+        print(pplan.table())
+        sched = make_schedule(args.pipeline_stages, nm,
+                              args.pipeline_schedule)
+        print(sched.render())
+        stage_remat = pplan.stage_remat if args.auto_memory else None
         sprogs = compile_stage_programs(cfg, shape, sspec, pplan.layer_bounds,
                                         precision=args.precision, tuning=tuning,
-                                        microbatch=nm)
+                                        microbatch=nm,
+                                        remat=(list(stage_remat)
+                                               if stage_remat else remat))
         step_fn, opt = make_pipeline_train_step(
             cfg, sprogs, pplan, train_cfg, pmesh,
-            schedule=args.pipeline_schedule)
+            schedule=args.pipeline_schedule, stage_remat=stage_remat)
         print(f"pipeline: {args.pipeline_stages} stages x {nm} microbatches, "
               f"{'ppermute mesh' if pmesh else 'virtual stages'}, "
               f"bubble={sched.bubble_fraction():.1%}")

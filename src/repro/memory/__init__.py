@@ -1,0 +1,33 @@
+"""Whole-program memory planner: lifetimes -> arena -> policy.
+
+NeuroTrainer programs *where data lives* per phase; the planner is that
+decision made explicit for a whole step.  Three layers:
+
+- :mod:`liveness` — derive the per-phase tensor lifetime table from the
+  compiled op stream (FF writes activations consumed in reverse by BP,
+  UP touches weights/grads/optimizer state, PREFILL/DECODE touch
+  caches), honouring scan-group boundaries, remat and microbatching.
+- :mod:`arena` — a deterministic offset-based first-fit allocator over
+  those lifetimes, producing a :class:`~repro.memory.arena.MemoryPlan`
+  (per-tensor offsets, peak bytes per phase, fragmentation, an ASCII
+  timeline) and a budget check that names the first op to bust it.
+- :mod:`policy` — a small search over per-scan-group remat and
+  microbatch count that fits a module HBM budget, replacing the single
+  global ``TrainConfig.remat`` flag.
+
+Consumers: ``core.program.compile_program`` (HBM budget pass + the
+attached ``Program.memory`` plan), ``pipeline/partition.py`` (stage
+budgets), ``serving/slots.py`` (cache arena), ``launch/dryrun.py``
+(artifact timeline) and ``launch/train.py --auto-memory``.
+"""
+from repro.memory.arena import (Allocation, MemoryBudgetError, MemoryPlan,
+                                allocate)
+from repro.memory.liveness import (LivenessTable, TensorInterval,
+                                   serving_liveness, train_liveness)
+from repro.memory.policy import MemoryPolicy, choose_policy, fit_stage
+
+__all__ = [
+    "Allocation", "MemoryBudgetError", "MemoryPlan", "allocate",
+    "LivenessTable", "TensorInterval", "serving_liveness", "train_liveness",
+    "MemoryPolicy", "choose_policy", "fit_stage",
+]

@@ -1,0 +1,219 @@
+"""Deterministic offset-based first-fit arena allocation over lifetimes.
+
+The module's HBM is one arena; every tensor interval from the liveness
+table gets a byte offset such that no two lifetime-overlapping tensors
+overlap in address space.  First-fit over a deterministic interval
+order (birth, then size descending, then name) makes the layout a pure
+function of the program — the same model/mesh/shape always produces the
+same offsets, so plans can be diffed, cached and gated in CI.
+
+The resulting :class:`MemoryPlan` answers the questions the three
+memory consumers ask:
+
+  does it fit?      arena_bytes vs a module budget (``check_budget``
+                    raises naming the FIRST op that busts the arena),
+  where is it?      per-tensor offsets (the slot pool reads these),
+  when is it tight? peak live bytes per phase + an ASCII timeline,
+  how lossy?        fragmentation = 1 - live peak / arena size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.memory.liveness import LivenessTable, sweep_live_bytes
+
+ALIGN = 256          # HBM row-ish alignment; keeps offsets diff-stable
+
+
+class MemoryBudgetError(RuntimeError):
+    """Raised by check_budget; carries the first offending allocation."""
+
+    def __init__(self, msg: str, allocation: Optional["Allocation"] = None):
+        super().__init__(msg)
+        self.allocation = allocation
+
+
+@dataclass(frozen=True)
+class Allocation:
+    """One placed interval: lifetime [birth, death) at [offset, offset+bytes)."""
+    name: str
+    region: str
+    bytes: int
+    birth: int
+    death: int
+    phase: str
+    offset: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.bytes
+
+
+def _align_up(x: int, align: int) -> int:
+    return -(-x // align) * align
+
+
+@dataclass
+class MemoryPlan:
+    """The allocated arena for one compiled program scope."""
+    allocations: list = field(default_factory=list)
+    tick_phases: list = field(default_factory=list)
+    notes: list = field(default_factory=list)
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.tick_phases)
+
+    @property
+    def arena_bytes(self) -> int:
+        """Arena size: the high-water offset the allocator reached."""
+        return max((a.end for a in self.allocations), default=0)
+
+    def live_bytes(self) -> list:
+        return sweep_live_bytes(self.allocations, self.n_ticks)
+
+    @property
+    def live_peak_bytes(self) -> int:
+        lb = self.live_bytes()
+        return max(lb) if lb else 0
+
+    def phase_peaks(self) -> dict:
+        peaks: dict = {}
+        for t, b in enumerate(self.live_bytes()):
+            ph = self.tick_phases[t]
+            peaks[ph] = max(peaks.get(ph, 0), b)
+        return peaks
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of the arena the live peak never touches."""
+        arena = self.arena_bytes
+        if arena <= 0:
+            return 0.0
+        return 1.0 - self.live_peak_bytes / arena
+
+    def region_bytes(self) -> dict:
+        """Peak concurrently-live bytes per region."""
+        out: dict = {}
+        for region in sorted({a.region for a in self.allocations}):
+            lb = sweep_live_bytes(self.allocations, self.n_ticks,
+                                  pred=lambda a, r=region: a.region == r)
+            out[region] = max(lb) if lb else 0
+        return out
+
+    # --- budget -----------------------------------------------------------
+
+    def fits(self, budget: float) -> bool:
+        return self.arena_bytes <= budget
+
+    def first_violation(self, budget: float) -> Optional[Allocation]:
+        """The first allocation (in allocation order) past the budget."""
+        for a in self.allocations:
+            if a.end > budget:
+                return a
+        return None
+
+    def check_budget(self, budget: float) -> None:
+        """Raise MemoryBudgetError naming the first op to bust the arena."""
+        bad = self.first_violation(budget)
+        if bad is None:
+            return
+        raise MemoryBudgetError(
+            f"arena budget {budget / 1e9:.2f}GB exceeded: allocating "
+            f"'{bad.name}' ({bad.region}, {bad.bytes / 1e6:.1f}MB, "
+            f"{bad.phase} tick {bad.birth}) ends at "
+            f"{bad.end / 1e9:.2f}GB; live peak {self.live_peak_bytes / 1e9:.2f}GB "
+            f"over {self.n_ticks} ticks", allocation=bad)
+
+    # --- reporting --------------------------------------------------------
+
+    def table(self, max_rows: int = 32) -> str:
+        hdr = (f"# MemoryPlan arena={self.arena_bytes / 1e6:.1f}MB "
+               f"live_peak={self.live_peak_bytes / 1e6:.1f}MB "
+               f"frag={self.fragmentation:.1%} ticks={self.n_ticks}")
+        rows = sorted(self.allocations, key=lambda a: (-a.bytes, a.name))
+        lines = [hdr]
+        for a in rows[:max_rows]:
+            lines.append(f"{a.name:<22} {a.region:<10} "
+                         f"{a.bytes / 1e6:9.2f}MB @ {a.offset:>12d} "
+                         f"[{a.birth:>4d},{a.death:>4d}) {a.phase}")
+        if len(rows) > max_rows:
+            rest = sum(a.bytes for a in rows[max_rows:])
+            lines.append(f"... (+{len(rows) - max_rows} more, "
+                         f"{rest / 1e6:.1f}MB)")
+        peaks = " ".join(f"{p}={b / 1e6:.1f}MB"
+                         for p, b in self.phase_peaks().items())
+        lines.append(f"phase peaks: {peaks}")
+        for n in self.notes:
+            lines.append(f"note: {n}")
+        return "\n".join(lines)
+
+    def render(self, width: int = 64, max_rows: int = 24) -> str:
+        """ASCII lifetime timeline: rows = largest tensors, cols = ticks."""
+        if not self.allocations or self.n_ticks == 0:
+            return "(empty memory plan)"
+        width = min(width, self.n_ticks)
+
+        def col(t: int) -> int:
+            return min(width - 1, t * width // self.n_ticks)
+
+        phase_row = [" "] * width
+        for t, ph in enumerate(self.tick_phases):
+            c = col(t)
+            if phase_row[c] == " ":
+                phase_row[c] = ph[0]
+        lines = [f"{'phase':<22} {''.join(phase_row)}"]
+        rows = sorted(self.allocations, key=lambda a: (-a.bytes, a.name))
+        for a in rows[:max_rows]:
+            cells = ["·"] * width
+            for c in range(col(a.birth), col(max(a.birth, a.death - 1)) + 1):
+                cells[c] = "█"
+            lines.append(f"{a.name[:22]:<22} {''.join(cells)} "
+                         f"{a.bytes / 1e6:9.2f}MB")
+        if len(rows) > max_rows:
+            lines.append(f"... (+{len(rows) - max_rows} more tensors)")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "arena_bytes": self.arena_bytes,
+            "live_peak_bytes": self.live_peak_bytes,
+            "fragmentation": round(self.fragmentation, 6),
+            "phase_peaks": self.phase_peaks(),
+            "region_peaks": self.region_bytes(),
+            "n_ticks": self.n_ticks,
+            "n_tensors": len(self.allocations),
+        }
+
+
+def allocate(table: LivenessTable, *, align: int = ALIGN) -> MemoryPlan:
+    """First-fit offsets for every interval of a liveness table.
+
+    Deterministic: intervals are processed by (birth, -bytes, name); each
+    takes the lowest aligned offset whose span is free for its whole
+    lifetime.  Zero-byte intervals allocate at offset 0 (nothing to
+    place, kept for the timeline).
+    """
+    order = sorted(table.intervals, key=lambda iv: (iv.birth, -iv.bytes,
+                                                    iv.name))
+    placed: list = []
+    for iv in order:
+        if iv.bytes <= 0:
+            placed.append(Allocation(name=iv.name, region=iv.region,
+                                     bytes=0, birth=iv.birth, death=iv.death,
+                                     phase=iv.phase, offset=0))
+            continue
+        blocked = sorted(
+            (a.offset, a.end) for a in placed
+            if a.bytes > 0 and a.birth < iv.death and iv.birth < a.death)
+        off = 0
+        for s, e in blocked:
+            if off + iv.bytes <= s:
+                break
+            off = max(off, _align_up(e, align))
+        placed.append(Allocation(name=iv.name, region=iv.region,
+                                 bytes=iv.bytes, birth=iv.birth,
+                                 death=iv.death, phase=iv.phase, offset=off))
+    return MemoryPlan(allocations=placed, tick_phases=list(table.tick_phases),
+                      notes=list(table.notes))

@@ -1,0 +1,323 @@
+"""Per-phase tensor lifetime table derived from the compiled op stream.
+
+The paper's host knows, per phase, which tensors a kernel reads and
+writes (§3.1-3.2); this module reconstructs those lifetimes for one
+training step (or one serving iteration) as explicit intervals on a
+discrete tick timeline:
+
+  train ticks  : for each microbatch m — FF over scan groups in order,
+                 then BP over the same groups in reverse — and one final
+                 UP tick.  T = M * 2G + 1.
+  serve ticks  : one PREFILL tick, one DECODE tick.
+
+Intervals carry a *region* tag (weights / optim / grads / activation /
+workspace / cache) so the arena allocator and the reports can slice by
+kind.  Remat (``none`` | ``block``) is honoured per scan group: a
+rematted group keeps only its boundary residual alive FF->BP and pays a
+one-tick recompute workspace during its BP tick (plus the same
+workspace while its FF tick is computing); a non-rematted group keeps
+the full inner activations alive across the FF->BP span.
+
+The byte arithmetic is intentionally the same the rest of the repo
+uses: weights/optimizer sizes come from the dataflow plan's
+``mem_bytes_per_device``, activation widths from
+``tuner.cost.op_act_bytes`` / ``residual_act_bytes``, token counts from
+``dataflow.step_tokens_per_shard`` — so the planner, the tuner and the
+partitioner price one consistent world.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.dataflow import DataflowPlan, step_tokens_per_shard
+from repro.tuner.cost import op_act_bytes, residual_act_bytes
+
+STATE_REGIONS = ("weights", "optim", "grads")
+
+
+def sweep_live_bytes(intervals, n_ticks: int, pred=None) -> list:
+    """Per-tick live-byte totals over interval-like objects (anything with
+    .birth/.death/.bytes), via a difference-array sweep.  `pred` filters
+    which intervals count.  THE one lifetime-summation in the package —
+    LivenessTable and MemoryPlan both sum through here so clamping and
+    tick semantics can never diverge."""
+    diff = [0] * (n_ticks + 1)
+    for iv in intervals:
+        if pred is not None and not pred(iv):
+            continue
+        diff[iv.birth] += iv.bytes
+        diff[min(iv.death, n_ticks)] -= iv.bytes
+    out, run = [], 0
+    for t in range(n_ticks):
+        run += diff[t]
+        out.append(run)
+    return out
+
+
+@dataclass(frozen=True)
+class TensorInterval:
+    """One tensor's lifetime: alive on ticks [birth, death)."""
+    name: str
+    region: str          # weights|optim|grads|activation|workspace|cache
+    bytes: int
+    birth: int
+    death: int
+    phase: str           # phase label of the tick that creates it
+
+
+@dataclass
+class LivenessTable:
+    """All intervals of one step + the phase label of every tick."""
+    intervals: list = field(default_factory=list)
+    tick_phases: list = field(default_factory=list)
+    notes: list = field(default_factory=list)
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.tick_phases)
+
+    def live_bytes(self) -> list:
+        """Total live bytes at every tick."""
+        return sweep_live_bytes(self.intervals, self.n_ticks)
+
+    def peak_bytes(self) -> int:
+        lb = self.live_bytes()
+        return max(lb) if lb else 0
+
+    def phase_peaks(self) -> dict:
+        """Max live bytes per phase label."""
+        peaks: dict = {}
+        for t, b in enumerate(self.live_bytes()):
+            ph = self.tick_phases[t]
+            peaks[ph] = max(peaks.get(ph, 0), b)
+        return peaks
+
+    def transient_peak(self) -> int:
+        """Peak concurrently-live bytes OUTSIDE the persistent state
+        regions — what the HBM budget pass must reserve on top of
+        params/optimizer/grad-accumulator state."""
+        lb = sweep_live_bytes(self.intervals, self.n_ticks,
+                              pred=lambda iv: iv.region not in STATE_REGIONS)
+        return max(lb) if lb else 0
+
+    def region_peak(self, region: str) -> int:
+        """Max concurrently-live bytes of one region."""
+        lb = sweep_live_bytes(self.intervals, self.n_ticks,
+                              pred=lambda iv: iv.region == region)
+        return max(lb) if lb else 0
+
+
+def _group_remat(remat, n_groups: int) -> tuple:
+    """Normalise a remat setting to one 'none'|'block' entry per group."""
+    if isinstance(remat, str):
+        # 'full' (historical TrainConfig value) checkpoints at least as
+        # much as 'block'; the lifetime model treats it as block
+        return (("block" if remat in ("block", "full") else "none"),) * n_groups
+    remat = tuple(remat)
+    if len(remat) != n_groups:
+        raise ValueError(
+            f"per-group remat has {len(remat)} entries for {n_groups} "
+            f"scan groups")
+    bad = [r for r in remat if r not in ("none", "block")]
+    if bad:
+        raise ValueError(f"unknown remat modes {bad}; use 'none'|'block'")
+    return remat
+
+
+def _tokens_per_device(plan: DataflowPlan, *, global_batch: int,
+                       seq_len: int, kind: str) -> float:
+    """Activation rows one device sees per step (batch + seq sharding)."""
+    tokens, _ = step_tokens_per_shard(plan.mesh, global_batch=global_batch,
+                                      seq_len=seq_len, kind=kind)
+    if plan.seq_spec is not None:
+        tokens /= plan.mesh.tp
+    return tokens
+
+
+def _layer_act_bytes(cfg, layer: int, tokens: float, *,
+                     dtype_bytes: int = 2) -> float:
+    """Saved-activation bytes of one model layer at `tokens` rows."""
+    from repro.core.program import layer_ops
+    b = residual_act_bytes(cfg.d_model, tokens, dtype_bytes=dtype_bytes)
+    for op in layer_ops(cfg, layer):
+        if op.role == "state":
+            continue
+        b += op_act_bytes(op, tokens, dtype_bytes=dtype_bytes)
+    return b
+
+
+def group_act_bytes(cfg, tokens: float, *, layer_range: Optional[tuple] = None,
+                    dtype_bytes: int = 2) -> list:
+    """Per-scan-group saved-activation bytes over `layer_range`.
+
+    Groups are the transformer scan unit (one layer-pattern period); the
+    range must be group-aligned, as pipeline stage bounds are.
+    """
+    from repro.models.transformer import layer_pattern
+    period = len(layer_pattern(cfg))
+    l0, l1 = layer_range if layer_range is not None else (0, cfg.n_layers)
+    if l0 % period or l1 % period:
+        raise ValueError(f"layer_range {layer_range} not group-aligned "
+                         f"(period {period})")
+    out = []
+    for g in range(l0 // period, l1 // period):
+        out.append(sum(_layer_act_bytes(cfg, i, tokens,
+                                        dtype_bytes=dtype_bytes)
+                       for i in range(g * period, (g + 1) * period)))
+    return out
+
+
+def _state_intervals(plan: DataflowPlan, *, train: bool, n_ticks: int,
+                     state_itemsize: int, grads_birth: int,
+                     param_itemsize: int = 2) -> list:
+    """Weights + (train) optimizer moments + f32 grad accumulator.
+
+    Param/moment bytes follow the PRECISION POLICY's dtypes (the plan's
+    mem_bytes_per_device is bf16 storage; fp32 presets store wider)."""
+    ivs = []
+    for name in sorted(plan.ops):
+        p = plan.ops[name]
+        params = p.mem_bytes_per_device / p.op.dtype_bytes
+        ivs.append(TensorInterval(name=name, region="weights",
+                                  bytes=int(round(params * param_itemsize)),
+                                  birth=0, death=n_ticks, phase="FF"))
+        if not train:
+            continue
+        ivs.append(TensorInterval(name=f"{name}.opt", region="optim",
+                                  bytes=int(round(params * 2 * state_itemsize)),
+                                  birth=0, death=n_ticks, phase="UP"))
+        # the f32 dW accumulator (train_loop accumulates at f32 whatever
+        # the grad signal dtype); REPLICATE ops carry a full-size copy
+        ivs.append(TensorInterval(name=f"{name}.grad", region="grads",
+                                  bytes=int(round(params * 4)),
+                                  birth=grads_birth, death=n_ticks,
+                                  phase="BP"))
+    return ivs
+
+
+def train_liveness(cfg, plan: DataflowPlan, *, global_batch: int,
+                   seq_len: int, microbatch: int = 1, remat="none",
+                   layer_range: Optional[tuple] = None,
+                   state_itemsize: int = 2, param_itemsize: int = 2,
+                   act_dtype_bytes: int = 2,
+                   in_flight: int = 1) -> LivenessTable:
+    """Lifetime table of one training step of the compiled plan.
+
+    cfg/plan: the model and its dataflow plan (per-device byte truth).
+    remat: 'none' | 'block' | a per-scan-group sequence of those.
+    layer_range: scope to one pipeline stage's groups (group-aligned).
+    state_itemsize / param_itemsize: policy dtype bytes (moments/params).
+    in_flight: microbatches whose saved activations coexist on this
+    scope.  Single-module gradient accumulation retires each microbatch
+    before the next (1); a 1F1B pipeline stage s holds residuals for
+    min(M, S - s) — each activation's death extends across that many
+    microbatch spans so the peak reflects the schedule's warmup pile-up.
+    """
+    nm = max(1, microbatch)
+    k = max(1, min(in_flight, nm))
+    tokens_mb = _tokens_per_device(plan, global_batch=global_batch,
+                                   seq_len=seq_len, kind="train") / nm
+    g_bytes = group_act_bytes(cfg, tokens_mb, layer_range=layer_range,
+                              dtype_bytes=act_dtype_bytes)
+    G = len(g_bytes)
+    remat = _group_remat(remat, G)
+    boundary = residual_act_bytes(cfg.d_model, tokens_mb,
+                                  dtype_bytes=act_dtype_bytes, sites=1)
+
+    tick_phases = (["FF"] * G + ["BP"] * G) * nm + ["UP"]
+    T = len(tick_phases)
+
+    def ff_tick(m: int, g: int) -> int:
+        return m * 2 * G + g
+
+    def bp_tick(m: int, g: int) -> int:
+        return m * 2 * G + G + (G - 1 - g)
+
+    table = LivenessTable(tick_phases=tick_phases)
+    # grads: the M>1 accumulator is allocated before the microbatch scan;
+    # M==1 materialises dW only from the first BP on
+    grads_birth = 0 if nm > 1 else (G if G else 0)
+    table.intervals += _state_intervals(plan, train=True, n_ticks=T,
+                                        state_itemsize=state_itemsize,
+                                        grads_birth=grads_birth,
+                                        param_itemsize=param_itemsize)
+
+    for m in range(nm):
+        for g in range(G):
+            ff = ff_tick(m, g)
+            # with k microbatches in flight (1F1B warmup), microbatch m's
+            # residuals survive until the BP that retires them — k-1
+            # microbatch spans later in this sequentialised timeline
+            bp = bp_tick(min(nm - 1, m + k - 1), g)
+            if remat[g] == "none":
+                table.intervals.append(TensorInterval(
+                    name=f"act:g{g}:m{m}", region="activation",
+                    bytes=int(round(g_bytes[g])), birth=ff, death=bp + 1,
+                    phase="FF"))
+            else:
+                table.intervals.append(TensorInterval(
+                    name=f"ckpt:g{g}:m{m}", region="activation",
+                    bytes=int(round(boundary)), birth=ff, death=bp + 1,
+                    phase="FF"))
+                # the group's inner activations exist while its FF tick
+                # computes and again while BP rematerialises them
+                for t, tag in ((ff, "ff"), (bp, "bp")):
+                    table.intervals.append(TensorInterval(
+                        name=f"remat:{tag}:g{g}:m{m}", region="workspace",
+                        bytes=int(round(g_bytes[g])), birth=t, death=t + 1,
+                        phase=tick_phases[t]))
+    if nm > 1:
+        table.notes.append(f"{nm} microbatches: per-pass activations are "
+                           f"1/{nm} of the full batch")
+    rematted = sum(1 for r in remat if r == "block")
+    if rematted:
+        table.notes.append(f"remat=block on {rematted}/{G} scan groups")
+    # lm-head logits are never materialised (chunked cross-entropy) and the
+    # embed lookup output IS the first residual — neither gets an interval
+    return table
+
+
+def serving_liveness(cfg, plan: DataflowPlan, *, n_slots: int, max_len: int,
+                     prefill_chunk: int = 32,
+                     act_dtype_bytes: int = 2) -> LivenessTable:
+    """Lifetime table of one serving iteration: cache arena + weights +
+    per-tick prefill/decode workspace.
+
+    The cache region holds one interval per per-device slot row (the
+    slot pool's arena), alive across both ticks; workspace intervals are
+    the widest transient activation of each tick (one scan group's
+    activations at chunk / single-token width).
+    """
+    table = LivenessTable(tick_phases=["PREFILL", "DECODE"])
+    table.intervals += _state_intervals(plan, train=False, n_ticks=2,
+                                        state_itemsize=2, grads_birth=0)
+
+    # THE per-slot byte truth lives with the slot pool (one definition
+    # for the serving arena and this table); imported lazily — the
+    # serving package pulls in the runtime stack
+    from repro.serving.slots import slot_bytes as _slot_bytes
+    sb = _slot_bytes(cfg, max_len)
+    dp = plan.mesh.dp
+    slots_per_dev = max(1, -(-n_slots // dp))
+    width = len(str(max(0, slots_per_dev - 1)))
+    for i in range(slots_per_dev):
+        table.intervals.append(TensorInterval(
+            name=f"slot:{i:0{width}d}", region="cache", bytes=sb,
+            birth=0, death=2, phase="PREFILL"))
+    if dp > 1:
+        table.notes.append(f"cache arena batch-sharded over dp={dp}: "
+                           f"{slots_per_dev} of {n_slots} slot rows per "
+                           f"device (feature-dim TP sharding not modelled)")
+
+    gact = group_act_bytes(cfg, float(prefill_chunk),
+                           dtype_bytes=act_dtype_bytes)
+    table.intervals.append(TensorInterval(
+        name="prefill_chunk", region="workspace",
+        bytes=int(round(max(gact))), birth=0, death=1, phase="PREFILL"))
+    gact1 = group_act_bytes(cfg, float(max(1, n_slots // dp)),
+                            dtype_bytes=act_dtype_bytes)
+    table.intervals.append(TensorInterval(
+        name="decode_step", region="workspace",
+        bytes=int(round(max(gact1))), birth=1, death=2, phase="DECODE"))
+    return table

@@ -1,0 +1,190 @@
+"""Memory policy search: fit a module HBM budget by choosing per-group
+remat and the microbatch count.
+
+Replaces the single global ``TrainConfig.remat`` flag with a *planned*
+answer: the search walks candidate configurations in preference order —
+microbatching first (near-free: same math, smaller per-pass
+activations), then rematerialisation group by group (costs recompute) —
+and returns the first whose allocated arena fits the budget.  Remat is
+applied to the EARLIEST scan groups first: group 0's activations are
+written first and read last (FF order, BP reverse), so they hold the
+longest lifetimes and free the most peak per rematted group.
+
+``choose_policy`` serves ``train.py --auto-memory`` (whole model);
+``fit_stage`` serves the pipeline partitioner, which fixes the
+microbatch count globally (it is a schedule-level constant) and fits
+each stage with remat alone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.dataflow import HBM_BYTES
+
+DEFAULT_BUDGET = 0.9 * HBM_BYTES
+
+
+def _rle(remat: tuple) -> str:
+    """Compact run-length render: ('block','block','none') -> 'block x2, none'."""
+    out = []
+    for r in remat:
+        if out and out[-1][0] == r:
+            out[-1][1] += 1
+        else:
+            out.append([r, 1])
+    return ", ".join(f"{r} x{n}" if n > 1 else r for r, n in out)
+
+
+@dataclass(frozen=True)
+class MemoryPolicy:
+    """One chosen (remat per group, microbatch) point + its planned arena."""
+    remat: tuple                 # 'none' | 'block' per scan group
+    microbatch: int
+    peak_bytes: int              # allocated arena size
+    budget: float
+    fits: bool
+    plan: object                 # memory.arena.MemoryPlan
+
+    @property
+    def n_rematted(self) -> int:
+        return sum(1 for r in self.remat if r == "block")
+
+    def describe(self) -> str:
+        def fmt(b):
+            return f"{b / 1e9:.2f}GB" if b >= 1e8 else f"{b / 1e6:.2f}MB"
+        return (f"MemoryPolicy remat=[{_rle(self.remat)}] "
+                f"microbatch={self.microbatch} "
+                f"arena={fmt(self.peak_bytes)} "
+                f"budget={fmt(self.budget)} "
+                f"{'FITS' if self.fits else 'DOES NOT FIT'}")
+
+
+def _n_groups(cfg, layer_range: Optional[tuple]) -> int:
+    from repro.models.transformer import layer_pattern
+    period = len(layer_pattern(cfg))
+    l0, l1 = layer_range if layer_range is not None else (0, cfg.n_layers)
+    return (l1 - l0) // period
+
+
+def _candidate(cfg, shape, mesh_spec, *, remat: tuple, microbatch: int,
+               budget: float, precision: str, layer_range, include_embed,
+               include_head, overrides, tuning, in_flight) -> tuple:
+    """(liveness peak, program) for one (remat, microbatch) point."""
+    from repro.core.program import compile_program
+    program = compile_program(
+        cfg, shape, mesh_spec, precision=precision, microbatch=microbatch,
+        remat=remat, hbm_budget=budget, overrides=overrides, tuning=tuning,
+        layer_range=layer_range, include_embed=include_embed,
+        include_head=include_head, in_flight=in_flight)
+    table = program.memory_table
+    peak = table.peak_bytes() if table is not None else 0
+    return peak, program
+
+
+def _search(cfg, shape, mesh_spec, *, budget: float, precision: str,
+            layer_range, include_embed, include_head, overrides, tuning,
+            candidates, in_flight: int = 1) -> MemoryPolicy:
+    """Candidate walk: for each microbatch count, find the smallest remat
+    level k (groups 0..k-1 rematted) whose arena fits — peak bytes are
+    monotone non-increasing in k, so k is found by bisection after
+    probing the k=0 / k=G endpoints (O(log G) compilations per
+    microbatch instead of O(G)).  Among fitting (nm, k) points the
+    lexicographically smallest (k, nm) wins: remat costs recompute,
+    extra microbatches are near-free.  Nothing fits -> the lowest-peak
+    candidate returns with fits=False."""
+    G = _n_groups(cfg, layer_range)
+
+    def probe(nm, k):
+        remat = ("block",) * k + ("none",) * (G - k)
+        peak, program = _candidate(
+            cfg, shape, mesh_spec, remat=remat, microbatch=nm,
+            budget=budget, precision=precision, layer_range=layer_range,
+            include_embed=include_embed, include_head=include_head,
+            overrides=overrides, tuning=tuning, in_flight=in_flight)
+        # fit on the *allocated* arena (alignment/first-fit can add
+        # fragmentation beyond the liveness peak)
+        arena = program.memory_plan().arena_bytes if peak <= budget else peak
+        return arena, remat, program
+
+    best: Optional[tuple] = None          # (arena, remat, nm, program)
+    fits: list = []                       # (k, nm, arena, remat, program)
+    for nm in candidates:
+        lo_arena, lo_remat, lo_prog = probe(nm, 0)
+        if best is None or lo_arena < best[0]:
+            best = (lo_arena, lo_remat, nm, lo_prog)
+        if lo_arena <= budget:
+            fits.append((0, nm, lo_arena, lo_remat, lo_prog))
+            continue
+        if G == 0:
+            continue
+        hi_arena, hi_remat, hi_prog = probe(nm, G)
+        if best is None or hi_arena < best[0]:
+            best = (hi_arena, hi_remat, nm, hi_prog)
+        if hi_arena > budget:
+            continue                      # even full remat busts at this nm
+        lo_k, hi_k = 0, G                 # lo busts, hi fits: bisect
+        hit = (G, nm, hi_arena, hi_remat, hi_prog)
+        while hi_k - lo_k > 1:
+            mid = (lo_k + hi_k) // 2
+            arena, remat, program = probe(nm, mid)
+            if arena <= budget:
+                hi_k = mid
+                hit = (mid, nm, arena, remat, program)
+            else:
+                lo_k = mid
+        fits.append(hit)
+    if fits:
+        k, nm, arena, remat, program = min(fits, key=lambda f: (f[0], f[1]))
+        return MemoryPolicy(remat=remat, microbatch=nm, peak_bytes=arena,
+                            budget=budget, fits=True,
+                            plan=program.memory_plan())
+    assert best is not None
+    _, remat, nm, program = best
+    plan = program.memory_plan()
+    return MemoryPolicy(remat=remat, microbatch=nm,
+                        peak_bytes=plan.arena_bytes, budget=budget,
+                        fits=False, plan=plan)
+
+
+def choose_policy(cfg, shape, mesh_spec, *, hbm_budget: float = DEFAULT_BUDGET,
+                  precision: str = "paper_sr_bf16",
+                  microbatch_candidates: tuple = (1, 2, 4, 8),
+                  layer_range: Optional[tuple] = None,
+                  include_embed: bool = True, include_head: bool = True,
+                  overrides: Optional[dict] = None,
+                  tuning=None) -> MemoryPolicy:
+    """Pick per-group remat + microbatch count to fit `hbm_budget`.
+
+    Preference order per remat level: the given microbatch candidates
+    ascending (only those dividing the global batch).  Remat escalates
+    one scan group at a time, earliest groups first.
+    """
+    cands = tuple(nm for nm in sorted(set(microbatch_candidates))
+                  if nm >= 1 and shape.global_batch % nm == 0)
+    if not cands:
+        raise ValueError(
+            f"no usable microbatch candidate divides global batch "
+            f"{shape.global_batch}: {microbatch_candidates}")
+    return _search(cfg, shape, mesh_spec, budget=hbm_budget,
+                   precision=precision, layer_range=layer_range,
+                   include_embed=include_embed, include_head=include_head,
+                   overrides=overrides, tuning=tuning, candidates=cands)
+
+
+def fit_stage(cfg, shape, mesh_spec, *, hbm_budget: float = DEFAULT_BUDGET,
+              microbatch: int = 1, layer_range: Optional[tuple] = None,
+              include_embed: bool = True, include_head: bool = True,
+              precision: str = "paper_sr_bf16",
+              overrides: Optional[dict] = None, tuning=None,
+              in_flight: int = 1) -> MemoryPolicy:
+    """Fit ONE pipeline stage with remat only (microbatch is fixed by the
+    schedule).  in_flight: the stage's 1F1B residual bound min(M, S-s) —
+    the lifetime table holds that many microbatches' activations
+    concurrently.  Returns fits=False with the best-effort plan when
+    even full remat busts the stage budget."""
+    return _search(cfg, shape, mesh_spec, budget=hbm_budget,
+                   precision=precision, layer_range=layer_range,
+                   include_embed=include_embed, include_head=include_head,
+                   overrides=overrides, tuning=tuning,
+                   candidates=(max(1, microbatch),), in_flight=in_flight)

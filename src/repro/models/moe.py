@@ -24,7 +24,6 @@ tests), so numerics are identical by construction.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -186,9 +185,8 @@ def _moe_sharded(cfg: ModelConfig, x: jax.Array, params: dict, sh: Sharder):
                for k in (["experts_in", "experts_out", "router"]
                          + (["experts_gate"] if "experts_gate" in params else []))}
 
-    @partial(jax.shard_map, mesh=mesh,
-             in_specs=(x_spec, tuple(w_specs[k] for k in sorted(w_specs))),
-             out_specs=(x_spec, P()), check_vma=False)
+    @sh.shard_map(in_specs=(x_spec, tuple(w_specs[k] for k in sorted(w_specs))),
+                  out_specs=(x_spec, P()), check_vma=False)
     def run(xl, wl):
         prm = dict(zip(sorted(w_specs), wl))
         # 1. SP -> full local tokens (skipped when tables are replicated:

@@ -233,11 +233,18 @@ def prologue(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
 
 
 def group_scan(cfg: ModelConfig, x: jax.Array, aux: jax.Array, groups,
-               sh: Sharder, positions: jax.Array, *, remat: str = "none",
+               sh: Sharder, positions: jax.Array, *, remat="none",
                collect_cache: bool = False):
     """Scan a contiguous slice of scan groups: the body of `forward`, and
     of one pipeline stage (`groups` then holds that stage's param slice).
-    Returns (x, aux, caches) — caches is None unless collect_cache."""
+    Returns (x, aux, caches) — caches is None unless collect_cache.
+
+    remat: 'none' | 'block' | 'full', or a per-group sequence of modes
+    (the memory planner's ``MemoryPolicy.remat``).  A mixed sequence runs
+    one scan per contiguous run of equal modes over the matching stacked
+    param slice — each group's math is identical to the uniform scan, so
+    values are bit-equal; only what autodiff SAVES differs.
+    """
     pattern = layer_pattern(cfg)
 
     def group_step(carry, gparams):
@@ -251,15 +258,41 @@ def group_scan(cfg: ModelConfig, x: jax.Array, aux: jax.Array, groups,
                 caches[f"u{i}"] = c
         return (x, aux), caches if collect_cache else None
 
-    if remat == "block":
-        group_step = jax.checkpoint(group_step)
-    (x, aux), caches = jax.lax.scan(group_step, (x, aux), groups)
+    ng = jax.tree.leaves(groups)[0].shape[0]
+    if isinstance(remat, str):
+        runs = [(remat, 0, ng)]
+    else:
+        remat = tuple(remat)
+        if len(remat) != ng:
+            raise ValueError(f"per-group remat has {len(remat)} entries "
+                             f"for {ng} scan groups")
+        runs = []
+        for g, r in enumerate(remat):
+            if runs and runs[-1][0] == r:
+                runs[-1] = (r, runs[-1][1], g + 1)
+            else:
+                runs.append((r, g, g + 1))
+
+    cache_parts: list = []
+    for mode, g0, g1 in runs:
+        body = jax.checkpoint(group_step) if mode in ("block", "full") \
+            else group_step
+        part = (groups if (g0, g1) == (0, ng)
+                else jax.tree.map(lambda a: a[g0:g1], groups))
+        (x, aux), caches = jax.lax.scan(body, (x, aux), part)
+        if collect_cache:
+            cache_parts.append(caches)
+    if not collect_cache:
+        return x, aux, None
+    caches = (cache_parts[0] if len(cache_parts) == 1 else
+              jax.tree.map(lambda *cs: jnp.concatenate(cs, axis=0),
+                           *cache_parts))
     return x, aux, caches
 
 
 def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, sh: Sharder,
             *, compute_dtype=jnp.bfloat16, vision_embeds=None,
-            return_cache: bool = False, remat: str = "none",
+            return_cache: bool = False, remat="none",
             return_hidden: bool = False):
     """tokens: (B, S_text).  Returns (logits f32 | hidden, aux[, caches])."""
     x, positions = prologue(cfg, params, tokens, sh,
@@ -294,7 +327,7 @@ def head_loss(cfg: ModelConfig, params: dict, hidden: jax.Array,
 
 
 def loss_fn(cfg: ModelConfig, params: dict, batch: dict, sh: Sharder,
-            *, compute_dtype=jnp.bfloat16, remat: str = "none",
+            *, compute_dtype=jnp.bfloat16, remat="none",
             aux_weight: float = 0.01):
     hidden, aux = forward(cfg, params, batch["tokens"], sh,
                           compute_dtype=compute_dtype,

@@ -22,12 +22,11 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.dataflow import HBM_BW, PEAK_FLOPS_BF16
 from repro.core.phases import Phase
-from repro.core.program import (_attn_ops, _ffn_ops, _moe_ops, _ssm_ops,
-                                extract_ops)
-from repro.tuner.cost import gemm_for_phase
+from repro.core.program import extract_ops, layer_ops
+from repro.tuner.cost import gemm_for_phase, op_act_bytes, residual_act_bytes
 
 TRAIN_PHASES = (Phase.FF, Phase.BP, Phase.UP)
 
@@ -38,11 +37,15 @@ class LayerCost:
     index: int
     flops: float              # per step, all phases
     weight_bytes: float
+    act_bytes: float = 0.0    # activations written + re-read (FF save, BP use)
 
     @property
     def cost(self) -> float:
-        """Time-like score: compute + one end-to-end weight read."""
-        return self.flops / PEAK_FLOPS_BF16 + self.weight_bytes / HBM_BW
+        """Time-like score: compute + one end-to-end weight read + the
+        activation traffic the layer streams (planned bytes, so stages
+        balance on what actually moves — not weight bytes alone)."""
+        return (self.flops / PEAK_FLOPS_BF16
+                + (self.weight_bytes + self.act_bytes) / HBM_BW)
 
 
 @dataclass(frozen=True)
@@ -58,6 +61,13 @@ class StageSpec:
     cost: float
     has_embed: bool
     has_head: bool
+    # memory-planner attachment (partition_model(hbm_budget=...)): the
+    # stage's allocated arena peak, the per-group remat its policy chose,
+    # and whether it fits the module budget.  Zero/empty when the
+    # partition was not budget-fitted.
+    peak_bytes: float = 0.0
+    remat: tuple = ()
+    fits: bool = True
 
     @property
     def n_layers(self) -> int:
@@ -66,6 +76,13 @@ class StageSpec:
     def describe(self) -> str:
         extras = "".join([" +embed" if self.has_embed else "",
                           " +head" if self.has_head else ""])
+        if self.peak_bytes:
+            rematted = sum(1 for r in self.remat if r == "block")
+            peak = (f"{self.peak_bytes/1e9:.2f}GB" if self.peak_bytes >= 1e8
+                    else f"{self.peak_bytes/1e6:.2f}MB")
+            extras += (f" peak={peak} "
+                       f"remat={rematted}/{len(self.remat)}"
+                       f"{'' if self.fits else ' OVER-BUDGET'}")
         return (f"stage {self.index}: layers [{self.start_layer:3d},"
                 f"{self.end_layer:3d}) groups [{self.start_group},"
                 f"{self.end_group}) flops={self.flops:.3e} "
@@ -81,6 +98,8 @@ class PipelinePlan:
     unit_layers: int          # layers per scan group (the pattern period)
     stages: tuple             # StageSpec per stage
     tokens_per_step: float
+    hbm_budget: float = 0.0   # per-module budget the stages were fitted to
+    notes: tuple = ()
 
     @property
     def group_bounds(self) -> tuple:
@@ -89,6 +108,16 @@ class PipelinePlan:
     @property
     def layer_bounds(self) -> tuple:
         return tuple((s.start_layer, s.end_layer) for s in self.stages)
+
+    @property
+    def stage_remat(self) -> tuple:
+        """Per-stage remat settings for the runner / stage programs
+        (each entry a per-group tuple; empty when not budget-fitted)."""
+        return tuple(s.remat for s in self.stages)
+
+    @property
+    def fits(self) -> bool:
+        return all(s.fits for s in self.stages)
 
     @property
     def imbalance(self) -> float:
@@ -102,7 +131,14 @@ class PipelinePlan:
         hdr = (f"# PipelinePlan {self.cfg_name} stages={self.num_stages} "
                f"unit={self.unit_layers} layers/group "
                f"imbalance={self.imbalance:.3f}")
-        return "\n".join([hdr] + [s.describe() for s in self.stages])
+        if self.hbm_budget:
+            budget = (f"{self.hbm_budget/1e9:.1f}GB"
+                      if self.hbm_budget >= 1e8
+                      else f"{self.hbm_budget/1e6:.2f}MB")
+            hdr += (f" budget={budget}/module "
+                    f"{'fits' if self.fits else 'OVER BUDGET'}")
+        return "\n".join([hdr] + [s.describe() for s in self.stages]
+                         + [f"note: {n}" for n in self.notes])
 
     def to_dict(self) -> dict:
         return {
@@ -110,11 +146,16 @@ class PipelinePlan:
             "num_stages": self.num_stages,
             "unit_layers": self.unit_layers,
             "imbalance": round(self.imbalance, 6),
+            "hbm_budget": self.hbm_budget,
+            "fits": self.fits,
+            "notes": list(self.notes),
             "stages": [{
                 "index": s.index, "layers": [s.start_layer, s.end_layer],
                 "groups": [s.start_group, s.end_group],
                 "flops": s.flops, "weight_bytes": s.weight_bytes,
                 "cost_s": s.cost, "embed": s.has_embed, "head": s.has_head,
+                "peak_bytes": s.peak_bytes, "remat": list(s.remat),
+                "fits": s.fits,
             } for s in self.stages],
         }
 
@@ -125,14 +166,16 @@ class PipelinePlan:
 
 
 def _price_ops(ops: list, tokens: float, kind: str) -> tuple:
-    """(flops, weight_bytes) of one layer's op list via gemm_for_phase."""
+    """(flops, weight_bytes, act_bytes) of one layer's op list."""
     phases = TRAIN_PHASES if kind == "train" else (Phase.FF,)
     flops = 0.0
     wbytes = 0.0
+    abytes = 0.0
     for op in ops:
         wbytes += op.weight_bytes
         if op.role == "state":        # VPU ops: negligible MAC work
             continue
+        abytes += op_act_bytes(op, tokens)
         if op.role in ("expert_in", "expert_out") and op.top_k > 0:
             # E per-expert gemms see tokens*top_k/E rows each
             n_exp = op.weight_shape[0]
@@ -144,7 +187,7 @@ def _price_ops(ops: list, tokens: float, kind: str) -> tuple:
             g = gemm_for_phase(op, ph, tokens=t_eff)
             if g is not None:
                 flops += mult * g.flops
-    return flops, wbytes
+    return flops, wbytes, abytes
 
 
 def layer_costs(cfg: ModelConfig, *, tokens_per_step: float,
@@ -152,16 +195,9 @@ def layer_costs(cfg: ModelConfig, *, tokens_per_step: float,
     """Per-layer roofline prices, one LayerCost per model layer."""
     out = []
     for i in range(cfg.n_layers):
-        ops = (_attn_ops(cfg, 1) if cfg.is_attention_layer(i)
-               else _ssm_ops(cfg, 1))
-        if cfg.is_moe_layer(i):
-            ops = ops + _moe_ops(cfg, 1)
-            if cfg.moe is not None and cfg.moe.dense_residual:
-                ops = ops + _ffn_ops(cfg, 1)
-        else:
-            ops = ops + _ffn_ops(cfg, 1)
-        f, w = _price_ops(ops, tokens_per_step, kind)
-        out.append(LayerCost(index=i, flops=f, weight_bytes=w))
+        f, w, a = _price_ops(layer_ops(cfg, i), tokens_per_step, kind)
+        a += residual_act_bytes(cfg.d_model, tokens_per_step)
+        out.append(LayerCost(index=i, flops=f, weight_bytes=w, act_bytes=a))
     return out
 
 
@@ -215,8 +251,22 @@ def _greedy_bounds(unit_costs: list, num_stages: int) -> list:
 
 def partition_model(cfg: ModelConfig, num_stages: int, *,
                     global_batch: int = 8, seq_len: int = 128,
-                    kind: str = "train") -> PipelinePlan:
+                    kind: str = "train", hbm_budget: float = 0.0,
+                    mesh_spec=None, microbatch: int = 1,
+                    precision: str = "paper_sr_bf16") -> PipelinePlan:
     """Balance the model's layers into `num_stages` memory-module stages.
+
+    Stages balance on PLANNED bytes: each layer's roofline price counts
+    its activation traffic alongside weights and FLOPs, so a partition
+    no longer looks balanced while one stage drowns in saved
+    activations.
+
+    hbm_budget > 0 additionally *fits* every stage: the memory planner
+    (repro/memory) allocates each stage's step lifetimes against the
+    per-module budget, choosing per-scan-group remat
+    (``memory.policy.fit_stage``); the results ride ``StageSpec``
+    (peak_bytes / remat / fits) and ``PipelinePlan.stage_remat`` plugs
+    straight into ``compile_stage_programs`` and the runner.
 
     Raises ValueError when there are more stages than scan groups — a
     stage must own at least one group (params stack over groups, so a
@@ -256,20 +306,55 @@ def partition_model(cfg: ModelConfig, num_stages: int, *,
         unit_costs.append(c)
     bounds = _greedy_bounds(unit_costs, num_stages)
 
+    notes: list = []
+    fitter = None
+    if hbm_budget > 0:
+        from repro.core.dataflow import MeshSpec
+        from repro.memory.policy import fit_stage
+        ms = mesh_spec or MeshSpec(axis_sizes={"data": 1, "model": 1})
+        fit_shape = ShapeConfig("stage_fit", seq_len=seq_len,
+                                global_batch=global_batch, kind=kind)
+
+        def fitter(s, l0, l1):
+            return fit_stage(cfg, fit_shape, ms, hbm_budget=hbm_budget,
+                             microbatch=microbatch, layer_range=(l0, l1),
+                             include_embed=(s == 0),
+                             include_head=(s == num_stages - 1),
+                             precision=precision,
+                             # 1F1B: stage s piles up min(M, S-s)
+                             # microbatches of residuals in warmup
+                             in_flight=min(max(1, microbatch),
+                                           num_stages - s))
+
     stages = []
     for s in range(num_stages):
         g0, g1 = bounds[s], bounds[s + 1]
         l0, l1 = g0 * period, g1 * period
         f = sum(lc.flops for lc in lcosts[l0:l1])
         w = sum(lc.weight_bytes for lc in lcosts[l0:l1])
+        a = sum(lc.act_bytes for lc in lcosts[l0:l1])
         if s == 0:
             f, w = f + emb_f, w + emb_w
         if s == num_stages - 1:
             f, w = f + head_f, w + head_w
+        peak, remat, fits = 0.0, (), True
+        if fitter is not None:
+            pol = fitter(s, l0, l1)
+            peak, remat, fits = float(pol.peak_bytes), pol.remat, pol.fits
+            if not fits:
+                notes.append(
+                    f"stage {s}: planned peak {peak/1e9:.2f}GB exceeds the "
+                    f"{hbm_budget/1e9:.2f}GB module budget even with full "
+                    f"remat")
         stages.append(StageSpec(
             index=s, start_layer=l0, end_layer=l1, start_group=g0,
-            end_group=g1, flops=f, weight_bytes=w, cost=_cost(f, w),
-            has_embed=(s == 0), has_head=(s == num_stages - 1)))
+            end_group=g1, flops=f, weight_bytes=w,
+            # the same act-inclusive price the greedy balanced on, so the
+            # reported imbalance measures the partition actually made
+            cost=_cost(f, w + a),
+            has_embed=(s == 0), has_head=(s == num_stages - 1),
+            peak_bytes=peak, remat=remat, fits=fits))
     return PipelinePlan(cfg_name=cfg.name, num_stages=num_stages,
                         unit_layers=period, stages=tuple(stages),
-                        tokens_per_step=tokens)
+                        tokens_per_step=tokens, hbm_budget=hbm_budget,
+                        notes=tuple(notes))

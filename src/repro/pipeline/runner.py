@@ -42,11 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:                                      # jax >= 0.6
-    _shard_map = jax.shard_map
-except AttributeError:                    # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
-
+from repro.compat import shard_map as _shard_map
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.phases import Phase
 from repro.engine import PEContext
@@ -119,7 +115,8 @@ class _Handoff:
 
 def make_pipeline_train_step(cfg: ModelConfig, programs: list,
                              pplan: PipelinePlan, train_cfg: TrainConfig,
-                             mesh=None, *, schedule: Optional[str] = None):
+                             mesh=None, *, schedule: Optional[str] = None,
+                             stage_remat: Optional[tuple] = None):
     """Build (step_fn, opt) with the single-module `make_train_step`
     signature: step_fn(state, batch, key) -> (state, metrics), state being
     the ordinary full-model TrainState (checkpoints stay interchangeable).
@@ -129,6 +126,12 @@ def make_pipeline_train_step(cfg: ModelConfig, programs: list,
     ``max(1, train_cfg.microbatch)``.  ZeRO-1 re-sharding is a
     single-module concern and is not applied here (each stage owns its
     dW outright — the "dedicated vault").
+
+    stage_remat: per-stage remat settings (each a mode string or a
+    per-group tuple — ``PipelinePlan.stage_remat`` from a budget-fitted
+    partition); None falls back to the global ``train_cfg.remat``.
+    Remat never changes values, only what autodiff saves, so parity with
+    the monolithic path is unaffected.
     """
     if cfg.family == "audio":
         raise NotImplementedError("pipeline stages are decoder-only")
@@ -141,7 +144,11 @@ def make_pipeline_train_step(cfg: ModelConfig, programs: list,
     validate(sched)
     backend = train_cfg.kernel_backend
     bounds = pplan.group_bounds
-    remat = train_cfg.remat
+    if stage_remat is not None and len(stage_remat) != S:
+        raise ValueError(f"stage_remat has {len(stage_remat)} entries for "
+                         f"{S} stages")
+    stage_remat = (tuple(stage_remat) if stage_remat is not None
+                   else (train_cfg.remat,) * S)
     shs = [PEContext(mesh, prog, backend=backend) for prog in programs]
 
     def loss_and_grads(params: dict, batch: dict, key: jax.Array):
@@ -165,7 +172,7 @@ def make_pipeline_train_step(cfg: ModelConfig, programs: list,
                 else:
                     positions = jnp.arange(x.shape[1], dtype=jnp.int32)
                 x, aux, _ = tfm.group_scan(cfg, x, aux, sp["groups"], sh,
-                                           positions, remat=remat)
+                                           positions, remat=stage_remat[s])
                 if s == S - 1:
                     from repro.models.layers import apply_norm
                     x = apply_norm(cfg, x, sp.get("final_norm"))

@@ -21,9 +21,10 @@ matvec).  This package schedules both onto one fixed cache arena:
 from repro.serving.engine import (ServingEngine, TokenEvent, build_engine,
                                   latency_stats)
 from repro.serving.scheduler import Request, RequestState, Scheduler
-from repro.serving.slots import SlotPool, reset_slots
+from repro.serving.slots import (SlotPool, plan_cache_arena, reset_slots,
+                                 slot_bytes)
 from repro.serving.trace import poisson_trace
 
 __all__ = ["ServingEngine", "TokenEvent", "build_engine", "latency_stats",
            "Request", "RequestState", "Scheduler", "SlotPool",
-           "reset_slots", "poisson_trace"]
+           "plan_cache_arena", "slot_bytes", "reset_slots", "poisson_trace"]

@@ -31,7 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.core.program import Program
 from repro.runtime import train_loop as tl
 from repro.serving.scheduler import Request, Scheduler
-from repro.serving.slots import SlotPool, reset_slots
+from repro.serving.slots import SlotPool, plan_cache_arena, reset_slots
 
 
 @dataclass(frozen=True)
@@ -80,7 +80,11 @@ class ServingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
-        self.pool = SlotPool(n_slots)
+        # the slot arena comes from the same allocator the training
+        # planner uses: pool.plan carries deterministic per-row offsets
+        _, arena_plan = plan_cache_arena(cfg, max_len=max_len,
+                                         n_slots=n_slots)
+        self.pool = SlotPool(n_slots, plan=arena_plan)
         self.sched = Scheduler(
             self.pool, prefill_chunk=prefill_chunk,
             max_prefill_chunks_per_step=max_prefill_chunks_per_step,
@@ -213,9 +217,11 @@ class ServingEngine:
         return len(self.sched.active)
 
 
-def build_engine(cfg: ModelConfig, *, n_slots: int, max_len: int,
+def build_engine(cfg: ModelConfig, *, n_slots: Optional[int] = None,
+                 max_len: int,
                  prefill_chunk: int = 32, kernel_backend: str = "reference",
                  mesh=None, mesh_spec=None, seed: int = 0,
+                 hbm_budget: Optional[float] = None,
                  **engine_kwargs) -> ServingEngine:
     """One-stop constructor: compile the serve-kind program, init bf16
     params, build the engine — the shared setup of the serve CLI, the
@@ -223,6 +229,10 @@ def build_engine(cfg: ModelConfig, *, n_slots: int, max_len: int,
 
     mesh_spec is required when `mesh` is given (the CLI passes
     ``mesh_spec_for(mesh)``); single-device callers omit both.
+
+    n_slots=None sizes the arena from ``hbm_budget`` via the memory
+    allocator (``serving.slots.plan_cache_arena``), reserving the bf16
+    parameter bytes the engine also holds.
     """
     from repro.configs.base import ShapeConfig
     from repro.core.dataflow import MeshSpec
@@ -231,6 +241,10 @@ def build_engine(cfg: ModelConfig, *, n_slots: int, max_len: int,
         if mesh is not None:
             raise ValueError("pass mesh_spec alongside mesh")
         mesh_spec = MeshSpec(axis_sizes={"data": 1, "model": 1})
+    if n_slots is None:
+        n_slots, _ = plan_cache_arena(
+            cfg, max_len=max_len, hbm_budget=hbm_budget,
+            reserve_bytes=2.0 * cfg.param_count())
     shape = ShapeConfig("serve", seq_len=max_len, global_batch=n_slots,
                         kind="decode")
     program = compile_program(cfg, shape, mesh_spec)

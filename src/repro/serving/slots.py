@@ -12,10 +12,60 @@ re-initialising it.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def slot_bytes(cfg, max_len: int) -> int:
+    """Bytes of ONE slot row across every cache leaf (all families)."""
+    from repro.runtime import train_loop as tl
+    shapes = tl.cache_shapes(cfg, 1, max_len)
+    return int(sum(math.prod(s.shape) * s.dtype.itemsize
+                   for s in jax.tree.leaves(shapes)))
+
+
+def plan_cache_arena(cfg, *, max_len: int, n_slots: Optional[int] = None,
+                     hbm_budget: Optional[float] = None,
+                     reserve_bytes: float = 0.0):
+    """Size + place the serving cache arena with the memory allocator.
+
+    Returns (n_slots, MemoryPlan): one allocation per slot row, all
+    alive for the whole serving loop, placed by the same deterministic
+    first-fit the training planner uses — the slot index IS the row's
+    arena position.  With ``n_slots=None`` the arena takes every slot
+    that fits ``hbm_budget - reserve_bytes`` (reserve_bytes: weights +
+    workspace the engine also holds).
+    """
+    from repro.memory.arena import MemoryBudgetError, allocate
+    from repro.memory.liveness import LivenessTable, TensorInterval
+
+    sb = slot_bytes(cfg, max_len)
+    if n_slots is None:
+        if hbm_budget is None:
+            raise ValueError("pass n_slots or hbm_budget")
+        avail = hbm_budget - reserve_bytes
+        n_slots = int(avail // sb)
+        if n_slots < 1:
+            raise MemoryBudgetError(
+                f"cache arena: one {sb / 1e6:.1f}MB slot row "
+                f"(max_len={max_len}) does not fit the "
+                f"{avail / 1e6:.1f}MB left of the "
+                f"{(hbm_budget or 0) / 1e9:.2f}GB budget")
+    table = LivenessTable(tick_phases=["PREFILL", "DECODE"])
+    # zero-padded names: the allocator breaks ties lexicographically, so
+    # padding is what keeps offset order == slot index past 10 slots
+    width = len(str(max(0, n_slots - 1)))
+    for i in range(n_slots):
+        table.intervals.append(TensorInterval(
+            name=f"slot:{i:0{width}d}", region="cache", bytes=sb,
+            birth=0, death=2, phase="PREFILL"))
+    plan = allocate(table)
+    if hbm_budget is not None:
+        plan.check_budget(hbm_budget - reserve_bytes)
+    return n_slots, plan
 
 
 class SlotPool:
@@ -27,14 +77,27 @@ class SlotPool:
     policy (preempt the most recently admitted request first).
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, plan=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.n_slots = n_slots
+        self.plan = plan                                # memory.MemoryPlan
         self._free = list(range(n_slots - 1, -1, -1))   # pop() -> lowest
         self._owner: dict[int, str] = {}                # slot -> request id
         self._seq: dict[int, int] = {}                  # slot -> lease tick
         self._tick = 0
+
+    @classmethod
+    def from_budget(cls, cfg, *, max_len: int,
+                    hbm_budget: float, reserve_bytes: float = 0.0,
+                    n_slots: Optional[int] = None) -> "SlotPool":
+        """A pool whose arena the memory allocator sized/placed against a
+        module HBM budget (``plan_cache_arena``); ``pool.plan`` carries
+        the per-slot offsets."""
+        n, plan = plan_cache_arena(cfg, max_len=max_len, n_slots=n_slots,
+                                   hbm_budget=hbm_budget,
+                                   reserve_bytes=reserve_bytes)
+        return cls(n, plan=plan)
 
     @property
     def free_count(self) -> int:

@@ -148,6 +148,30 @@ def candidate_tiles(shape: GemmShape, extra: tuple = ()) -> list:
 
 
 # ---------------------------------------------------------------------------
+# Activation bytes (shared with the memory planner + pipeline partitioner)
+# ---------------------------------------------------------------------------
+
+
+def op_act_bytes(op: OpSpec, tokens: float, *, dtype_bytes: int = 2) -> float:
+    """Bytes of the activation OUTPUT one layer of this op writes for
+    `tokens` input rows — the tensor autodiff must keep live until BP
+    when it is not rematerialised.  Expert ops see tokens * top_k routed
+    rows (the dispatch buffer), state-role ops produce negligible VPU
+    vectors."""
+    if op.role == "state":
+        return 0.0
+    rows = tokens * op.top_k if op.top_k > 0 else tokens
+    return rows * op.act_out_features * dtype_bytes
+
+
+def residual_act_bytes(d_model: int, tokens: float, *, dtype_bytes: int = 2,
+                       sites: int = 2) -> float:
+    """Residual-stream bytes a layer keeps live (`sites` norm inputs per
+    layer; one site = the scan-group boundary tensor remat checkpoints)."""
+    return sites * tokens * d_model * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
 # OpSpec x Phase -> GemmShape
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,367 @@
+"""Memory planner (repro/memory): liveness -> arena -> policy.
+
+Covers the planner invariants the ISSUE pins: deterministic offsets,
+peak-bytes monotonicity under remat/microbatching, the allocator's
+no-overlap invariant (hypothesis when available, seeded sweep always),
+budget errors naming the first op, bit-parity of auto-memory-selected
+configs vs the same config set manually, and the acceptance scenario —
+a weight-only-looking partition that busts a stage budget until the
+planner's per-group remat fits it, with training parity to the
+monolithic path preserved bit for bit.
+"""
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import (AttentionConfig, ModelConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import MeshSpec, compile_program
+from repro.memory import MemoryBudgetError, allocate, choose_policy
+from repro.memory.liveness import LivenessTable, TensorInterval
+
+MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1})
+SMOKE = ShapeConfig("smoke", seq_len=32, global_batch=8, kind="train")
+
+DENSE = ModelConfig(
+    name="memtest-dense", family="dense", n_layers=8, d_model=64,
+    d_ff=256, vocab_size=128,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=16))
+
+
+# ---------------------------------------------------------------------------
+# Arena invariants
+# ---------------------------------------------------------------------------
+
+
+def _no_overlap(plan):
+    allocs = [a for a in plan.allocations if a.bytes > 0]
+    for i, a in enumerate(allocs):
+        for b in allocs[i + 1:]:
+            time_overlap = a.birth < b.death and b.birth < a.death
+            addr_overlap = a.offset < b.end and b.offset < a.end
+            assert not (time_overlap and addr_overlap), (a, b)
+
+
+def _random_table(rng, n):
+    ivs = []
+    for i in range(n):
+        birth = rng.randrange(0, 30)
+        ivs.append(TensorInterval(
+            name=f"t{i}", region="activation", bytes=rng.randrange(1, 5000),
+            birth=birth, death=birth + rng.randrange(1, 12), phase="FF"))
+    return LivenessTable(intervals=ivs, tick_phases=["FF"] * 48)
+
+
+def test_allocator_no_overlap_seeded():
+    import random
+    for seed in range(8):
+        plan = allocate(_random_table(random.Random(seed), 120))
+        _no_overlap(plan)
+        assert plan.live_peak_bytes <= plan.arena_bytes
+        assert 0.0 <= plan.fragmentation < 1.0
+
+
+def test_allocator_no_overlap_hypothesis():
+    pytest.importorskip("hypothesis", reason="requirements-dev.txt not installed")
+    from hypothesis import given, settings, strategies as st
+
+    interval = st.tuples(st.integers(0, 20), st.integers(1, 10),
+                         st.integers(1, 10_000))
+
+    @given(st.lists(interval, min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def run(raw):
+        ivs = [TensorInterval(name=f"t{i}", region="activation", bytes=b,
+                              birth=bi, death=bi + d, phase="FF")
+               for i, (bi, d, b) in enumerate(raw)]
+        plan = allocate(LivenessTable(intervals=ivs, tick_phases=["FF"] * 32))
+        _no_overlap(plan)
+        # the arena is never larger than the sum of everything...
+        assert plan.arena_bytes <= sum(a.end - a.offset + 256
+                                       for a in plan.allocations)
+        # ...and never smaller than the live peak
+        assert plan.arena_bytes >= plan.live_peak_bytes
+
+    run()
+
+
+def test_allocator_reuses_dead_space():
+    """Disjoint lifetimes share addresses — the point of the arena."""
+    ivs = [TensorInterval(name="a", region="activation", bytes=1000,
+                          birth=0, death=2, phase="FF"),
+           TensorInterval(name="b", region="activation", bytes=1000,
+                          birth=2, death=4, phase="BP")]
+    plan = allocate(LivenessTable(intervals=ivs, tick_phases=["FF"] * 4))
+    offs = {a.name: a.offset for a in plan.allocations}
+    assert offs["a"] == offs["b"] == 0
+    assert plan.arena_bytes == 1000
+
+
+def test_budget_error_names_first_op():
+    prog = compile_program(DENSE, SMOKE, MESH1, remat="none")
+    plan = prog.memory_plan()
+    with pytest.raises(MemoryBudgetError) as ei:
+        plan.check_budget(plan.arena_bytes / 4)
+    msg = str(ei.value)
+    assert ei.value.allocation is not None
+    assert ei.value.allocation.name in msg
+    assert "GB" in msg and "tick" in msg
+
+
+# ---------------------------------------------------------------------------
+# Determinism + monotonicity
+# ---------------------------------------------------------------------------
+
+
+def test_plan_determinism():
+    a = compile_program(DENSE, SMOKE, MESH1, remat="block", microbatch=2)
+    b = compile_program(DENSE, SMOKE, MESH1, remat="block", microbatch=2)
+    pa, pb = a.memory_plan(), b.memory_plan()
+    assert [(x.name, x.offset, x.bytes, x.birth, x.death)
+            for x in pa.allocations] == \
+           [(x.name, x.offset, x.bytes, x.birth, x.death)
+            for x in pb.allocations]
+    assert pa.to_dict() == pb.to_dict()
+
+
+def test_peak_monotone_in_remat_and_microbatch():
+    def peak(remat, nm):
+        return compile_program(DENSE, SMOKE, MESH1, remat=remat,
+                               microbatch=nm).memory_table.peak_bytes()
+
+    assert peak("block", 1) <= peak("none", 1)
+    assert peak("block", 2) <= peak("none", 2)
+    assert peak("none", 4) <= peak("none", 2) <= peak("none", 1)
+    # per-group remat sits between the two uniform extremes
+    G = DENSE.n_layers        # period 1 -> one group per layer
+    half = ("block",) * (G // 2) + ("none",) * (G - G // 2)
+    assert peak("block", 1) <= peak(half, 1) <= peak("none", 1)
+
+
+def test_phase_peaks_cover_all_phases():
+    t = compile_program(DENSE, SMOKE, MESH1, remat="none").memory_table
+    peaks = t.phase_peaks()
+    assert set(peaks) == {"FF", "BP", "UP"}
+    # BP sees the activation high-water plus the grad accumulator
+    assert peaks["BP"] >= peaks["UP"]
+
+
+def test_serving_liveness_has_cache_region():
+    shp = ShapeConfig("d", seq_len=64, global_batch=4, kind="decode")
+    prog = compile_program(DENSE, shp, MESH1)
+    t = prog.memory_table
+    assert set(t.phase_peaks()) == {"PREFILL", "DECODE"}
+    assert t.region_peak("cache") > 0
+
+
+# ---------------------------------------------------------------------------
+# total_mem_bytes cross-check (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_total_mem_bytes_matches_planner_state_regions():
+    """DataflowPlan.total_mem_bytes (params + policy-dtype moments) must
+    agree with the memory plan's weights+optim region totals."""
+    for precision in ("paper_sr_bf16", "bf16_fp32", "fp32"):
+        prog = compile_program(DENSE, SMOKE, MESH1, precision=precision,
+                               remat="none")
+        regions = prog.memory_plan().region_bytes()
+        planner = regions.get("weights", 0) + regions.get("optim", 0)
+        assert planner == pytest.approx(prog.plan.total_mem_bytes(),
+                                        rel=1e-6), precision
+
+
+def test_total_mem_bytes_tracks_precision():
+    bf16 = compile_program(DENSE, SMOKE, MESH1, precision="paper_sr_bf16")
+    f32 = compile_program(DENSE, SMOKE, MESH1, precision="fp32")
+    # 2+2+2 bytes/param vs 4+4+4: the f32 preset holds 2x the state
+    assert f32.plan.total_mem_bytes() == pytest.approx(
+        2.0 * bf16.plan.total_mem_bytes(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Policy search + auto-memory parity
+# ---------------------------------------------------------------------------
+
+
+def _train_losses(cfg, shape, train_cfg, steps=2):
+    import jax
+    from repro.data import SyntheticLM
+    from repro.runtime import train_loop as tl
+
+    prog = compile_program(cfg, shape, MESH1, precision=train_cfg.precision,
+                           microbatch=max(1, train_cfg.microbatch),
+                           remat=train_cfg.remat)
+    step_fn, opt = tl.make_train_step(cfg, prog, train_cfg, None)
+    state = tl.init_state(cfg, prog, train_cfg, jax.random.PRNGKey(0), opt)
+    jstep = jax.jit(step_fn)
+    pipe = SyntheticLM(cfg, shape)
+    losses = []
+    for i in range(steps):
+        state, m = jstep(state, pipe.batch_at(i), jax.random.key(i))
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_auto_memory_policy_bit_parity():
+    """The planner-chosen (remat, microbatch) config trains bit-identically
+    to the same config set manually — and to the no-remat baseline
+    (remat changes what autodiff saves, never values)."""
+    import jax
+    import jax.numpy as jnp
+
+    cfg = DENSE
+    # force a non-trivial choice: budget halfway between full-remat and
+    # no-remat peaks at microbatch 2
+    lo = compile_program(cfg, SMOKE, MESH1, remat="block",
+                         microbatch=2).memory_table.peak_bytes()
+    hi = compile_program(cfg, SMOKE, MESH1, remat="none",
+                         microbatch=1).memory_table.peak_bytes()
+    assert lo < hi
+    budget = (lo + hi) / 2
+    pol = choose_policy(cfg, SMOKE, MESH1, hbm_budget=budget,
+                        microbatch_candidates=(1, 2))
+    assert pol.fits and pol.peak_bytes <= budget
+    auto_cfg = TrainConfig(optimizer="adamw", remat=pol.remat,
+                           microbatch=pol.microbatch)
+    manual_cfg = TrainConfig(optimizer="adamw", remat=tuple(pol.remat),
+                             microbatch=pol.microbatch)
+    la, sa = _train_losses(cfg, SMOKE, auto_cfg)
+    lm, sm = _train_losses(cfg, SMOKE, manual_cfg)
+    assert la == lm
+    for a, b in zip(jax.tree.leaves(sa["params"]),
+                    jax.tree.leaves(sm["params"])):
+        assert bool(jnp.array_equal(a, b))
+    # remat invariance vs the plain baseline at the same microbatching
+    baseline = TrainConfig(optimizer="adamw", remat="none",
+                           microbatch=pol.microbatch)
+    lb, sb = _train_losses(cfg, SMOKE, baseline)
+    assert la == lb
+    for a, b in zip(jax.tree.leaves(sa["params"]),
+                    jax.tree.leaves(sb["params"])):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_policy_prefers_cheapest_fitting_point():
+    """A generous budget picks no remat and the smallest microbatch."""
+    pol = choose_policy(DENSE, SMOKE, MESH1, hbm_budget=1e15,
+                        microbatch_candidates=(1, 2, 4))
+    assert pol.fits
+    assert pol.microbatch == 1
+    assert pol.n_rematted == 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: weight-only partition busts; planner-driven partition fits
+# ---------------------------------------------------------------------------
+
+
+def test_planner_partition_fits_where_weight_only_busts():
+    """Weight-only accounting says every stage fits, the real lifetimes
+    (activations included) bust the budget — and the planner-driven
+    partition (per-group remat from policy.fit_stage) fits it, training
+    bit-identically to the monolithic path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.program import compile_stage_programs
+    from repro.data import SyntheticLM
+    from repro.engine import PEContext
+    from repro.models import transformer as tfm
+    from repro.pipeline import make_pipeline_train_step, partition_model
+    from repro.runtime import train_loop as tl
+
+    cfg = DENSE
+    shape = ShapeConfig("pp", seq_len=64, global_batch=8, kind="train")
+    S, M = 2, 2
+    base = partition_model(cfg, S, global_batch=shape.global_batch,
+                           seq_len=shape.seq_len)
+    progs_none = compile_stage_programs(cfg, shape, MESH1, base.layer_bounds,
+                                        microbatch=M, remat="none")
+    progs_block = compile_stage_programs(cfg, shape, MESH1, base.layer_bounds,
+                                         microbatch=M, remat="block")
+    peaks_none = [p.memory_plan().arena_bytes for p in progs_none]
+    peaks_block = [p.memory_plan().arena_bytes for p in progs_block]
+    worst = max(range(S), key=lambda s: peaks_none[s])
+    assert peaks_block[worst] < peaks_none[worst]
+    budget = (peaks_block[worst] + peaks_none[worst]) / 2
+
+    # weight-only accounting: every stage's persistent state fits...
+    for p in progs_none:
+        assert p.plan.total_state_bytes() <= budget
+    # ...but the planned peak (activations included) busts a stage
+    assert max(peaks_none) > budget
+
+    pplan = partition_model(cfg, S, global_batch=shape.global_batch,
+                            seq_len=shape.seq_len, hbm_budget=budget,
+                            mesh_spec=MESH1, microbatch=M)
+    assert pplan.fits
+    assert all(s.peak_bytes <= budget for s in pplan.stages)
+    assert any("block" in s.remat for s in pplan.stages)
+
+    # training parity: planner-driven pipeline == monolithic, bit for bit
+    tc = TrainConfig(optimizer="adamw", lr=2e-3, microbatch=M, remat="none")
+    sprogs = compile_stage_programs(cfg, shape, MESH1, pplan.layer_bounds,
+                                    microbatch=M,
+                                    remat=list(pplan.stage_remat))
+    pstep, opt = make_pipeline_train_step(cfg, sprogs, pplan, tc, None,
+                                          stage_remat=pplan.stage_remat)
+    prog = compile_program(cfg, shape, MESH1, microbatch=M, remat="none")
+    policy = prog.policy
+    sh = PEContext(None, prog, backend="reference")
+
+    def mono_grads(params, batch):
+        def loss(p, mb):
+            return tfm.loss_fn(cfg, p, mb, sh, compute_dtype=policy.ff_dtype,
+                               remat="none")
+
+        def one_micro(carry, mb):
+            li, gi = jax.value_and_grad(loss)(params, mb)
+            return (carry[0] + li,
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 carry[1], gi)), None
+
+        micro = tl.split_microbatches(batch, M)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l, g), _ = jax.lax.scan(one_micro, (jnp.zeros(()), g0), micro)
+        return l / M, jax.tree.map(lambda x: x / M, g)
+
+    jg1 = jax.jit(mono_grads)
+    jg2 = jax.jit(pstep.loss_and_grads)
+    state = tl.init_state(cfg, prog, tc, jax.random.PRNGKey(0), opt)
+    pipe = SyntheticLM(cfg, shape)
+    for i in range(2):
+        b = pipe.batch_at(i)
+        l1, g1 = jg1(state["params"], b)
+        l2, g2 = jg2(state["params"], b, jax.random.key(i))
+        assert float(l1) == float(l2), i
+        eq = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), g1, g2)
+        assert all(jax.tree.leaves(eq)), i
+
+
+# ---------------------------------------------------------------------------
+# Serving slot arena
+# ---------------------------------------------------------------------------
+
+
+def test_cache_arena_offsets_and_budget():
+    from repro.serving import plan_cache_arena, slot_bytes
+
+    cfg = get_reduced("qwen2-0.5b")
+    sb = slot_bytes(cfg, max_len=64)
+    assert sb > 0
+    n, plan = plan_cache_arena(cfg, max_len=64, n_slots=4)
+    assert n == 4 and len(plan.allocations) == 4
+    offs = sorted(a.offset for a in plan.allocations)
+    assert offs[0] == 0 and len(set(offs)) == 4      # distinct rows
+    _no_overlap(plan)
+    # slot index == arena row order, past the 10-slot lexicographic trap
+    _, plan12 = plan_cache_arena(cfg, max_len=64, n_slots=12)
+    by_index = sorted(plan12.allocations, key=lambda a: int(a.name.split(":")[1]))
+    assert [a.offset for a in by_index] == sorted(a.offset
+                                                  for a in plan12.allocations)
+    # budget-derived sizing: the arena takes every slot that fits
+    budget = 10 * sb
+    n2, plan2 = plan_cache_arena(cfg, max_len=64, hbm_budget=budget)
+    assert 1 <= n2 <= 10
+    assert plan2.arena_bytes <= budget
+    with pytest.raises(MemoryBudgetError, match="slot row"):
+        plan_cache_arena(cfg, max_len=64, hbm_budget=float(sb - 1))
