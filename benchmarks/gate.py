@@ -1,7 +1,7 @@
-"""CI perf gate: run the benchmark harness, record BENCH_5.json, compare
+"""CI perf gate: run the benchmark harness, record BENCH_6.json, compare
 against the committed baseline.
 
-    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_5.json]
+    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_6.json]
         [--baseline benchmarks/baseline.json] [--update]
 
 Runs ``benchmarks.run`` (the smoke-sized figure/table suites) and
@@ -30,12 +30,14 @@ import sys
 DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
 # autotuner's predicted speedup/bytes, the pipeline partitioner's
-# predicted bubble/imbalance/speedup, and the memory planner's
-# planned peak/fragmentation
+# predicted bubble/imbalance/speedup, the memory planner's planned
+# peak/fragmentation, and the serving rows' cost-modeled tokens/s,
+# p99 inter-token latency, and speculative accepted-per-verify
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
-              "pred_imbalance", "pred_peak_mb", "pred_frag")
+              "pred_imbalance", "pred_peak_mb", "pred_frag",
+              "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify")
 # metrics where bigger is worse (gate direction "lower")
-LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag")
+LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99")
 
 
 def _parse_rows(text: str) -> dict:
@@ -139,7 +141,7 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_5.json")
+    ap.add_argument("--out", default="BENCH_6.json")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--suites", default=DEFAULT_SUITES,
                     help="benchmarks.run --only value")

@@ -16,6 +16,12 @@ DECODE  — bandwidth-bound single-token step: every weight is read once
           per token, so the program word selects the f32-accum matvec
           path and skips the SR entropy stream entirely (nothing
           persistent is written back)
+DRAFT   — speculative decoding's proposal step: the *draft* model's
+          width-1 forward.  Same bandwidth-bound flow as DECODE, but a
+          separate program-word column so a speculative program can map
+          the draft model's ops independently (its weights are small
+          enough to pin resident; its tokens are throwaway proposals the
+          big model re-verifies in one PREFILL-shaped chunk)
 
 NeuroTrainer programs a *different* memory mapping / data flow / precision
 per phase; we carry the same phase tag through the planner, the precision
@@ -33,6 +39,7 @@ class Phase(str, enum.Enum):
     PREP = "PREP"
     PREFILL = "PREFILL"
     DECODE = "DECODE"
+    DRAFT = "DRAFT"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.value
@@ -40,3 +47,6 @@ class Phase(str, enum.Enum):
 
 TRAINING_PHASES = (Phase.FF, Phase.BP, Phase.UP)
 SERVING_PHASES = (Phase.PREFILL, Phase.DECODE)
+# the speculative loop's extra serving phase (opt-in: only programs
+# compiled with speculative=True carry DRAFT words in their iBuffer)
+SPECULATIVE_PHASES = (Phase.PREFILL, Phase.DECODE, Phase.DRAFT)

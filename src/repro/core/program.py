@@ -234,6 +234,9 @@ class PEWord:
     # matvec path with NO SR entropy stream (nothing persistent written).
     prefill_kernel: str = "sr_matmul"
     decode_kernel: str = "matvec"
+    # DRAFT: the speculative draft model's width-1 step — same bandwidth
+    # flow as DECODE (only speculative programs emit DRAFT iBuffer rows)
+    draft_kernel: str = "matvec"
     # per-phase LoopNest tiles from the mapping autotuner (repro/tuner):
     # (("FF", (tm, tn, tk)), ...) — a tuple-of-pairs (not a dict) so the
     # word stays hashable on the custom_vjp nondiff path.  Empty = the
@@ -255,13 +258,16 @@ class PEWord:
             return self.prefill_kernel
         if phase == Phase.DECODE:
             return self.decode_kernel
+        if phase == Phase.DRAFT:
+            return self.draft_kernel
         return self.up_kernel
 
 
 # VPU ops (norm scales, conv taps, router logits): full-precision elementwise
 # or routing math — never dispatched onto the MAC-array kernels.
 _VPU_WORD_KERNELS = dict(ff_kernel="vpu", bp_kernel="vpu", up_kernel="vpu",
-                         prefill_kernel="vpu", decode_kernel="vpu")
+                         prefill_kernel="vpu", decode_kernel="vpu",
+                         draft_kernel="vpu")
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +294,12 @@ class Program:
     remat: object = "none"                     # str | per-group tuple
     microbatch: int = 1
     layer_range: Optional[tuple] = None
+    # serving execution modes (compile_program flags): fused_decode flips
+    # the per-layer projection words' DECODE kernel from the per-op matvec
+    # to the decode_fused megakernel; speculative adds the DRAFT word
+    # column (the draft model's width-1 proposals) to the iBuffer image.
+    fused_decode: bool = False
+    speculative: bool = False
     _memory_plan: Optional[object] = field(default=None, repr=False)
 
     def weight_spec(self, op_name: str, *, stacked: bool = True) -> P:
@@ -330,11 +342,21 @@ class Program:
             return PEWord(op=op_name, strategy=strategy,
                           ff_dtype="float32", bp_dtype="float32",
                           update_rounding="nearest", **_VPU_WORD_KERNELS)
+        # fused decode: the per-LAYER projections (proj_in/proj_out roles)
+        # execute inside one megakernel launch per layer — their DECODE
+        # word selects the fused kernel kind.  Embed/head and the expert
+        # tables stay on the per-op matvec (the megakernel fuses the dense
+        # unit body; MoE routing is VPU work the paper never lowers).
+        decode_kernel = "matvec"
+        if self.fused_decode and spec is not None \
+                and spec.role in ("proj_in", "proj_out"):
+            decode_kernel = "decode_fused"
         return PEWord(
             op=op_name, strategy=strategy,
             ff_dtype=jnp.dtype(self.policy.compute_dtype(Phase.FF)).name,
             bp_dtype=jnp.dtype(self.policy.compute_dtype(Phase.BP)).name,
             update_rounding=self.policy.update_rounding,
+            decode_kernel=decode_kernel,
             tiling=self._tiling_word(op_name))
 
     def _tiling_word(self, op_name: str) -> tuple:
@@ -373,6 +395,10 @@ class Program:
             phases = [Phase.FF, Phase.BP, Phase.UP]
         elif self.shape.kind == "prefill":
             phases = [Phase.PREFILL]
+        elif self.speculative:
+            # speculative programs carry the DRAFT word column too: the
+            # draft model's width-1 proposal step is its own iBuffer row
+            phases = [Phase.PREFILL, Phase.DECODE, Phase.DRAFT]
         else:
             phases = [Phase.PREFILL, Phase.DECODE]
         entries = []
@@ -383,7 +409,8 @@ class Program:
                 # dtype/rounding come from the EXECUTABLE word so the image
                 # matches what the engine runs (VPU ops: exact f32/nearest)
                 comm = p.comm_bytes.get(ph)
-                if comm is None and ph in (Phase.PREFILL, Phase.DECODE):
+                if comm is None and ph in (Phase.PREFILL, Phase.DECODE,
+                                           Phase.DRAFT):
                     # the planner books the forward-flow estimate ONCE per
                     # serve kind (double booking would distort its cost
                     # model); both serving words run the same flow, so the
@@ -503,7 +530,9 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                     include_head: bool = True,
                     remat="block",
                     hbm_budget: float = 0.9 * HBM_BYTES,
-                    in_flight: int = 1) -> Program:
+                    in_flight: int = 1,
+                    fused_decode: bool = False,
+                    speculative: bool = False) -> Program:
     """The 'host' step of Fig 12: DNN description -> loaded iBuffer.
 
     tuning: a ``repro.tuner.ProgramTuning`` (or its to_dict() form) — the
@@ -515,6 +544,13 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
     that stage executes, and the HBM budget pass sees only that stage's
     state — the per-stage budget.  `compile_stage_programs` drives this
     for a whole `repro.pipeline` stage map.
+
+    fused_decode=True compiles a serving program whose per-layer
+    projection words select the ``decode_fused`` megakernel kind for the
+    DECODE phase (kernels/decode_fused.py executes them; the per-op
+    matvec program stays the bit-parity reference).  speculative=True
+    adds the DRAFT word column to the iBuffer image — the speculative
+    loop's draft-model step (serving/engine.py).
 
     remat ('none' | 'block' | per-scan-group tuple) and microbatch feed
     the memory planner (repro/memory): the HBM budget pass no longer
@@ -573,7 +609,8 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
     return Program(cfg=cfg, shape=shape, mesh_spec=mesh_spec, policy=policy,
                    plan=plan, ops=ops, tilings=tilings, memory_table=table,
                    remat=remat, microbatch=max(1, microbatch),
-                   layer_range=layer_range)
+                   layer_range=layer_range, fused_decode=fused_decode,
+                   speculative=speculative)
 
 
 def compile_stage_programs(cfg: ModelConfig, shape: ShapeConfig,

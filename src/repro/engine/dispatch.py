@@ -18,7 +18,19 @@ no UP entropy):
             chunk (same flow as FF, minus the backward machinery),
   DECODE  — the bandwidth-oriented matvec word: one weight read per
             token, f32 accumulation, NO stochastic-rounding entropy
-            (decode writes nothing persistent back).
+            (decode writes nothing persistent back),
+  DRAFT   — the speculative draft model's width-1 step: same bandwidth
+            flow as DECODE (the draft's tokens are throwaway proposals).
+
+A DECODE word may select the ``decode_fused`` kernel kind (a program
+compiled with ``fused_decode=True``): the per-LAYER megakernel in
+``kernels/decode_fused.py`` that runs qkv projection, cache append,
+paged attention and the FF block in one launch.  The model's fused unit
+path (``models/transformer._unit_decode_fused``) dispatches whole units
+through :func:`pe_fused_attn_unit` / :func:`pe_fused_ffn` below; an op
+carrying the fused word that still reaches the per-op ``pe_dot`` seam
+(SSM mixer projections, MoE fallbacks) executes as the plain matvec —
+the word changes *where* the op fuses, never its math.
 
 Two backends:
 
@@ -44,6 +56,7 @@ from jax import dtypes as jdtypes
 
 from repro.core.phases import Phase
 from repro.core.program import PEWord
+from repro.kernels import decode_fused as kdf
 from repro.kernels import ops as kops
 
 BACKENDS = ("reference", "pallas")
@@ -245,11 +258,14 @@ def pe_dot(x: jax.Array, w: jax.Array, *,
     kern = word.kernel_for(phase)
     if backend == "reference" or kern == "vpu":
         return _reference_dot(x, w, transpose_w)
-    if phase in (Phase.PREFILL, Phase.DECODE):
+    if phase in (Phase.PREFILL, Phase.DECODE, Phase.DRAFT):
         # serving words route on the WORD's kernel selection (the iBuffer
         # image promises it reports what the engine runs): the bandwidth
-        # matvec, or the MAC-array kernel forward-only
-        if kern == "matvec":
+        # matvec, or the MAC-array kernel forward-only.  A `decode_fused`
+        # word reaching this per-op seam is an op the megakernel does NOT
+        # cover (SSM mixer projections, MoE experts) — it executes as the
+        # same matvec the word would otherwise carry.
+        if kern in ("matvec", "decode_fused"):
             return _matvec(x, w, word, transpose_w)
         return _pallas_fwd(x, w, _StaticCfg(word=word, interpret=interpret,
                                             block=block,
@@ -259,3 +275,65 @@ def pe_dot(x: jax.Array, w: jax.Array, *,
     if key is None:
         key = jax.random.PRNGKey(0)
     return _pallas_dot(x, w, cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode: whole-unit dispatch (the decode_fused megakernel word)
+# ---------------------------------------------------------------------------
+
+
+def fused_block_n(word: Optional[PEWord], default: int = 256) -> int:
+    """The megakernel's FF column-stream tile from the word's DECODE tiling.
+
+    The tuner's ``decode`` kind searches (tm, tn, tk) for the fused
+    launch; tn is the dimension the kernel actually streams (tm == 1 row,
+    tk == d resident), so that is what reaches the BlockSpec.
+    """
+    if word is None:
+        return default
+    t = word.tiling_for(Phase.DECODE)
+    return t[1] if t is not None else default
+
+
+def pe_fused_attn_unit(x, cache: dict, pos, *,
+                       norm1: Optional[dict], qkv_w, qkv_bias, o_w,
+                       norm2: Optional[dict] = None, w_in=None, w_out=None,
+                       heads: int, kv_heads: int, head_dim: int,
+                       rope_theta: float, window=None,
+                       norm_kind: str, act: str, with_ffn: bool = True,
+                       word: Optional[PEWord] = None,
+                       interpret: Optional[bool] = None):
+    """Issue ONE fused-decode program word for a whole attention unit.
+
+    x: (B, d); cache: {"k","v","pos"} arena rows; pos: (B,).  Returns
+    (y (B, d), new_cache).  This is the per-LAYER analog of pe_dot: the
+    word's DECODE tiling programs the kernel's FF stream tile, and the
+    whole unit (qkv -> append -> paged attend -> o -> FF) runs as one
+    launch instead of four matvec words plus jnp glue.
+    """
+    def nrm(p, key):
+        return p.get(key) if p else None
+    y, kc, vc, kp = kdf.fused_attn_unit(
+        x, cache["k"], cache["v"], cache["pos"], pos,
+        norm1_scale=nrm(norm1, "scale"), norm1_bias=nrm(norm1, "bias"),
+        qkv_w=qkv_w, qkv_bias=qkv_bias, o_w=o_w,
+        norm2_scale=nrm(norm2, "scale"), norm2_bias=nrm(norm2, "bias"),
+        w_in=w_in, w_out=w_out,
+        heads=heads, kv_heads=kv_heads, head_dim=head_dim,
+        rope_theta=rope_theta, window=window,
+        norm_kind=norm_kind, act=act, with_ffn=with_ffn,
+        block_n=fused_block_n(word), interpret=interpret)
+    return y, {"k": kc, "v": vc, "pos": kp}
+
+
+def pe_fused_ffn(x, *, norm2: Optional[dict], w_in, w_out,
+                 norm_kind: str, act: str,
+                 word: Optional[PEWord] = None,
+                 interpret: Optional[bool] = None):
+    """Fused norm2+FF+residual word for units whose mixer stays per-op."""
+    def nrm(p, key):
+        return p.get(key) if p else None
+    return kdf.fused_ffn(
+        x, norm2_scale=nrm(norm2, "scale"), norm2_bias=nrm(norm2, "bias"),
+        w_in=w_in, w_out=w_out, norm_kind=norm_kind, act=act,
+        block_n=fused_block_n(word), interpret=interpret)

@@ -92,7 +92,8 @@ def run_engine(args, cfg, mesh, use_mesh):
         cfg, n_slots=args.slots, max_len=max_len, prefill_chunk=args.chunk,
         kernel_backend=args.kernel_backend, mesh=use_mesh,
         mesh_spec=mesh_spec_for(mesh) if use_mesh is not None else None,
-        seed=args.seed, evict_patience=args.evict_patience)
+        seed=args.seed, evict_patience=args.evict_patience,
+        fused_decode=args.fused_decode, speculative=args.speculative)
     trace = poisson_trace(args.requests, vocab_size=cfg.vocab_size,
                           prompt_lens=(lo, hi), gen_tokens=args.gen,
                           mean_interarrival_steps=args.rate, seed=args.seed)
@@ -109,6 +110,12 @@ def run_engine(args, cfg, mesh, use_mesh):
           f"{(n_prompt+stats['tokens'])/wall:.1f} tok/s (total); "
           f"per-token latency p50={stats['p50_ms']:.1f}ms "
           f"p99={stats['p99_ms']:.1f}ms")
+    if args.speculative:
+        v = max(1, engine.spec_stats["verifies"])
+        print(f"speculative k={args.speculative}: "
+              f"verifies={engine.spec_stats['verifies']} "
+              f"accepted={engine.spec_stats['accepted']} "
+              f"({engine.spec_stats['accepted']/v:.2f} accepted/verify)")
     first = trace[0].rid
     print(f"sample ({first}):", results[first][:16])
     return 0
@@ -136,6 +143,11 @@ def main(argv=None):
                     help="cache length per slot (0 = hi + gen)")
     ap.add_argument("--evict-patience", type=int, default=None,
                     help="steps a queued request starves before preemption")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="run the per-layer decode megakernel words")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per verify "
+                         "(0 = off)")
     # single-shot mode
     ap.add_argument("--single-shot", action="store_true",
                     help="legacy fixed-batch loop (parity oracle / audio)")
@@ -149,6 +161,8 @@ def main(argv=None):
     mesh = make_host_mesh()
     use_mesh = mesh if mesh.devices.size > 1 else None
     if args.single_shot or cfg.family == "audio":
+        if args.fused_decode or args.speculative:
+            ap.error("--fused-decode/--speculative apply to engine mode only")
         args.batch = 4 if args.batch is None else args.batch
         args.prompt_len = 32 if args.prompt_len is None else args.prompt_len
         return run_single_shot(args, cfg, mesh, use_mesh)

@@ -20,13 +20,15 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.engine.dispatch import pe_fused_attn_unit, pe_fused_ffn
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_block, attn_params,
                                     chunk_attend, decode_attend,
                                     init_kv_cache, split_qkv, update_cache,
                                     update_cache_chunk)
-from repro.models.layers import (Sharder, apply_norm, apply_rope, embed,
-                                 lm_logits, mlp, mlp_params, norm_params)
+from repro.models.layers import (Sharder, act_fn, apply_norm, apply_rope,
+                                 embed, lm_logits, mlp, mlp_params,
+                                 norm_params)
 from repro.models.moe import moe_block, moe_params
 
 
@@ -400,6 +402,137 @@ def _unit_decode(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
     return x + y, new_cache
 
 
+def _mlp_fused_ref(cfg: ModelConfig, x, w_in, w_out):
+    """FFN with the per-op dispatch seam inlined (reference backend).
+
+    ``mlp`` routes through ``sh.dot`` -> ``_reference_dot`` == a plain
+    ``@`` against the bf16-cast weight; replaying that literally keeps the
+    fused composition bit-identical to the per-op loop.
+    """
+    h = x @ w_in.astype(x.dtype)
+    if cfg.act in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        gate = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = gate * u
+    else:
+        h = act_fn(cfg.act, h)
+    return h @ w_out.astype(h.dtype)
+
+
+def _unit_decode_fused(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
+                       sh: Sharder, cache: dict, pos: jax.Array):
+    """Fused per-layer decode: the unit as ONE dispatch, not four.
+
+    On the pallas backend the attention projections, cache append, paged
+    attention and dense FF lower onto the ``decode_fused`` megakernel
+    (kernels/decode_fused.py) — one launch per layer.  SSM recurrences
+    and MoE experts keep their per-op paths (VPU/state words); their
+    units fuse only the FF half.
+
+    On the reference backend this replays ``_unit_decode`` with the
+    dispatch seam inlined (plain bf16 ``@`` == ``_reference_dot``), so
+    the fused path is bit-identical per request to the per-op matvec
+    loop — the parity oracle the megakernel is validated against.
+    """
+    if sh.backend == "pallas":
+        return _unit_decode_fused_pallas(cfg, x, uparams, unit, sh, cache, pos)
+    h = apply_norm(cfg, x, uparams.get("norm1"))
+    new_cache = dict(cache)
+    if unit.mixer == "attn":
+        a = cfg.attention
+        qkv = h @ uparams["attn"]["qkv"].astype(h.dtype)
+        q, k, v = split_qkv(a, qkv, uparams["attn"].get("qkv_bias"))
+        posb = pos[:, None]
+        B = h.shape[0]
+        K_, G, hd = q.shape[2:]
+        q = apply_rope(q.reshape(B, 1, K_ * G, hd), posb,
+                       a.rope_theta).reshape(B, 1, K_, G, hd)
+        k = apply_rope(k, posb, a.rope_theta)
+        c = update_cache(cache["attn"], k[:, 0], v[:, 0], pos)
+        out = decode_attend(q[:, 0], c["k"], c["v"], c["pos"], pos,
+                            window=a.window)
+        out = out.reshape(B, 1, -1)
+        mix = out @ uparams["attn"]["o"].astype(out.dtype)
+        new_cache["attn"] = c
+    elif unit.mixer == "rwkv6":
+        mix, st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh, cache["rwkv"])
+        new_cache["rwkv"] = st
+    else:
+        mix, st = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh, cache["mamba"])
+        new_cache["mamba"] = st
+    x = x + mix
+    h2 = apply_norm(cfg, x, uparams.get("norm2"))
+    if unit.ffn == "moe":
+        y, _ = moe_block(cfg, h2, uparams["moe"], sh)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            y = y + _mlp_fused_ref(cfg, h2, uparams["ffn"]["ffn_in"],
+                                   uparams["ffn"]["ffn_out"])
+    else:
+        y = _mlp_fused_ref(cfg, h2, uparams["ffn"]["ffn_in"],
+                           uparams["ffn"]["ffn_out"])
+    return x + y, new_cache
+
+
+def _fused_norm_args(cfg: ModelConfig, uparams: dict, key: str):
+    """(norm params, kernel norm kind) — nonparametric_ln is a layernorm
+    with no affine operands."""
+    if cfg.norm == "nonparametric_ln":
+        return None, "layernorm"
+    return uparams.get(key), cfg.norm
+
+
+def _unit_decode_fused_pallas(cfg: ModelConfig, x, uparams: dict,
+                              unit: UnitDesc, sh: Sharder, cache: dict,
+                              pos: jax.Array):
+    """Lower the unit onto the decode_fused megakernel (pallas backend)."""
+    new_cache = dict(cache)
+    n1, nk = _fused_norm_args(cfg, uparams, "norm1")
+    n2, _ = _fused_norm_args(cfg, uparams, "norm2")
+    dense = unit.ffn == "dense"
+    if unit.mixer == "attn":
+        a = cfg.attention
+        y2, c = pe_fused_attn_unit(
+            x[:, 0], cache["attn"], pos,
+            norm1=n1, qkv_w=uparams["attn"]["qkv"],
+            qkv_bias=uparams["attn"].get("qkv_bias"),
+            o_w=uparams["attn"]["o"],
+            norm2=n2 if dense else None,
+            w_in=uparams["ffn"]["ffn_in"] if dense else None,
+            w_out=uparams["ffn"]["ffn_out"] if dense else None,
+            heads=a.n_heads, kv_heads=a.n_kv_heads, head_dim=a.head_dim,
+            rope_theta=a.rope_theta, window=a.window,
+            norm_kind=nk, act=cfg.act, with_ffn=dense,
+            word=sh.word("attn_qkv"), interpret=sh.interpret)
+        new_cache["attn"] = c
+        if dense:
+            return y2[:, None], new_cache
+        x = y2[:, None]
+    else:
+        # SSM recurrence: a VPU/state word — stays on its per-op path
+        h = apply_norm(cfg, x, uparams.get("norm1"))
+        if unit.mixer == "rwkv6":
+            mix, st = ssm_mod.rwkv_block(cfg, h, uparams["rwkv"], sh,
+                                         cache["rwkv"])
+            new_cache["rwkv"] = st
+        else:
+            mix, st = ssm_mod.mamba_block(cfg, h, uparams["mamba"], sh,
+                                          cache["mamba"])
+            new_cache["mamba"] = st
+        x = x + mix
+    if unit.ffn == "moe":
+        h2 = apply_norm(cfg, x, uparams.get("norm2"))
+        y, _ = moe_block(cfg, h2, uparams["moe"], sh)
+        if cfg.moe is not None and cfg.moe.dense_residual:
+            y = y + mlp(cfg, h2, uparams["ffn"]["ffn_in"],
+                        uparams["ffn"]["ffn_out"], sh)
+        return x + y, new_cache
+    y2 = pe_fused_ffn(
+        x[:, 0], norm2=n2, w_in=uparams["ffn"]["ffn_in"],
+        w_out=uparams["ffn"]["ffn_out"], norm_kind=nk, act=cfg.act,
+        word=sh.word("ffn_in"), interpret=sh.interpret)
+    return y2[:, None], new_cache
+
+
 def _unit_chunk(cfg: ModelConfig, x, uparams: dict, unit: UnitDesc,
                 sh: Sharder, cache: dict, pos: jax.Array):
     """Chunked-prefill unit step.  x: (B, T, d); pos: (B, T) absolute.
@@ -493,17 +626,23 @@ def chunk_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 cache: dict, pos: jax.Array, sh: Sharder,
-                *, compute_dtype=jnp.bfloat16):
-    """One serve step.  tokens: (B, 1); pos: (B,).  Returns (logits, cache)."""
+                *, compute_dtype=jnp.bfloat16, fused: bool = False):
+    """One serve step.  tokens: (B, 1); pos: (B,).  Returns (logits, cache).
+
+    fused=True routes each unit through the fused-decode path (one
+    dispatch per layer — the decode_fused megakernel on the pallas
+    backend, its bit-parity inline composition on reference).
+    """
     pattern = layer_pattern(cfg)
+    unit_fn = _unit_decode_fused if fused else _unit_decode
     x = embed(tokens, params["embed"]["table"], sh).astype(compute_dtype)
 
     def group_step(x, scanned):
         gparams, gcache = scanned
         new_c = {}
         for i, u in enumerate(pattern):
-            x, c = _unit_decode(cfg, x, gparams[f"u{i}"], u, sh,
-                                gcache[f"u{i}"], pos)
+            x, c = unit_fn(cfg, x, gparams[f"u{i}"], u, sh,
+                           gcache[f"u{i}"], pos)
             new_c[f"u{i}"] = c
         return x, new_c
 

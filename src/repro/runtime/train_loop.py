@@ -275,6 +275,49 @@ def make_decode_step(cfg: ModelConfig, program: Program, mesh=None,
     return decode
 
 
+def make_fused_decode_step(cfg: ModelConfig, program: Program, mesh=None,
+                           kernel_backend: str = "reference"):
+    """One-token serve step with each layer fused into ONE dispatch.
+
+    The program's ``decode_fused`` words (compile_program(fused_decode=
+    True)) lower whole units onto the kernels/decode_fused.py megakernel
+    on the pallas backend; on reference the fused composition replays the
+    per-op primitive sequence bit-identically (the parity oracle)."""
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "fused decode targets decoder-only families")
+    policy = program.policy
+    sh = PEContext(mesh, program,
+                   backend=kernel_backend).with_phase(Phase.DECODE)
+
+    def decode(params, cache, tokens, pos):
+        return tfm.decode_step(cfg, params, tokens, cache, pos, sh,
+                               compute_dtype=policy.ff_dtype, fused=True)
+
+    return decode
+
+
+def make_draft_step(cfg: ModelConfig, program: Program, mesh=None,
+                    kernel_backend: str = "reference"):
+    """The DRAFT program word: the speculative draft model's width-1 step.
+
+    Identical flow to DECODE (bandwidth matvec) but issued under
+    Phase.DRAFT so a speculative program can map the draft model's ops
+    independently of the big model's decode words."""
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "speculative decoding targets decoder-only families")
+    policy = program.policy
+    sh = PEContext(mesh, program,
+                   backend=kernel_backend).with_phase(Phase.DRAFT)
+
+    def draft(params, cache, tokens, pos):
+        return tfm.decode_step(cfg, params, tokens, cache, pos, sh,
+                               compute_dtype=policy.ff_dtype)
+
+    return draft
+
+
 def make_chunk_step(cfg: ModelConfig, program: Program, mesh=None,
                     kernel_backend: str = "reference"):
     """Multi-token cache step under the PREFILL program word.

@@ -15,16 +15,23 @@ matvec).  This package schedules both onto one fixed cache arena:
 - :mod:`engine` — the array work: one jitted masked decode over the
   whole arena per step plus per-slot prefill chunk steps, both routed
   through ``PEContext`` under the PREFILL/DECODE program words.
-- :mod:`trace` — synthetic Poisson request traces for examples and the
-  throughput benchmark.
+- :mod:`trace` — synthetic request traces (Poisson and bursty arrivals)
+  for examples and the throughput benchmark.
+
+Two opt-in fast paths (PR 6): ``build_engine(fused_decode=True)`` runs
+the per-layer decode megakernel words, ``build_engine(speculative=k)``
+runs the draft/verify loop under the DRAFT phase — both bit-identical
+per request to the per-op, non-speculative loop on the reference
+backend.
 """
 from repro.serving.engine import (ServingEngine, TokenEvent, build_engine,
-                                  latency_stats)
+                                  draft_config_for, latency_stats)
 from repro.serving.scheduler import Request, RequestState, Scheduler
 from repro.serving.slots import (SlotPool, plan_cache_arena, reset_slots,
                                  slot_bytes)
-from repro.serving.trace import poisson_trace
+from repro.serving.trace import bursty_trace, poisson_trace
 
-__all__ = ["ServingEngine", "TokenEvent", "build_engine", "latency_stats",
-           "Request", "RequestState", "Scheduler", "SlotPool",
-           "plan_cache_arena", "slot_bytes", "reset_slots", "poisson_trace"]
+__all__ = ["ServingEngine", "TokenEvent", "build_engine", "draft_config_for",
+           "latency_stats", "Request", "RequestState", "Scheduler",
+           "SlotPool", "plan_cache_arena", "slot_bytes", "reset_slots",
+           "poisson_trace", "bursty_trace"]

@@ -16,6 +16,21 @@ serving program words (core/phases.py):
 Both are bit-identical, per request, to the single-shot teacher-forced
 decode loop on the reference backend (tests/test_serving.py) — the
 engine changes *scheduling*, never *math*.
+
+Two opt-in fast paths preserve that contract:
+
+- fused decode (``build_engine(fused_decode=True)``): the program's
+  DECODE words select the per-layer megakernel (kernels/decode_fused.py)
+  and ``_decode`` runs one dispatch per LAYER instead of one per op.
+  Masked-arena semantics are unchanged — inactive rows still compute
+  garbage that ``jnp.where`` discards.
+- speculative decoding (``build_engine(speculative=k)``): a small draft
+  model proposes k-1 tokens under the DRAFT program word, the big model
+  verifies all k feeds in ONE PREFILL-shaped chunk (``make_chunk_step``
+  — PR 2's chunk≡sequential invariant makes it a verifier for free), and
+  the accepted prefix is replayed into the slot arena.  Greedy argmax +
+  that invariant make the committed tokens bit-identical to the
+  non-speculative loop; acceptance only changes how many steps it takes.
 """
 from __future__ import annotations
 
@@ -30,7 +45,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.program import Program
 from repro.runtime import train_loop as tl
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import DECODE, Request, Scheduler
 from repro.serving.slots import SlotPool, plan_cache_arena, reset_slots
 
 
@@ -57,7 +72,9 @@ class ServingEngine:
                  *, n_slots: int, max_len: int, prefill_chunk: int = 32,
                  kernel_backend: str = "reference", mesh=None,
                  max_prefill_chunks_per_step: int = 1,
-                 evict_patience: Optional[int] = None):
+                 evict_patience: Optional[int] = None,
+                 speculative: int = 0, draft_cfg: Optional[ModelConfig] = None,
+                 draft_program: Optional[Program] = None, draft_params=None):
         if cfg.family == "audio":
             raise NotImplementedError(
                 "the serving engine targets decoder-only families; audio "
@@ -93,8 +110,10 @@ class ServingEngine:
         self.step_count = 0
         self.events: list = []
 
-        decode_fn = tl.make_decode_step(cfg, program, mesh,
-                                        kernel_backend=kernel_backend)
+        make_decode = tl.make_fused_decode_step if program.fused_decode \
+            else tl.make_decode_step
+        decode_fn = make_decode(cfg, program, mesh,
+                                kernel_backend=kernel_backend)
         chunk_fn = tl.make_chunk_step(cfg, program, mesh,
                                       kernel_backend=kernel_backend)
 
@@ -124,6 +143,56 @@ class ServingEngine:
             lambda cache, slot: reset_slots(cache, jnp.reshape(slot, (1,))),
             donate_argnums=(0,))
 
+        # --- speculative machinery (opt-in) ---
+        self.speculative = int(speculative)
+        self.spec_stats = {"verifies": 0, "accepted": 0}
+        if self.speculative:
+            if draft_program is None or draft_cfg is None \
+                    or draft_params is None:
+                raise ValueError(
+                    "speculative>0 needs a draft (cfg, program, params) — "
+                    "build_engine(speculative=k) assembles one")
+            self.draft_cfg = draft_cfg
+            self.draft_params = draft_params
+            self.draft_cache = tl.model_module(draft_cfg).init_cache(
+                draft_cfg, n_slots, max_len)
+            self._draft_pos: dict = {}   # rid -> seq tokens in draft cache
+            draft_fn = tl.make_draft_step(draft_cfg, draft_program, mesh,
+                                          kernel_backend=kernel_backend)
+
+            def _draft(params, cache, tok, pos, active):
+                logits, new_cache = draft_fn(params, cache, tok, pos)
+                new_cache = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        active.reshape((1, n_slots) + (1,) * (new.ndim - 2)),
+                        new, old),
+                    new_cache, cache)
+                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
+                        new_cache)
+
+            def _verify(params, cache, tokens, pos0, slot):
+                # PREFILL-shaped chunk over the request's arena row; the
+                # cache writes are DISCARDED (no donation) — acceptance
+                # decides what gets replayed into the arena
+                row = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, slot, 1, axis=1),
+                    cache)
+                logits, _ = chunk_fn(params, row, tokens, pos0)
+                return jnp.argmax(logits[0], -1).astype(jnp.int32)
+
+            self._draft = jax.jit(_draft, donate_argnums=(1,))
+            self._verify = jax.jit(_verify)
+            self._row_get = jax.jit(
+                lambda cache, slot: jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, slot, 1, axis=1), cache))
+            self._row_put = jax.jit(
+                lambda cache, row, slot: jax.tree.map(
+                    lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                        a, r, slot, axis=1), cache, row),
+                donate_argnums=(0,))
+
     # --- request intake ----------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -148,6 +217,10 @@ class ServingEngine:
         self.sched.plan_evictions(step)
         for st in self.sched.admit(step):
             self.cache = self._reset(self.cache, jnp.int32(st.slot))
+            if self.speculative:
+                self.draft_cache = self._reset(self.draft_cache,
+                                               jnp.int32(st.slot))
+                self._draft_pos[st.req.rid] = 0
 
         # chunked prefill: bounded work per step, interleaved with decode
         chunked = self.sched.chunk_candidates()
@@ -166,6 +239,12 @@ class ServingEngine:
         # feed their last generated token, sub-chunk PREFILL tails are
         # teacher-forced (continuous batching: one iteration, all phases)
         rows = self.sched.decode_rows(chunked)
+        spec_rows: list = []
+        if self.speculative:
+            # DECODE-phase rows take the draft/verify path; PREFILL tails
+            # stay teacher-forced on the masked decode (nothing to draft)
+            spec_rows = [s for s in rows if s.phase == DECODE]
+            rows = [s for s in rows if s.phase != DECODE]
         if rows:
             tok = np.zeros((self.n_slots, 1), np.int32)
             pos = np.zeros((self.n_slots,), np.int32)
@@ -183,8 +262,94 @@ class ServingEngine:
                 if appended:
                     new_events.append(self._event(st, step))
 
+        for st in spec_rows:
+            new_events.extend(self._spec_round(st, step))
+
         self.events.extend(new_events)
         return new_events
+
+    # --- speculative round --------------------------------------------------
+
+    def _draft_step_one(self, tok: int, pos: int, slot: int) -> int:
+        """One masked width-1 DRAFT step for a single arena row."""
+        tokv = np.zeros((self.n_slots, 1), np.int32)
+        posv = np.zeros((self.n_slots,), np.int32)
+        act = np.zeros((self.n_slots,), bool)
+        tokv[slot, 0] = tok
+        posv[slot] = pos
+        act[slot] = True
+        nxt, self.draft_cache = self._draft(
+            self.draft_params, self.draft_cache, jnp.asarray(tokv),
+            jnp.asarray(posv), jnp.asarray(act))
+        return int(np.asarray(nxt)[slot])
+
+    def _spec_round(self, st, step: int) -> list:
+        """Draft k-1 proposals, verify all k feeds in one chunk, commit
+        the accepted prefix.
+
+        Greedy + the chunk≡sequential invariant make every committed
+        token bit-identical to the non-speculative loop: chunk logits at
+        position i depend only on feeds <= i, and a proposal is only
+        accepted when it equals the big model's own argmax at that
+        position — so the accepted feeds ARE the sequential feeds.
+        Rollback is by construction: verify never writes the arena
+        (cache writes discarded), the accepted feeds are replayed as one
+        teacher-forced chunk; the draft row is snapshot/restored and
+        caught up from the true sequence next round (SSM draft states
+        cannot be partially rolled back, so the draft never keeps
+        speculative state).
+        """
+        k = self.speculative
+        rid, slot, p = st.req.rid, st.slot, st.pos
+        seq = st.seq
+        feed = seq[p]                    # remaining == 1 in DECODE phase
+
+        # draft catch-up: teacher-force the suffix the draft hasn't seen
+        for q in range(self._draft_pos.get(rid, 0), p):
+            self._draft_step_one(seq[q], q, slot)
+        self._draft_pos[rid] = p
+        snap = self._row_get(self.draft_cache, jnp.int32(slot))
+
+        # k-1 greedy proposals under the DRAFT word
+        props: list = []
+        cur = feed
+        for i in range(k - 1):
+            cur = self._draft_step_one(cur, p + i, slot)
+            props.append(cur)
+
+        # one PREFILL-shaped verify chunk over [feed, d1..d_{k-1}]
+        toks = np.asarray([feed] + props, np.int32)[None]
+        vt = [int(t) for t in np.asarray(self._verify(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray([p], jnp.int32), jnp.int32(slot)))]
+
+        # accepted prefix: proposal i survives iff it IS the big model's
+        # argmax at its position; position 0 (teacher-forced) always lands
+        a = 0
+        while a < len(props) and props[a] == vt[a]:
+            a += 1
+        commit = vt[:a + 1][:st.req.max_new_tokens - len(st.generated)]
+
+        # replay the accepted feeds into the arena (the committed write)
+        replay = ([feed] + commit[:-1])[:len(commit)]
+        _, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(
+                np.asarray(replay, np.int32)[None]),
+            jnp.asarray([p], jnp.int32), jnp.int32(slot))
+
+        # restore the draft row: proposals were speculative state
+        self.draft_cache = self._row_put(self.draft_cache, snap,
+                                         jnp.int32(slot))
+
+        appended, fin = self.sched.consume_spec(st, commit)
+        self.spec_stats["verifies"] += 1
+        self.spec_stats["accepted"] += appended
+        if fin:
+            self._draft_pos.pop(rid, None)
+        base = len(st.generated) - appended
+        return [TokenEvent(rid=rid, token=st.generated[base + j],
+                           index=base + j, step=step, t=time.monotonic())
+                for j in range(appended)]
 
     def _event(self, st, step: int) -> TokenEvent:
         return TokenEvent(rid=st.req.rid, token=st.generated[-1],
@@ -217,11 +382,29 @@ class ServingEngine:
         return len(self.sched.active)
 
 
+def draft_config_for(cfg: ModelConfig) -> ModelConfig:
+    """The default speculative draft: one scan group of the big model.
+
+    Shares the big model's token space and layer-pattern period (the two
+    things the speculative loop actually requires) while dropping every
+    repeated group — the smallest config the stack can run unchanged.
+    """
+    import dataclasses
+
+    from repro.models.transformer import layer_pattern
+    period = len(layer_pattern(cfg))
+    return dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               n_layers=period)
+
+
 def build_engine(cfg: ModelConfig, *, n_slots: Optional[int] = None,
                  max_len: int,
                  prefill_chunk: int = 32, kernel_backend: str = "reference",
                  mesh=None, mesh_spec=None, seed: int = 0,
                  hbm_budget: Optional[float] = None,
+                 fused_decode: bool = False, speculative: int = 0,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_seed: Optional[int] = None,
                  **engine_kwargs) -> ServingEngine:
     """One-stop constructor: compile the serve-kind program, init bf16
     params, build the engine — the shared setup of the serve CLI, the
@@ -233,6 +416,14 @@ def build_engine(cfg: ModelConfig, *, n_slots: Optional[int] = None,
     n_slots=None sizes the arena from ``hbm_budget`` via the memory
     allocator (``serving.slots.plan_cache_arena``), reserving the bf16
     parameter bytes the engine also holds.
+
+    fused_decode=True compiles the program with the ``decode_fused``
+    megakernel words; speculative=k enables the draft/verify loop with a
+    k-token speculation window (``draft_cfg`` defaults to one scan group
+    of `cfg` — see :func:`draft_config_for` — with its own seed+1 init;
+    ``draft_seed`` overrides that, and draft_cfg=cfg with
+    draft_seed=seed makes the draft the big model itself: the
+    full-acceptance oracle the benchmark gates accepted-per-verify on).
     """
     from repro.configs.base import ShapeConfig
     from repro.core.dataflow import MeshSpec
@@ -247,10 +438,25 @@ def build_engine(cfg: ModelConfig, *, n_slots: Optional[int] = None,
             reserve_bytes=2.0 * cfg.param_count())
     shape = ShapeConfig("serve", seq_len=max_len, global_batch=n_slots,
                         kind="decode")
-    program = compile_program(cfg, shape, mesh_spec)
+    program = compile_program(cfg, shape, mesh_spec,
+                              fused_decode=fused_decode,
+                              speculative=bool(speculative))
     params = tl.cast_params(
         tl.model_module(cfg).init(jax.random.PRNGKey(seed), cfg),
         jnp.bfloat16)
+    if speculative:
+        draft_cfg = draft_cfg or draft_config_for(cfg)
+        draft_shape = ShapeConfig("serve-draft", seq_len=max_len,
+                                  global_batch=n_slots, kind="decode")
+        engine_kwargs.update(
+            speculative=speculative, draft_cfg=draft_cfg,
+            draft_program=compile_program(draft_cfg, draft_shape, mesh_spec,
+                                          speculative=True),
+            draft_params=tl.cast_params(
+                tl.model_module(draft_cfg).init(
+                    jax.random.PRNGKey(seed + 1 if draft_seed is None
+                                       else draft_seed), draft_cfg),
+                jnp.bfloat16))
     return ServingEngine(cfg, program, params, n_slots=n_slots,
                          max_len=max_len, prefill_chunk=prefill_chunk,
                          kernel_backend=kernel_backend, mesh=mesh,

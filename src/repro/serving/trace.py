@@ -36,3 +36,43 @@ def poisson_trace(n_requests: int, *, vocab_size: int,
         reqs.append(Request(rid=f"req-{i:04d}", prompt=tuple(int(x) for x in prompt),
                             max_new_tokens=gen_tokens, arrival_step=int(t)))
     return reqs
+
+
+def bursty_trace(n_requests: int, *, vocab_size: int,
+                 prompt_lens: tuple = (16, 512), gen_tokens: int = 32,
+                 burst_size: int = 4, burst_gap_steps: int = 16,
+                 seed: int = 0) -> list:
+    """Bursty arrivals: whole bursts land on ONE step, then silence.
+
+    Production traffic is not Poisson — retries, fan-out callers and
+    batch jobs synchronise, so requests arrive in clumps that oversubscribe
+    the slot arena all at once and then leave it idle.  Every
+    ``burst_gap_steps`` (jittered ±25% per burst) a burst of
+    ``burst_size`` requests (last burst truncated) arrives on the same
+    step: the overload row of the throughput benchmark, and the trace
+    that actually exercises queueing + eviction.
+
+    Same prompt-length band and determinism contract as
+    :func:`poisson_trace`.
+    """
+    lo, hi = prompt_lens
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad prompt_lens {prompt_lens}")
+    if burst_size < 1 or burst_gap_steps < 1:
+        raise ValueError(f"bad burst shape ({burst_size}, {burst_gap_steps})")
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0
+    i = 0
+    while i < n_requests:
+        for _ in range(min(burst_size, n_requests - i)):
+            plen = int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
+            plen = max(lo, min(hi, plen))
+            prompt = rng.integers(0, vocab_size, size=plen)
+            reqs.append(Request(rid=f"req-{i:04d}",
+                                prompt=tuple(int(x) for x in prompt),
+                                max_new_tokens=gen_tokens, arrival_step=t))
+            i += 1
+        t += max(1, int(round(burst_gap_steps
+                              * rng.uniform(0.75, 1.25))))
+    return reqs

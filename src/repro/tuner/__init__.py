@@ -17,17 +17,21 @@ CLI: ``python -m repro.launch.tune`` — see docs/PROGRAMMING_MODEL.md §6.
 """
 from repro.tuner.cache import (DEFAULT_CACHE_PATH, TuningCache, cache_key,
                                mesh_tag)
-from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
+from repro.tuner.cost import (DEFAULT_TILE, DISPATCH_S, GemmShape, TileCost,
                               candidate_tiles, conv_im2col_gemm,
-                              gemm_for_phase, tile_cost)
-from repro.tuner.search import (OpTuning, ProgramTuning, TunedGemm,
-                                default_tile_for, speedup_model, tune_gemm,
-                                tune_op, tune_program)
+                              fused_decode_cost, gemm_for_phase,
+                              per_op_decode_cost, tile_cost)
+from repro.tuner.search import (FUSED_DECODE_OPS, OpTuning, ProgramTuning,
+                                TunedGemm, default_tile_for, speedup_model,
+                                tune_fused_decode, tune_gemm, tune_op,
+                                tune_program)
 
 __all__ = [
     "DEFAULT_CACHE_PATH", "TuningCache", "cache_key", "mesh_tag",
-    "DEFAULT_TILE", "GemmShape", "TileCost", "candidate_tiles",
-    "conv_im2col_gemm", "gemm_for_phase", "tile_cost",
-    "OpTuning", "ProgramTuning", "TunedGemm", "default_tile_for",
-    "speedup_model", "tune_gemm", "tune_op", "tune_program",
+    "DEFAULT_TILE", "DISPATCH_S", "GemmShape", "TileCost", "candidate_tiles",
+    "conv_im2col_gemm", "fused_decode_cost", "gemm_for_phase",
+    "per_op_decode_cost", "tile_cost",
+    "FUSED_DECODE_OPS", "OpTuning", "ProgramTuning", "TunedGemm",
+    "default_tile_for", "speedup_model", "tune_fused_decode", "tune_gemm",
+    "tune_op", "tune_program",
 ]

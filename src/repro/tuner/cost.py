@@ -39,6 +39,10 @@ SUBLANE, LANE = 16, 128
 # Fixed per-grid-step cost (dispatch + pipeline bubble): dominates when a
 # tiling shatters the nest into thousands of tiny steps.
 GRID_STEP_S = 2e-7
+# Fixed per-KERNEL-LAUNCH cost (host dispatch + program-word issue): the
+# overhead the fused decode megakernel amortises — the per-op DECODE path
+# pays it once per weight matmul, the fused path once per LAYER.
+DISPATCH_S = 2e-6
 
 DEFAULT_TILE = (256, 256, 512)
 
@@ -207,7 +211,9 @@ def gemm_for_phase(op: OpSpec, phase: Phase, *, tokens: float,
     if strategy == Strategy.REPLICATE and seq_shardable and tp > 1:
         t = tokens / tp
     t = max(1, int(round(t)))
-    if phase in (Phase.FF, Phase.PREFILL, Phase.DECODE):
+    if phase in (Phase.FF, Phase.PREFILL, Phase.DECODE, Phase.DRAFT):
+        # DRAFT is the draft model's DECODE: same bandwidth-bound matvec
+        # shape, priced identically (only the op table differs)
         return GemmShape(m=t, n=nw, k=kw)
     if phase == Phase.BP:
         # dX = dY @ W^T — counter-swept read, contraction over N.
@@ -216,6 +222,38 @@ def gemm_for_phase(op: OpSpec, phase: Phase, *, tokens: float,
         # dW = X^T dY — outer_accum's (i, j, l) = (K, N, tokens) nest.
         return GemmShape(m=kw, n=nw, k=t, rbits=sr_update)
     return None
+
+
+def fused_decode_cost(shapes, tile: tuple) -> float:
+    """Seconds for ONE fused-decode megakernel launch over a layer's gemms.
+
+    The fused kernel runs the layer's decode matmuls back-to-back in a
+    single launch with a shared LoopNest tile, keeping the (rows, d)
+    intermediates resident in VMEM — so vs the per-op path it saves
+    (a) all but one DISPATCH_S, and (b) the HBM round-trip of every
+    intermediate activation (subtracted from each gemm's traffic; weights
+    still stream once, the bandwidth floor decode actually sits on).
+    Infeasible tiles (VMEM) price as inf, mirroring ``tile_cost``.
+    """
+    t = DISPATCH_S
+    for s in shapes:
+        c = tile_cost(s, tile)
+        if not c.feasible:
+            return math.inf
+        act = float(s.m * s.n * s.out_bytes)
+        t += (max(c.flops_padded / PEAK_FLOPS_BF16,
+                  max(0.0, c.hbm_bytes - act) / HBM_BW)
+              + c.grid_steps * GRID_STEP_S)
+    return t
+
+
+def per_op_decode_cost(shapes, tiles=None) -> float:
+    """Seconds for the same gemms on the per-op matvec path: one launch
+    (DISPATCH_S) per op, activations round-tripping HBM between ops."""
+    if tiles is None:
+        tiles = [DEFAULT_TILE] * len(shapes)
+    return sum(DISPATCH_S + tile_cost(s, t).time_s
+               for s, t in zip(shapes, tiles))
 
 
 def conv_im2col_gemm(*, batch: int, out_hw: int, kernel: int, in_ch: int,

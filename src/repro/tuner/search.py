@@ -27,13 +27,19 @@ from repro.core.dataflow import (ICI_BW, MeshSpec, OpSpec, Strategy,
 from repro.core.phases import Phase
 from repro.tuner.cache import TuningCache, mesh_tag
 from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
-                              candidate_tiles, gemm_for_phase, tile_cost)
+                              candidate_tiles, fused_decode_cost,
+                              gemm_for_phase, per_op_decode_cost, tile_cost)
 
 PHASES_FOR_KIND = {
     "train": (Phase.FF, Phase.BP, Phase.UP),
     "prefill": (Phase.PREFILL,),
     "decode": (Phase.PREFILL, Phase.DECODE),
 }
+
+# The ops the decode_fused megakernel executes in one launch (the
+# attention unit's MAC-array matmuls); SSM mixer projections and MoE
+# experts keep per-op words even under a fused program.
+FUSED_DECODE_OPS = ("attn_qkv", "attn_o", "ffn_in", "ffn_out")
 
 
 @dataclass(frozen=True)
@@ -104,6 +110,7 @@ class ProgramTuning:
     kind: str
     backend: str
     ops: dict = field(default_factory=dict)          # name -> OpTuning
+    fused_decode: Optional[dict] = None              # tune_fused_decode result
 
     def as_overrides(self) -> dict:
         return {name: t.strategy for name, t in self.ops.items()}
@@ -112,12 +119,17 @@ class ProgramTuning:
         return {name: dict(t.tiles) for name, t in self.ops.items()}
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "mesh": mesh_tag(self.mesh),
             "kind": self.kind,
             "backend": self.backend,
             "ops": {k: v.to_dict() for k, v in self.ops.items()},
         }
+        if self.fused_decode is not None:
+            fd = dict(self.fused_decode)
+            fd["tile"] = list(fd["tile"])
+            d["fused_decode"] = fd
+        return d
 
     def describe(self) -> str:
         rows = []
@@ -215,13 +227,47 @@ def tune_op(op: OpSpec, mesh: MeshSpec, *, kind: str,
     return best
 
 
+def tune_fused_decode(ops: list, *, tokens: float,
+                      extra_tiles: tuple = ()) -> Optional[dict]:
+    """Search the decode megakernel's SHARED LoopNest tile.
+
+    The fused launch runs the layer's attention-unit gemms back-to-back
+    with one (tm, tn, tk) nest, so the search scores each candidate tile
+    against ALL of them at once (``cost.fused_decode_cost``) instead of
+    per-gemm.  Returns {"tile", "fused_s", "per_op_s", "pred_speedup",
+    "ops"} or None when the model has no fused-unit op (pure-SSM decode
+    paths keep per-op words).
+    """
+    fused = [op for op in ops if op.name in FUSED_DECODE_OPS]
+    if not fused:
+        return None
+    shapes = [gemm_for_phase(op, Phase.DECODE, tokens=tokens)
+              for op in fused]
+    cands: set = set()
+    for s in shapes:
+        cands.update(candidate_tiles(s, extra=extra_tiles))
+    best_s, best_t = min((fused_decode_cost(shapes, t), t)
+                         for t in sorted(cands))
+    per_op = per_op_decode_cost(shapes)
+    return {"tile": best_t, "fused_s": best_s, "per_op_s": per_op,
+            "pred_speedup": per_op / best_s if best_s > 0
+            and math.isfinite(best_s) else 0.0,
+            "ops": [op.name for op in fused]}
+
+
 def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
                  seq_len: int, kind: str, backend: str = "pallas",
                  sr_update: bool = True, cache: Optional[TuningCache] = None,
                  measure: Optional[Callable] = None, top_k: int = 3,
-                 microbatch: int = 1) -> ProgramTuning:
+                 microbatch: int = 1,
+                 fused_decode: bool = False) -> ProgramTuning:
     """Tune every MAC-array op of a model; mirrors plan_model's shape math
-    so comm estimates line up with the plan the program will compile."""
+    so comm estimates line up with the plan the program will compile.
+
+    fused_decode=True (decode kind) additionally searches the megakernel's
+    shared tile and overwrites the fused ops' DECODE tiling with the
+    winner — so ``as_tilings()`` -> ``compile_program(tuning=...)`` ->
+    ``PEWord.tiling`` lands it in the kernel's BlockSpecs."""
     tokens, _ = step_tokens_per_shard(mesh, global_batch=global_batch,
                                       seq_len=seq_len, kind=kind)
     seq_shardable = kind != "decode" and _divisible(seq_len, mesh.tp)
@@ -251,6 +297,14 @@ def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
                 seq_shardable=seq_shardable, backend=backend,
                 sr_update=sr_update, cache=cache, measure=measure,
                 top_k=top_k, microbatch=microbatch)
+    if fused_decode and kind == "decode":
+        fd = tune_fused_decode(ops, tokens=tokens)
+        if fd is not None:
+            out.fused_decode = fd
+            for name in fd["ops"]:
+                ot = out.ops.get(name)
+                if ot is not None:
+                    ot.tiles[Phase.DECODE] = tuple(fd["tile"])
     return out
 
 
