@@ -1,7 +1,7 @@
-"""CI perf gate: run the benchmark harness, record BENCH_6.json, compare
+"""CI perf gate: run the benchmark harness, record BENCH_7.json, compare
 against the committed baseline.
 
-    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_6.json]
+    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_7.json]
         [--baseline benchmarks/baseline.json] [--update]
 
 Runs ``benchmarks.run`` (the smoke-sized figure/table suites) and
@@ -31,13 +31,16 @@ DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
 # autotuner's predicted speedup/bytes, the pipeline partitioner's
 # predicted bubble/imbalance/speedup, the memory planner's planned
-# peak/fragmentation, and the serving rows' cost-modeled tokens/s,
-# p99 inter-token latency, and speculative accepted-per-verify
+# peak/fragmentation, the serving rows' cost-modeled tokens/s,
+# p99 inter-token latency, and speculative accepted-per-verify, and the
+# topology planner's hop-class byte split + comm ratio
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
               "pred_imbalance", "pred_peak_mb", "pred_frag",
-              "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify")
+              "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify",
+              "pred_inter_module_bytes", "pred_comm_ratio")
 # metrics where bigger is worse (gate direction "lower")
-LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99")
+LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99",
+                   "inter_module")
 
 
 def _parse_rows(text: str) -> dict:
@@ -86,7 +89,7 @@ def collect(suites: str) -> tuple:
         # autotune runs as its own subprocess below (the CI contract is
         # `run.py` + `autotune_gemm --smoke`); don't execute it twice
         suites = ("table1,fig10,fig13,fig16,table6,fig17,serve,pipeline,"
-                  "memory_plan")
+                  "memory_plan,topology")
     rc, out = _run([sys.executable, "-m", "benchmarks.run",
                     "--only", suites])
     ok &= rc == 0
@@ -141,7 +144,7 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_6.json")
+    ap.add_argument("--out", default="BENCH_7.json")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--suites", default=DEFAULT_SUITES,
                     help="benchmarks.run --only value")

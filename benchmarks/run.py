@@ -16,13 +16,14 @@ def main() -> None:
     from benchmarks import (autotune_gemm, fig10_precision, fig13_alexnet,
                             fig16_suite, fig17_scaling, memory_plan,
                             pipeline_scaling, serve_throughput, table1_mac,
-                            table6_efficiency)
+                            table6_efficiency, topology_scaling)
     suites = {
         "table1": table1_mac, "fig10": fig10_precision,
         "fig13": fig13_alexnet, "fig16": fig16_suite,
         "table6": table6_efficiency, "fig17": fig17_scaling,
         "serve": serve_throughput, "autotune": autotune_gemm,
         "pipeline": pipeline_scaling, "memory_plan": memory_plan,
+        "topology": topology_scaling,
     }
     chosen = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

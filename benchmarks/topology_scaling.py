@@ -1,0 +1,103 @@
+"""Topology scaling: hop-class comm bytes + module placement, predicted.
+
+All rows are DETERMINISTIC planner outputs (no wall clock), so gate.py
+gates them bit-stable across machines:
+
+  topology/pred_<arch>_m<M>  — plan the FULL config on an M-module cloud
+      (ZeRO-3 forced wide by a tight HBM budget, so gradient/weight
+      collectives really cross modules): intra-/inter-module comm MB per
+      step from the hop-class split, pred_comm_ratio (inter / total — the
+      fraction of bytes on the slow network), and the topology-priced
+      comm time vs a flat-bandwidth model.
+  topology/place_<arch>_s<S>m<M>  — the stage-placement pass: inter-
+      module MB per step crossing module boundaries under the greedy
+      placement vs contiguous round-robin, and the bytes it saved.
+
+    PYTHONPATH=src python -m benchmarks.topology_scaling [--smoke]
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+
+PRED_ARCH = "qwen2-0.5b"
+PRED_MODULES = (2, 4, 8)
+PLACE_STAGES = ((4, 2), (8, 4))
+# inter-module link at 1/8 the intra-module bandwidth (NeuroTrainer's
+# inter-module network vs in-module vault bandwidth asymmetry)
+INTER_BW_FRACTION = 8
+
+
+def _pred_rows() -> list:
+    from repro.configs import get_config
+    from repro.core import extract_ops
+    from repro.core.dataflow import HOP_INTER, HOP_INTRA, ICI_BW, plan_model
+    from repro.launch.mesh import module_mesh_spec
+    from repro.core.dataflow import ModuleTopology
+    from repro.tuner.cost import comm_time_s
+
+    rows = []
+    cfg = get_config(PRED_ARCH)
+    ops = extract_ops(cfg)
+    for m in PRED_MODULES:
+        topo = ModuleTopology(n_modules=m, pes_per_module=4,
+                              inter_bw=ICI_BW / INTER_BW_FRACTION)
+        spec = module_mesh_spec(topo, model=2)
+        # tight budget: the ZeRO-3 pass shards state over the data axes
+        # (module included), putting gather/reduce-scatter traffic on the
+        # inter-module network — the regime the hop model prices
+        plan = plan_model(ops, spec, global_batch=64 * m, seq_len=1024,
+                          kind="train", hbm_budget=64e6)
+        hop = plan.total_comm_hop_bytes()
+        intra, inter = hop[HOP_INTRA], hop[HOP_INTER]
+        total = intra + inter
+        flat_s = total / ICI_BW
+        topo_s = sum(comm_time_s(p, topo) for p in plan.ops.values())
+        rows.append(row(
+            f"topology/pred_{PRED_ARCH}_m{m}", 0.0,
+            f"pred_intra_module_bytes={intra / 1e6:.4f} "
+            f"pred_inter_module_bytes={inter / 1e6:.4f} "
+            f"pred_comm_ratio={inter / total:.4f} "
+            f"pred_comm_slowdown={topo_s / flat_s:.4f} "
+            f"modules={m} pes={topo.pes_per_module}"))
+    return rows
+
+
+def _place_rows() -> list:
+    from repro.configs import get_config
+    from repro.core.dataflow import ICI_BW, ModuleTopology
+    from repro.pipeline.partition import partition_model
+
+    rows = []
+    cfg = get_config(PRED_ARCH)
+    for s, m in PLACE_STAGES:
+        topo = ModuleTopology(n_modules=m, pes_per_module=4,
+                              inter_bw=ICI_BW / INTER_BW_FRACTION)
+        plan = partition_model(cfg, s, global_batch=32, seq_len=1024,
+                               topology=topo)
+        # strawman: contiguous blocks of ceil(S/M) stages per module
+        cap = -(-s // m)
+        naive = tuple(i // cap for i in range(s))
+        naive_inter = sum(e.nbytes for e in plan.edges
+                          if naive[e.src] != naive[e.dst])
+        placed = plan.inter_module_bytes
+        rows.append(row(
+            f"topology/place_{PRED_ARCH}_s{s}m{m}", 0.0,
+            f"pred_inter_module_bytes={placed / 1e6:.4f} "
+            f"pred_naive_inter_bytes={naive_inter / 1e6:.4f} "
+            f"pred_placement_saving={max(0.0, naive_inter - placed) / 1e6:.4f} "
+            f"assignment={'-'.join(str(a) for a in plan.module_assignment)}"))
+    return rows
+
+
+def run() -> list:
+    return _pred_rows() + _place_rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (rows are deterministic either way)")
+    ap.parse_args()
+    print("name,us_per_call,derived")
+    run()

@@ -1,6 +1,8 @@
 """Core: the paper's contribution — programmable dataflow + SR precision."""
-from repro.core.dataflow import (DataflowPlan, MeshSpec, OpPlan, OpSpec,
-                                 Strategy, plan_model, plan_op)
+from repro.core.dataflow import (DataflowPlan, HOP_CLASSES, HOP_INTER,
+                                 HOP_INTRA, MeshSpec, ModuleTopology, OpPlan,
+                                 OpSpec, Strategy, plan_model, plan_op,
+                                 split_hop_bytes)
 from repro.core.phases import Phase, SERVING_PHASES, TRAINING_PHASES
 from repro.core.pmag import LoopDim, LoopNest, matmul_nest
 from repro.core.precision import PRESETS, PrecisionPolicy, get_policy
@@ -11,8 +13,10 @@ from repro.core.rounding import (FX16, FX32, FX32_SR, FX32_SR_LO,
                                  stochastic_round_bf16_lo)
 
 __all__ = [
-    "DataflowPlan", "MeshSpec", "OpPlan", "OpSpec", "Strategy", "plan_model",
-    "plan_op", "Phase", "TRAINING_PHASES", "SERVING_PHASES", "LoopDim",
+    "DataflowPlan", "HOP_CLASSES", "HOP_INTER", "HOP_INTRA", "MeshSpec",
+    "ModuleTopology", "OpPlan", "OpSpec", "Strategy", "plan_model",
+    "plan_op", "split_hop_bytes",
+    "Phase", "TRAINING_PHASES", "SERVING_PHASES", "LoopDim",
     "LoopNest",
     "matmul_nest", "PRESETS", "PrecisionPolicy", "get_policy", "PEWord",
     "Program",

@@ -49,6 +49,70 @@ HBM_BW = 819e9            # B/s
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 ICI_BW = 50e9             # B/s per link
 
+# Hop classes of the multi-module "memory cloud": a collective's bytes
+# travel either on the fast links INSIDE one memory module (the paper's
+# intra-module bus / TSV fabric) or on the slower network BETWEEN modules
+# (Memory Slices' inter-slice links).  The planner splits every comm
+# booking into these classes and prices each at its own bandwidth.
+HOP_INTRA = "intra"
+HOP_INTER = "inter"
+HOP_CLASSES = (HOP_INTRA, HOP_INTER)
+
+
+@dataclass(frozen=True)
+class ModuleTopology:
+    """The module-level shape of the memory cloud.
+
+    NeuroTrainer scales by tiling homogeneous memory modules; what
+    distinguishes the tiled system from one big module is the LINKS: PEs
+    inside a module share the vault bus (``intra_bw``), modules talk over
+    the inter-module network (``inter_bw``, typically several x slower).
+    ``module_axis`` names the mesh axis whose shards live on distinct
+    modules — a collective that never touches it stays on-module.
+    """
+    n_modules: int = 1
+    pes_per_module: int = 1
+    intra_bw: float = ICI_BW              # B/s, links inside a module
+    inter_bw: float = ICI_BW / 8          # B/s, links between modules
+    module_axis: str = "module"
+
+    def __post_init__(self) -> None:
+        if self.n_modules < 1 or self.pes_per_module < 1:
+            raise ValueError(f"topology needs >=1 module and >=1 PE/module, "
+                             f"got {self.n_modules}x{self.pes_per_module}")
+        if self.intra_bw <= 0 or self.inter_bw <= 0:
+            raise ValueError("link bandwidths must be positive")
+
+    @property
+    def n_pes(self) -> int:
+        return self.n_modules * self.pes_per_module
+
+    @property
+    def inter_penalty(self) -> float:
+        """How many intra-link bytes one inter-link byte costs."""
+        return self.intra_bw / self.inter_bw
+
+    def bandwidth(self, hop_class: str) -> float:
+        return self.intra_bw if hop_class == HOP_INTRA else self.inter_bw
+
+
+def split_hop_bytes(nbytes: float, group_size: int,
+                    modules_spanned: int) -> dict:
+    """Split one collective's bytes into hop classes.
+
+    Ring model: a ring collective over ``group_size`` devices spread over
+    ``modules_spanned`` modules crosses a module boundary on exactly
+    ``modules_spanned`` of its ``group_size`` links — so that fraction of
+    the traffic rides the inter-module network.  Intra is computed as the
+    remainder (``nbytes - inter``) so the classes sum to the untyped
+    total bit-for-bit.
+    """
+    if modules_spanned <= 1 or group_size <= 1:
+        return {HOP_INTRA: nbytes, HOP_INTER: 0.0}
+    m = min(modules_spanned, group_size)
+    inter = nbytes * m / group_size
+    return {HOP_INTRA: nbytes - inter, HOP_INTER: inter}
+
 
 class Strategy(str, enum.Enum):
     REPLICATE = "replicate"
@@ -73,10 +137,25 @@ class MeshSpec:
     batch_axes: tuple = ("data",)         # axes carrying the batch dim
     tp_axis: str = "model"
     stage_axis: str = "stage"             # inter-module pipeline axis
+    # module-level link shape (None = the pre-topology flat mesh: every
+    # collective priced at one uniform ICI bandwidth)
+    topology: Optional[ModuleTopology] = None
 
     @property
     def tp(self) -> int:
         return self.axis_sizes[self.tp_axis]
+
+    def modules_spanned(self, axes) -> int:
+        """How many memory modules a collective over ``axes`` touches."""
+        t = self.topology
+        if t is None or t.n_modules <= 1 or t.module_axis not in axes:
+            return 1
+        return min(t.n_modules, self.axis_sizes.get(t.module_axis, 1))
+
+    def hop_bytes(self, nbytes: float, axes) -> dict:
+        """One collective's bytes split by hop class (see split_hop_bytes)."""
+        k = math.prod(self.axis_sizes.get(a, 1) for a in axes)
+        return split_hop_bytes(nbytes, k, self.modules_spanned(axes))
 
     @property
     def pp(self) -> int:
@@ -134,6 +213,18 @@ class OpPlan:
     # None = the kernels' default tiles.  Attached by compile_program so
     # table()/describe() render the FULL mapping, not just the strategy.
     tiling: Optional[dict] = None
+    # Phase -> {"intra": bytes, "inter": bytes} — the comm_bytes of each
+    # phase split by hop class (intra sums + inter sums == comm_bytes).
+    # Empty when planned without a topology.
+    comm_hop_bytes: dict = field(default_factory=dict)
+
+    def hop_totals(self) -> dict:
+        """Hop-class bytes summed over phases ({} without a topology)."""
+        out: dict = {}
+        for h in self.comm_hop_bytes.values():
+            for cls, b in h.items():
+                out[cls] = out.get(cls, 0.0) + b
+        return out
 
     def describe(self) -> str:
         c = {str(k): f"{v/1e6:.1f}MB" for k, v in self.comm_bytes.items() if v}
@@ -141,9 +232,14 @@ class OpPlan:
         if self.tiling:
             tiles = " ".join(f"{p}:{'x'.join(map(str, t))}"
                              for p, t in self.tiling.items())
+        hops = ""
+        tot = self.hop_totals()
+        if tot.get(HOP_INTER, 0.0) > 0.0:
+            hops = (f" hops={HOP_INTRA}:{tot.get(HOP_INTRA, 0.0)/1e6:.1f}MB/"
+                    f"{HOP_INTER}:{tot[HOP_INTER]/1e6:.1f}MB")
         return (f"{self.op.name:<16} {self.strategy:<9} spec={self.weight_spec} "
-                f"mem/dev={self.mem_bytes_per_device/1e6:7.1f}MB comm={c} "
-                f"tiles={tiles} :: {self.rationale}")
+                f"mem/dev={self.mem_bytes_per_device/1e6:7.1f}MB comm={c}"
+                f"{hops} tiles={tiles} :: {self.rationale}")
 
 
 @dataclass
@@ -175,6 +271,18 @@ class DataflowPlan:
                 out[ph] = out.get(ph, 0.0) + b
         return out
 
+    def total_comm_hop_bytes(self) -> dict:
+        """Hop-class bytes summed over ops and phases.  All-intra (inter
+        == 0) for a plan without a topology or with one module."""
+        out = {HOP_INTRA: 0.0, HOP_INTER: 0.0}
+        for p in self.ops.values():
+            if p.comm_hop_bytes:
+                for cls, b in p.hop_totals().items():
+                    out[cls] += b
+            else:
+                out[HOP_INTRA] += sum(p.comm_bytes.values())
+        return out
+
     def total_weight_bytes(self) -> float:
         """Per-device parameter storage only."""
         return sum(p.mem_bytes_per_device for p in self.ops.values())
@@ -203,6 +311,12 @@ class DataflowPlan:
         rows = [self.ops[k].describe() for k in sorted(self.ops)]
         tot = (f"TOTAL mem/dev={self.total_mem_bytes()/1e9:.2f}GB "
                f"comm={[f'{str(k)}:{v/1e6:.0f}MB' for k, v in self.total_comm_bytes().items()]}")
+        hops = self.total_comm_hop_bytes()
+        if hops.get(HOP_INTER, 0.0) > 0.0:
+            t = self.mesh.topology
+            tot += (f" hops={HOP_INTRA}:{hops[HOP_INTRA]/1e6:.0f}MB/"
+                    f"{HOP_INTER}:{hops[HOP_INTER]/1e6:.0f}MB "
+                    f"({t.n_modules} modules x {t.pes_per_module} PEs)")
         return hdr + "\n".join(rows + [tot] + [f"note: {n}" for n in self.notes])
 
 
@@ -288,8 +402,29 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
     fwd_phase = {"decode": Phase.DECODE, "prefill": Phase.PREFILL}.get(
         kind, Phase.FF)
 
+    # Hop-class accounting: every comm booking names the mesh axes its
+    # collective travels; the topology splits the bytes into intra- vs
+    # inter-module traffic and the scoring prices inter bytes at the
+    # slower link (inter_penalty x).  Without a topology (or with one
+    # module) the arithmetic degrades EXACTLY to the flat-mesh model.
+    topo = mesh.topology
+    # axes a fully-replicated weight's dW merge spans: every non-stage axis
+    all_axes = tuple(mesh.batch_axes) + (
+        (mesh.tp_axis,) if mesh.tp_axis in mesh.axis_sizes else ())
+
+    def _hops(comm: dict, axes_by_phase: dict) -> dict:
+        return {ph: mesh.hop_bytes(b, axes_by_phase.get(ph, all_axes))
+                for ph, b in comm.items()}
+
+    def _eff(comm: dict, hop: dict) -> float:
+        """Bandwidth-weighted bytes the strategy scoring compares."""
+        if topo is None or topo.n_modules <= 1:
+            return sum(comm.values())
+        pen = topo.inter_penalty
+        return sum(h[HOP_INTRA] + h[HOP_INTER] * pen for h in hop.values())
+
     shard_dim = _shardable_dim(op, tp)
-    candidates: dict[Strategy, tuple[dict, float, str]] = {}
+    candidates: dict[Strategy, tuple[dict, dict, float, str]] = {}
 
     # --- Experts: EP over the data axis x TP over the model axis.  Tokens
     # are exchanged by all-to-all (the bus merge/partition of Fig 3 along a
@@ -318,6 +453,10 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             if train:
                 comm[Phase.BP] = per_layer * op.n_layers
                 comm[Phase.UP] = 0.0
+            # token routing travels the EP group; the SP<->TP shuffles ride
+            # the model axis — the hop split sees the union of both groups
+            ep_union = tuple(ep_axes) + (mesh.tp_axis,)
+            hop_ep = _hops(comm, {ph: ep_union for ph in comm})
             parts: list = [None, None, None]
             parts[0] = ep_axis
             parts[feat_dim] = mesh.tp_axis
@@ -325,25 +464,28 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             ep_plan = OpPlan(
                 op=op, strategy=Strategy.PARTITION, weight_spec=spec,
                 compute_spec=spec, shard_dim=0, comm_bytes=comm,
+                comm_hop_bytes=hop_ep,
                 mem_bytes_per_device=W / (ep * tp), padding_waste=0.0,
                 rationale=f"EP over {ep_axis} x TP over {mesh.tp_axis}; "
                           f"a2a token routing, dW wholly owned")
-            rep_cost = (2.0 * W * grad_bytes / op.dtype_bytes if train else 0.0) \
+            comm_rep = ({Phase.UP: 2.0 * W * grad_bytes / op.dtype_bytes}
+                        if train else {})
+            hop_rep = _hops(comm_rep, {})
+            rep_cost = _eff(comm_rep, hop_rep) \
                 + (0.0 if seq_shardable else W * (tp - 1))
             if force == Strategy.PARTITION or (force is None
-                                               and sum(comm.values()) <= rep_cost):
+                                               and _eff(comm, hop_ep) <= rep_cost):
                 return ep_plan
             if force is None or force == Strategy.REPLICATE:
                 # replicating the (small) expert tables beats routing:
                 # dense local compute, dW merged like any replicated op.
                 # force=REPLICATE honoured here too (the mapping autotuner
                 # echoes the planner's choice back as an override).
-                comm_rep = ({Phase.UP: 2.0 * W * grad_bytes / op.dtype_bytes}
-                            if train else {})
                 nd = len(op.weight_shape)
                 return OpPlan(op=op, strategy=Strategy.REPLICATE,
                               weight_spec=P(*([None] * nd)), compute_spec=None,
                               shard_dim=None, comm_bytes=comm_rep,
+                              comm_hop_bytes=hop_rep,
                               mem_bytes_per_device=W, padding_waste=0.0,
                               rationale="small expert tables: replicate, "
                                         "skip a2a routing (G1)")
@@ -356,7 +498,8 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
     comm_rep = {Phase.UP: 2.0 * W * grad_bytes / op.dtype_bytes} if train else {}
     rep_pen = 0.0 if seq_shardable else W * (tp - 1)
     candidates[Strategy.REPLICATE] = (
-        comm_rep, W, "weights fit every PE buffer; batch/seq partitioned")
+        comm_rep, _hops(comm_rep, {}), W,
+        "weights fit every PE buffer; batch/seq partitioned")
 
     if shard_dim is not None:
         # --- PARTITION (Megatron TP): activations gathered/merged per layer.
@@ -379,8 +522,14 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             # across the data axes (paper §5.3 central-unit merge).
             comm_par[Phase.UP] = (2.0 * (W / tp) * grad_bytes / op.dtype_bytes
                                   if mesh.dp > 1 else 0.0)
+        # activation gather/merge rides the model axis; the dW sync the
+        # data axes — the hop split prices each collective where it runs
         candidates[Strategy.PARTITION] = (
-            comm_par, W / tp, "large common data: shard W, broadcast/merge activations")
+            comm_par,
+            _hops(comm_par, {fwd_phase: (mesh.tp_axis,),
+                             Phase.BP: (mesh.tp_axis,),
+                             Phase.UP: tuple(mesh.batch_axes)}),
+            W / tp, "large common data: shard W, broadcast/merge activations")
 
         # --- GATHER (FSDP): W broadcast just-in-time PER MICRO-PASS,
         # dW reduce-scattered once per micro-pass too.
@@ -390,19 +539,17 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
             comm_gat[Phase.UP] = (W * grad_bytes / op.dtype_bytes
                                   * (tp - 1) / tp * nm)
         candidates[Strategy.GATHER] = (
-            comm_gat, W / tp, "shard W in memory, broadcast from common vault JIT")
-
-    def total(c: dict) -> float:
-        return sum(c.values())
+            comm_gat, _hops(comm_gat, {ph: (mesh.tp_axis,) for ph in comm_gat}),
+            W / tp, "shard W in memory, broadcast from common vault JIT")
 
     if force is not None and force in candidates:
         choice = force
     else:
-        scored = {s: total(c) + (rep_pen if s == Strategy.REPLICATE else 0.0)
-                  for s, (c, _, _) in candidates.items()}
+        scored = {s: _eff(c, h) + (rep_pen if s == Strategy.REPLICATE else 0.0)
+                  for s, (c, h, _, _) in candidates.items()}
         choice = min(scored, key=lambda s: scored[s])
 
-    comm, mem, why = candidates[choice]
+    comm, hop, mem, why = candidates[choice]
 
     # Build the PartitionSpec (stacking dim for scanned layers is added by
     # the program layer; here we spec the per-layer shape).
@@ -420,7 +567,8 @@ def plan_op(op: OpSpec, mesh: MeshSpec, *, tokens_per_dp_shard: float,
 
     return OpPlan(op=op, strategy=choice, weight_spec=spec,
                   compute_spec=compute_spec, shard_dim=sd, comm_bytes=comm,
-                  mem_bytes_per_device=mem, padding_waste=0.0, rationale=why)
+                  comm_hop_bytes=hop, mem_bytes_per_device=mem,
+                  padding_waste=0.0, rationale=why)
 
 
 def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4,
@@ -451,16 +599,31 @@ def add_zero3_data(p: OpPlan, mesh: MeshSpec, *, grad_bytes: int = 4,
             parts[d2] = axes if len(axes) > 1 else axes[0]
             w_dev = p.mem_bytes_per_device / ax_sz
             comm = dict(p.comm_bytes)
+            hop = {ph: dict(h) for ph, h in p.comm_hop_bytes.items()}
+            if not hop and comm:       # hand-built plans: seed all-intra
+                hop = {ph: {HOP_INTRA: b, HOP_INTER: 0.0}
+                       for ph, b in comm.items()}
+
+            def _acc(ph: Phase, nbytes: float) -> None:
+                h = mesh.hop_bytes(nbytes, axes)
+                d = hop.setdefault(ph, {HOP_INTRA: 0.0, HOP_INTER: 0.0})
+                d[HOP_INTRA] += h[HOP_INTRA]
+                d[HOP_INTER] += h[HOP_INTER]
+
             gat = p.mem_bytes_per_device * (ax_sz - 1) / ax_sz
             comm[fwd_phase] = comm.get(fwd_phase, 0.0) + gat
+            _acc(fwd_phase, gat)
             if Phase.UP in comm or Phase.BP in comm:
                 comm[Phase.BP] = comm.get(Phase.BP, 0.0) + gat
+                _acc(Phase.BP, gat)
                 comm[Phase.UP] = (comm.get(Phase.UP, 0.0)
                                   + gat * grad_bytes / p.op.dtype_bytes)
+                _acc(Phase.UP, gat * grad_bytes / p.op.dtype_bytes)
             compute_spec = p.compute_spec if p.compute_spec is not None else p.weight_spec
             return OpPlan(op=p.op, strategy=p.strategy, weight_spec=P(*parts),
                           compute_spec=compute_spec, shard_dim=p.shard_dim,
-                          comm_bytes=comm, mem_bytes_per_device=w_dev,
+                          comm_bytes=comm, comm_hop_bytes=hop,
+                          mem_bytes_per_device=w_dev,
                           padding_waste=p.padding_waste,
                           rationale=p.rationale + f" + zero3 over {axes}")
     return None

@@ -19,9 +19,11 @@ import numpy as np
 from repro.checkpoint import Checkpointer
 from repro.configs import SHAPES, get_config, get_reduced
 from repro.configs.base import ShapeConfig, TrainConfig
-from repro.core import compile_program
+from repro.core import ModuleTopology, compile_program
+from repro.core.dataflow import ICI_BW
 from repro.data import SyntheticLM
-from repro.launch.mesh import make_host_mesh, mesh_spec_for
+from repro.launch.mesh import (make_host_mesh, make_module_mesh,
+                               mesh_spec_for, module_mesh_spec)
 from repro.runtime import train_loop as tl
 from repro.runtime.fault_tolerance import run_with_recovery
 
@@ -46,6 +48,14 @@ def main(argv=None):
                     help="run the mapping autotuner and execute the tuned "
                          "strategy/tiling winners (repro/tuner)")
     ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--modules", type=int, default=1,
+                    help="memory modules in the cloud: plans collectives "
+                         "with hop-class (intra/inter-module) bandwidths "
+                         "and lays devices out one module row per mesh "
+                         "axis; 1 = a single big module (flat costs)")
+    ap.add_argument("--inter-bw-gbs", type=float, default=None,
+                    help="inter-module link GB/s for --modules "
+                         "(default: intra bandwidth / 8)")
     ap.add_argument("--pipeline-stages", type=int, default=1,
                     help="inter-module pipeline stages (layer groups on "
                          "memory-module stages, 1F1B microbatch schedule); "
@@ -76,11 +86,31 @@ def main(argv=None):
         shape = ShapeConfig("custom", seq_len=args.seq,
                             global_batch=args.batch, kind="train")
     mesh = make_host_mesh()
+    topology = None
+    if args.modules > 1:
+        n_dev = len(jax.devices())
+        topology = ModuleTopology(
+            n_modules=args.modules,
+            pes_per_module=max(1, n_dev // args.modules),
+            inter_bw=(args.inter_bw_gbs * 1e9 if args.inter_bw_gbs
+                      else ICI_BW / 8))
+        mmesh = make_module_mesh(topology)   # warns when devices can't
+        if mmesh is not None:
+            mesh = mmesh
+            spec = mesh_spec_for(mesh, topology=topology)
+        else:
+            # plan the module cloud, execute on whatever devices exist
+            spec = module_mesh_spec(topology)
+        print(f"module cloud: {topology.n_modules} modules x "
+              f"{topology.pes_per_module} PEs, inter-module link at "
+              f"1/{topology.inter_penalty:.0f} intra bandwidth")
+    else:
+        spec = mesh_spec_for(mesh)
     tuning = None
     if args.tuned:
         from repro.core import extract_ops
         from repro.tuner import tune_program
-        tuning = tune_program(extract_ops(cfg), mesh_spec_for(mesh),
+        tuning = tune_program(extract_ops(cfg), spec,
                               global_batch=shape.global_batch,
                               seq_len=shape.seq_len, kind=shape.kind,
                               backend=args.kernel_backend,
@@ -91,7 +121,7 @@ def main(argv=None):
     if args.auto_memory and args.pipeline_stages <= 1:
         from repro.memory import choose_policy
         from repro.memory.policy import DEFAULT_BUDGET
-        pol = choose_policy(cfg, shape, mesh_spec_for(mesh),
+        pol = choose_policy(cfg, shape, spec,
                             hbm_budget=budget or DEFAULT_BUDGET,
                             precision=args.precision, tuning=tuning)
         print(pol.describe())
@@ -102,7 +132,7 @@ def main(argv=None):
                              f"fits {pol.budget / 1e9:.2f}GB; best plan "
                              f"peaks at {pol.peak_bytes / 1e9:.2f}GB")
         remat, microbatch = pol.remat, pol.microbatch
-    program = compile_program(cfg, shape, mesh_spec_for(mesh),
+    program = compile_program(cfg, shape, spec,
                               precision=args.precision, tuning=tuning,
                               microbatch=max(1, microbatch), remat=remat)
     print(program.describe())
@@ -133,7 +163,8 @@ def main(argv=None):
                                     seq_len=shape.seq_len,
                                     hbm_budget=budget or DEFAULT_BUDGET,
                                     mesh_spec=sspec, microbatch=nm,
-                                    precision=args.precision)
+                                    precision=args.precision,
+                                    topology=topology)
             if not pplan.fits:
                 for n in pplan.notes:
                     print(f"note: {n}")
@@ -143,7 +174,8 @@ def main(argv=None):
         else:
             pplan = partition_model(cfg, args.pipeline_stages,
                                     global_batch=shape.global_batch,
-                                    seq_len=shape.seq_len)
+                                    seq_len=shape.seq_len,
+                                    topology=topology)
         print(pplan.table())
         sched = make_schedule(args.pipeline_stages, nm,
                               args.pipeline_schedule)

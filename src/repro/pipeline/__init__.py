@@ -6,8 +6,10 @@ stage groups, `schedule` emits the GPipe / 1F1B microbatch clocks as
 explicit (stage, microbatch, phase) events, `runner` executes them over
 per-stage iBuffer programs with ppermute activation/grad handoffs.
 """
-from repro.pipeline.partition import (LayerCost, PipelinePlan, StageSpec,
-                                      layer_costs, partition_model)
+from repro.pipeline.partition import (LayerCost, PipelinePlan, StageEdge,
+                                      StageSpec, layer_costs,
+                                      partition_model, place_stages,
+                                      stage_edges)
 from repro.pipeline.runner import make_pipeline_train_step
 from repro.pipeline.schedule import (PipeEvent, PipeSchedule, SCHEDULES,
                                      build_schedule, bubble_fraction,
@@ -15,8 +17,9 @@ from repro.pipeline.schedule import (PipeEvent, PipeSchedule, SCHEDULES,
                                      summarize, validate)
 
 __all__ = [
-    "LayerCost", "PipelinePlan", "StageSpec", "layer_costs",
-    "partition_model", "make_pipeline_train_step", "PipeEvent",
+    "LayerCost", "PipelinePlan", "StageEdge", "StageSpec", "layer_costs",
+    "partition_model", "place_stages", "stage_edges",
+    "make_pipeline_train_step", "PipeEvent",
     "PipeSchedule", "SCHEDULES", "build_schedule", "bubble_fraction",
     "events_at", "ideal_bubble", "make_schedule", "summarize", "validate",
 ]

@@ -16,14 +16,22 @@ lets the runner feed each stage with ``groups[g0:g1]`` and lets a
 ``("stage", ...)`` mesh shard the stacking dim when stages divide evenly.
 The embedding is pinned to stage 0 and the LM head (tied or not) to the
 last stage; their costs ride the greedy like any layer's.
+
+With a :class:`~repro.core.dataflow.ModuleTopology` the partitioner also
+decides WHERE each stage lives: stages exchange bytes over explicit
+:class:`StageEdge`\\ s (the residual handoff between neighbours, plus the
+tied-embedding table sync between stage 0 and the head stage), and
+``place_stages`` clusters the heaviest edges inside one module so only
+cold edges ride the slow inter-module links.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.dataflow import HBM_BW, PEAK_FLOPS_BF16
+from repro.core.dataflow import HBM_BW, ModuleTopology, PEAK_FLOPS_BF16
 from repro.core.phases import Phase
 from repro.core.program import extract_ops, layer_ops
 from repro.tuner.cost import gemm_for_phase, op_act_bytes, residual_act_bytes
@@ -91,6 +99,18 @@ class StageSpec:
 
 
 @dataclass(frozen=True)
+class StageEdge:
+    """Bytes per step two stages exchange (directionless for placement)."""
+    src: int
+    dst: int
+    nbytes: float
+    kind: str                 # "activation" | "tied_embed"
+
+    def describe(self) -> str:
+        return f"{self.src}->{self.dst} {self.nbytes/1e6:.1f}MB {self.kind}"
+
+
+@dataclass(frozen=True)
 class PipelinePlan:
     """The compiled stage map for one (model, num_stages, shape)."""
     cfg_name: str
@@ -100,6 +120,8 @@ class PipelinePlan:
     tokens_per_step: float
     hbm_budget: float = 0.0   # per-module budget the stages were fitted to
     notes: tuple = ()
+    edges: tuple = ()              # StageEdge inter-stage traffic
+    module_assignment: tuple = ()  # stage index -> module id (placement)
 
     @property
     def group_bounds(self) -> tuple:
@@ -127,6 +149,24 @@ class PipelinePlan:
         mean = sum(costs) / len(costs)
         return max(costs) / mean if mean > 0 else 1.0
 
+    def _edge_split(self) -> tuple:
+        """(intra, inter) edge bytes under the module assignment; all
+        bytes count as intra when no placement was made (one module)."""
+        if not self.module_assignment:
+            return sum(e.nbytes for e in self.edges), 0.0
+        a = self.module_assignment
+        intra = sum(e.nbytes for e in self.edges if a[e.src] == a[e.dst])
+        inter = sum(e.nbytes for e in self.edges if a[e.src] != a[e.dst])
+        return intra, inter
+
+    @property
+    def intra_module_bytes(self) -> float:
+        return self._edge_split()[0]
+
+    @property
+    def inter_module_bytes(self) -> float:
+        return self._edge_split()[1]
+
     def table(self) -> str:
         hdr = (f"# PipelinePlan {self.cfg_name} stages={self.num_stages} "
                f"unit={self.unit_layers} layers/group "
@@ -137,8 +177,12 @@ class PipelinePlan:
                       else f"{self.hbm_budget/1e6:.2f}MB")
             hdr += (f" budget={budget}/module "
                     f"{'fits' if self.fits else 'OVER BUDGET'}")
-        return "\n".join([hdr] + [s.describe() for s in self.stages]
-                         + [f"note: {n}" for n in self.notes])
+        lines = [hdr] + [s.describe() for s in self.stages]
+        if self.module_assignment:
+            intra, inter = self._edge_split()
+            lines.append(f"placement: {list(self.module_assignment)} "
+                         f"intra={intra/1e6:.1f}MB inter={inter/1e6:.1f}MB")
+        return "\n".join(lines + [f"note: {n}" for n in self.notes])
 
     def to_dict(self) -> dict:
         return {
@@ -149,6 +193,11 @@ class PipelinePlan:
             "hbm_budget": self.hbm_budget,
             "fits": self.fits,
             "notes": list(self.notes),
+            "module_assignment": list(self.module_assignment),
+            "intra_module_bytes": self.intra_module_bytes,
+            "inter_module_bytes": self.inter_module_bytes,
+            "edges": [{"src": e.src, "dst": e.dst, "bytes": e.nbytes,
+                       "kind": e.kind} for e in self.edges],
             "stages": [{
                 "index": s.index, "layers": [s.start_layer, s.end_layer],
                 "groups": [s.start_group, s.end_group],
@@ -225,6 +274,77 @@ def _edge_costs(cfg: ModelConfig, tokens_per_step: float, kind: str) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# Inter-stage edges + module placement
+# ---------------------------------------------------------------------------
+
+
+def stage_edges(cfg: ModelConfig, num_stages: int, *, tokens_per_step: float,
+                kind: str = "train") -> tuple:
+    """The per-step byte flows between stages.
+
+    Neighbour edges carry the residual-stream handoff (fwd activation +
+    bwd cotangent under training — the ppermute payloads the runner
+    actually sends).  A tied embedding adds a (0, last) edge: the head
+    stage reads the V x d table every step and its UP cotangent flows
+    back, so cutting that edge across modules moves the whole table over
+    the slow link twice per step.
+    """
+    if num_stages < 2:
+        return ()
+    trips = 2.0 if kind == "train" else 1.0
+    hand = trips * tokens_per_step * cfg.d_model * 2
+    edges = [StageEdge(s, s + 1, hand, "activation")
+             for s in range(num_stages - 1)]
+    if cfg.tie_embeddings:
+        for op in extract_ops(cfg):
+            if op.role == "embed":
+                edges.append(StageEdge(0, num_stages - 1,
+                                       2.0 * op.weight_bytes, "tied_embed"))
+    return tuple(edges)
+
+
+def place_stages(edges: tuple, num_stages: int, n_modules: int) -> tuple:
+    """Assign stages to modules, keeping the hottest edges intra-module.
+
+    Greedy correlation clustering: walk edges by descending bytes and
+    merge their endpoint clusters whenever the merge respects the module
+    capacity ceil(S/M); then first-fit the clusters (by smallest stage
+    index) into modules.  Deterministic — ties break on (src, dst) — so
+    the benchmark rows built from it gate exactly.
+    """
+    if n_modules < 1:
+        raise ValueError(f"n_modules must be >= 1, got {n_modules}")
+    cap = -(-num_stages // n_modules)
+    parent = list(range(num_stages))
+    size = [1] * num_stages
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in sorted(edges, key=lambda e: (-e.nbytes, e.src, e.dst)):
+        a, b = find(e.src), find(e.dst)
+        if a != b and size[a] + size[b] <= cap:
+            a, b = (a, b) if a < b else (b, a)
+            parent[b] = a
+            size[a] += size[b]
+
+    clusters: dict = {}
+    for s in range(num_stages):
+        clusters.setdefault(find(s), []).append(s)
+    assignment = [-1] * num_stages
+    room = [cap] * n_modules
+    for _, members in sorted(clusters.items()):
+        m = next(i for i in range(n_modules) if room[i] >= len(members))
+        room[m] -= len(members)
+        for s in members:
+            assignment[s] = m
+    return tuple(assignment)
+
+
+# ---------------------------------------------------------------------------
 # Greedy contiguous partition
 # ---------------------------------------------------------------------------
 
@@ -253,7 +373,9 @@ def partition_model(cfg: ModelConfig, num_stages: int, *,
                     global_batch: int = 8, seq_len: int = 128,
                     kind: str = "train", hbm_budget: float = 0.0,
                     mesh_spec=None, microbatch: int = 1,
-                    precision: str = "paper_sr_bf16") -> PipelinePlan:
+                    precision: str = "paper_sr_bf16",
+                    topology: Optional[ModuleTopology] = None
+                    ) -> PipelinePlan:
     """Balance the model's layers into `num_stages` memory-module stages.
 
     Stages balance on PLANNED bytes: each layer's roofline price counts
@@ -267,6 +389,10 @@ def partition_model(cfg: ModelConfig, num_stages: int, *,
     (``memory.policy.fit_stage``); the results ride ``StageSpec``
     (peak_bytes / remat / fits) and ``PipelinePlan.stage_remat`` plugs
     straight into ``compile_stage_programs`` and the runner.
+
+    topology: a multi-module :class:`ModuleTopology` runs the placement
+    pass — ``place_stages`` over ``stage_edges`` — and the plan records
+    ``module_assignment`` plus the intra/inter edge-byte split.
 
     Raises ValueError when there are more stages than scan groups — a
     stage must own at least one group (params stack over groups, so a
@@ -354,7 +480,16 @@ def partition_model(cfg: ModelConfig, num_stages: int, *,
             cost=_cost(f, w + a),
             has_embed=(s == 0), has_head=(s == num_stages - 1),
             peak_bytes=peak, remat=remat, fits=fits))
+    edges = stage_edges(cfg, num_stages, tokens_per_step=tokens, kind=kind)
+    assignment: tuple = ()
+    if topology is not None and topology.n_modules > 1:
+        assignment = place_stages(edges, num_stages, topology.n_modules)
+        a = assignment
+        inter = sum(e.nbytes for e in edges if a[e.src] != a[e.dst])
+        notes.append(f"placed {num_stages} stages on {topology.n_modules} "
+                     f"modules; {inter/1e6:.1f}MB/step crosses modules")
     return PipelinePlan(cfg_name=cfg.name, num_stages=num_stages,
                         unit_layers=period, stages=tuple(stages),
                         tokens_per_step=tokens, hbm_budget=hbm_budget,
-                        notes=tuple(notes))
+                        notes=tuple(notes), edges=edges,
+                        module_assignment=assignment)

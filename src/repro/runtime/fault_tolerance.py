@@ -15,20 +15,25 @@ What is implemented and TESTED here (CPU container, scaled down honestly):
     mesh and re-place the host-state under the new shardings.  Because the
     planner (core/dataflow.py) is a pure function of (ops, mesh), the SAME
     model re-plans for any mesh shape — this is the homogeneous-substrate
-    property of the paper doing fault-tolerance work.
+    property of the paper doing fault-tolerance work.  The same property
+    covers losing a whole MEMORY MODULE: ``surviving_topology`` shrinks
+    the :class:`~repro.core.dataflow.ModuleTopology` by the dead modules
+    and ``elastic_replan(topology=...)`` re-plans with the survivor's
+    hop-class costs while the checkpoint reshards onto the smaller mesh.
   * ``StepTimer`` — straggler detection by robust z-score on step times;
     in production the hook triggers spare promotion, here it records.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer, replace_on_mesh
+from repro.core.dataflow import ModuleTopology
 
 
 @dataclass
@@ -52,14 +57,37 @@ class StepTimer:
         return False
 
 
+def surviving_topology(topology: ModuleTopology,
+                       lost: int = 1) -> ModuleTopology:
+    """The module cloud after `lost` whole modules die.
+
+    Modules are homogeneous (the paper's premise), so WHICH module died
+    does not matter — only how many survive.  Link bandwidths and
+    PEs/module carry over unchanged; raises when no module survives.
+    """
+    if lost < 0:
+        raise ValueError(f"lost must be >= 0, got {lost}")
+    if lost >= topology.n_modules:
+        raise ValueError(f"losing {lost} of {topology.n_modules} modules "
+                         f"leaves nothing to replan onto")
+    return replace(topology, n_modules=topology.n_modules - lost)
+
+
 def elastic_replan(cfg, shape, new_mesh, host_state, train_cfg,
-                   precision: str):
-    """Re-plan + re-place state for a changed mesh (elastic scaling)."""
+                   precision: str,
+                   topology: Optional[ModuleTopology] = None):
+    """Re-plan + re-place state for a changed mesh (elastic scaling).
+
+    topology: the SURVIVING module topology (see ``surviving_topology``)
+    — the replanned program prices its collectives against the smaller
+    module cloud's hop classes.
+    """
     from repro.core import compile_program
     from repro.launch.mesh import mesh_spec_for
     from repro.runtime import train_loop as tl
 
-    program = compile_program(cfg, shape, mesh_spec_for(new_mesh),
+    program = compile_program(cfg, shape,
+                              mesh_spec_for(new_mesh, topology=topology),
                               precision=precision)
     opt = None
     step_fn, opt = tl.make_train_step(cfg, program, train_cfg, new_mesh)

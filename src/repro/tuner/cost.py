@@ -26,8 +26,9 @@ import math
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.dataflow import (HBM_BW, OpSpec, PEAK_FLOPS_BF16, Strategy,
-                                 _shardable_dim)
+from repro.core.dataflow import (HBM_BW, HOP_INTER, HOP_INTRA, ICI_BW,
+                                 ModuleTopology, OpSpec, PEAK_FLOPS_BF16,
+                                 Strategy, _shardable_dim)
 from repro.core.phases import Phase
 
 # Pallas guide: ~16 MB VMEM/core; leave headroom for the kernel's own
@@ -45,6 +46,25 @@ GRID_STEP_S = 2e-7
 DISPATCH_S = 2e-6
 
 DEFAULT_TILE = (256, 256, 512)
+
+
+def comm_time_s(plan, topology: Optional[ModuleTopology] = None) -> float:
+    """Seconds one OpPlan's collectives take at per-hop-class bandwidth.
+
+    A flat ICI_BW divide when there is no multi-module topology — the
+    pre-topology tuner cost, bit-for-bit.  Otherwise intra-module bytes
+    ride the module link and inter-module bytes the (slower) module-to-
+    module network; bytes without a hop classification price as intra.
+    """
+    total = sum(plan.comm_bytes.values())
+    if topology is None or topology.n_modules <= 1:
+        return total / ICI_BW
+    hop = plan.hop_totals()
+    if not hop:
+        return total / topology.intra_bw
+    inter = hop.get(HOP_INTER, 0.0)
+    intra = hop.get(HOP_INTRA, 0.0) + max(0.0, total - sum(hop.values()))
+    return intra / topology.intra_bw + inter / topology.inter_bw
 
 
 def _ceil_div(a: int, b: int) -> int:

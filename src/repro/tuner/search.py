@@ -21,13 +21,13 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.dataflow import (ICI_BW, MeshSpec, OpSpec, Strategy,
-                                 _divisible, _shardable_dim, plan_model,
-                                 plan_op, step_tokens_per_shard)
+from repro.core.dataflow import (MeshSpec, OpSpec, Strategy, _divisible,
+                                 _shardable_dim, plan_model, plan_op,
+                                 step_tokens_per_shard)
 from repro.core.phases import Phase
 from repro.tuner.cache import TuningCache, mesh_tag
 from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
-                              candidate_tiles, fused_decode_cost,
+                              candidate_tiles, comm_time_s, fused_decode_cost,
                               gemm_for_phase, per_op_decode_cost, tile_cost)
 
 PHASES_FOR_KIND = {
@@ -168,7 +168,7 @@ def _score_strategy(op: OpSpec, mesh: MeshSpec, force: Optional[Strategy], *,
     plan = plan_op(op, mesh, tokens_per_dp_shard=tokens_per_dp_shard,
                    kind=kind, force=force, seq_shardable=seq_shardable,
                    microbatch=microbatch)
-    comm_s = sum(plan.comm_bytes.values()) / ICI_BW
+    comm_s = comm_time_s(plan, mesh.topology)
     cand = OpTuning(op=op.name, strategy=plan.strategy, comm_s=comm_s)
     total = comm_s
     for phase in phases:
