@@ -1,0 +1,116 @@
+"""Fleet throughput benchmark: replicas + shared prefix cache + SLO
+admission under diurnal/heavy-tail traffic.
+
+All gated rows are DETERMINISTIC: the per-step scheduling (routing,
+prefix hits, backlog, shedding, eviction) comes from a real
+reference-backend fleet run — bit-stable given the seed — and the step
+clock comes from the tuner's fused-decode cost model, so the numbers
+never move with runner load (same contract as ``serve_throughput``'s
+``serve_pred`` rows).
+
+  fleet_pred/{arch}/steady                pred_goodput, pred_tok_s,
+                                          pred_prefix_hit_rate
+  fleet_pred/{arch}/overload/interactive  pred_p99_ms, pred_goodput
+  fleet_pred/{arch}/overload/batch        pred_p99_ms, pred_goodput
+
+The overload pair is the SLO story the gate pins: the trace
+oversubscribes the arenas at peak, admission backlogs + sheds batch
+work, and the gate holds interactive pred_p99_ms DOWN while batch
+pred_goodput degrades (graceful, not collapsed — its baseline value is
+the degraded-but-nonzero level).
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--smoke]
+
+``--smoke`` is the CI variant: tiny trace, seconds on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import row
+from repro.configs import get_reduced
+from repro.core.program import extract_ops
+from repro.serving import (AdmissionPolicy, build_fleet, diurnal_trace,
+                           slo_stats)
+from repro.tuner import tune_fused_decode
+
+
+def _goodput(tokens: int, steps: int, step_s: float) -> float:
+    """Completed tokens per modeled second (tokens of shed or unfinished
+    requests count zero — goodput, not throughput)."""
+    return tokens / max(1, steps) / step_s
+
+
+def bench_pred(arch: str, *, replicas: int, slots: int, requests: int,
+               prompt_lens: tuple, gen: int, chunk: int,
+               prefix_entries: int, prefix_pool: int, seed: int = 0,
+               tag: str = "") -> None:
+    cfg = get_reduced(arch)
+    fd = tune_fused_decode(extract_ops(cfg), tokens=slots)
+    step_s = fd["fused_s"] * cfg.n_layers   # modeled per-replica step
+    max_len = prompt_lens[1] + gen
+    prefix_len = 2 * chunk                  # two chunks of shared head
+    mk = dict(replicas=replicas, n_slots=slots, max_len=max_len,
+              prefill_chunk=chunk, seed=seed, fused_decode=True,
+              prefix_entries=prefix_entries)
+    tr = dict(vocab_size=cfg.vocab_size, prompt_lens=prompt_lens,
+              gen_tokens=gen, batch_frac=0.5, prefix_pool=prefix_pool,
+              prefix_len=prefix_len, seed=seed)
+
+    # steady state: day-shaped arrivals the fleet keeps up with; prefix
+    # heads dedupe across replicas, nothing is shed
+    fleet = build_fleet(cfg, admission=AdmissionPolicy(
+        max_backlog=4 * replicas * slots), **mk)
+    fleet.run(diurnal_trace(requests, peak_interarrival_steps=1.0,
+                            trough_interarrival_steps=8.0, **tr))
+    per = slo_stats(fleet)
+    toks = sum(c["tokens"] for c in per.values())
+    px = fleet.prefix.stats()
+    row(f"fleet_pred/{arch}/steady{tag}", step_s * 1e6,
+        f"pred_goodput={_goodput(toks, fleet.step_count, step_s):.1f} "
+        f"pred_tok_s={len(fleet.events) / max(1, fleet.step_count) / step_s:.1f} "
+        f"pred_prefix_hit_rate={px['hit_rate']:.4f} "
+        f"replicas={replicas} steps={fleet.step_count} "
+        f"shed={len(fleet.shed)} hits={px['hits']} lookups={px['lookups']}")
+
+    # overload: rush-hour arrivals oversubscribe every arena; a tight
+    # backlog sheds batch work and eviction patience bounds starvation —
+    # the gate pins the interactive tail AND the batch goodput floor
+    fleet = build_fleet(cfg, admission=AdmissionPolicy(
+        max_backlog=replicas * slots), evict_patience=4, **mk)
+    fleet.run(diurnal_trace(2 * requests, peak_interarrival_steps=0.25,
+                            trough_interarrival_steps=2.0, **tr))
+    per = slo_stats(fleet)
+    for slo in ("interactive", "batch"):
+        c = per[slo]
+        row(f"fleet_pred/{arch}/overload/{slo}{tag}", step_s * 1e6,
+            f"pred_p99_ms={c['p99_step_gap'] * step_s * 1e3:.4f} "
+            f"pred_goodput={_goodput(c['tokens'], fleet.step_count, step_s):.1f} "
+            f"submitted={c['submitted']} shed={c['shed']} "
+            f"completed={c['completed']} steps={fleet.step_count}")
+
+
+def run(smoke: bool = True) -> None:
+    """Harness entry (benchmarks.run): the smoke-sized fleet — run this
+    module directly (no --smoke) for the full trace."""
+    if smoke:
+        bench_pred("qwen2-0.5b", replicas=2, slots=3, requests=12,
+                   prompt_lens=(8, 40), gen=6, chunk=8,
+                   prefix_entries=4, prefix_pool=2, tag="/smoke")
+    else:
+        bench_pred("qwen2-0.5b", replicas=4, slots=8, requests=64,
+                   prompt_lens=(16, 128), gen=16, chunk=16,
+                   prefix_entries=16, prefix_pool=4)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (seconds on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,12 @@
-"""CI perf gate: run the benchmark harness, record BENCH_7.json, compare
-against the committed baseline.
+"""CI perf gate: run the benchmark harness, record BENCH_<N>.json,
+compare against the committed baseline.
 
-    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_7.json]
+    PYTHONPATH=src python -m benchmarks.gate [--out BENCH_8.json]
         [--baseline benchmarks/baseline.json] [--update]
+
+The artifact name is derived from ``BENCH_VERSION`` (bumped once per
+PR that changes the gated surface); CI uploads by glob, so bumping the
+constant here is the ONLY per-PR change.
 
 Runs ``benchmarks.run`` (the smoke-sized figure/table suites) and
 ``benchmarks.autotune_gemm --smoke`` as subprocesses, merges their CSV
@@ -27,17 +31,23 @@ import os
 import subprocess
 import sys
 
+# one bump per PR that changes the gated surface; the artifact name and
+# CI upload glob both derive from it
+BENCH_VERSION = 8
+
 DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
 # autotuner's predicted speedup/bytes, the pipeline partitioner's
 # predicted bubble/imbalance/speedup, the memory planner's planned
 # peak/fragmentation, the serving rows' cost-modeled tokens/s,
-# p99 inter-token latency, and speculative accepted-per-verify, and the
-# topology planner's hop-class byte split + comm ratio
+# p99 inter-token latency, and speculative accepted-per-verify, the
+# topology planner's hop-class byte split + comm ratio, and the fleet's
+# per-SLO goodput + prefix-cache hit rate
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
               "pred_imbalance", "pred_peak_mb", "pred_frag",
               "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify",
-              "pred_inter_module_bytes", "pred_comm_ratio")
+              "pred_inter_module_bytes", "pred_comm_ratio",
+              "pred_goodput", "pred_prefix_hit_rate")
 # metrics where bigger is worse (gate direction "lower")
 LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99",
                    "inter_module")
@@ -89,7 +99,7 @@ def collect(suites: str) -> tuple:
         # autotune runs as its own subprocess below (the CI contract is
         # `run.py` + `autotune_gemm --smoke`); don't execute it twice
         suites = ("table1,fig10,fig13,fig16,table6,fig17,serve,pipeline,"
-                  "memory_plan,topology")
+                  "memory_plan,topology,fleet")
     rc, out = _run([sys.executable, "-m", "benchmarks.run",
                     "--only", suites])
     ok &= rc == 0
@@ -144,7 +154,7 @@ def make_baseline(rows: dict, threshold: float = 0.20) -> dict:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_7.json")
+    ap.add_argument("--out", default=f"BENCH_{BENCH_VERSION}.json")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--suites", default=DEFAULT_SUITES,
                     help="benchmarks.run --only value")

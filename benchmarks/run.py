@@ -14,16 +14,16 @@ def main() -> None:
     ap.add_argument("--only", default="all")
     args = ap.parse_args()
     from benchmarks import (autotune_gemm, fig10_precision, fig13_alexnet,
-                            fig16_suite, fig17_scaling, memory_plan,
-                            pipeline_scaling, serve_throughput, table1_mac,
-                            table6_efficiency, topology_scaling)
+                            fig16_suite, fig17_scaling, fleet_throughput,
+                            memory_plan, pipeline_scaling, serve_throughput,
+                            table1_mac, table6_efficiency, topology_scaling)
     suites = {
         "table1": table1_mac, "fig10": fig10_precision,
         "fig13": fig13_alexnet, "fig16": fig16_suite,
         "table6": table6_efficiency, "fig17": fig17_scaling,
         "serve": serve_throughput, "autotune": autotune_gemm,
         "pipeline": pipeline_scaling, "memory_plan": memory_plan,
-        "topology": topology_scaling,
+        "topology": topology_scaling, "fleet": fleet_throughput,
     }
     chosen = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

@@ -1,10 +1,17 @@
-"""Serving CLI: the continuous-batching engine (default) or the legacy
-single-shot fixed-batch loop (``--single-shot`` — the parity oracle, and
-the only path for the audio family).
+"""Serving CLI: the continuous-batching engine (default), a replica
+fleet (``--replicas N``), or the legacy single-shot fixed-batch loop
+(``--single-shot`` — the parity oracle, and the only path for the audio
+family).
 
     # continuous batching over a synthetic Poisson trace
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --requests 32 --prompt-lens 16,512 --gen 32 --slots 32 --chunk 32
+
+    # a 4-replica fleet: planned-bytes router, shared prefix cache,
+    # batch work shed under overload (diurnal/heavy-tail trace)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --replicas 4 --trace diurnal --prefix-cache 8 --batch-frac 0.5 \
+        --max-backlog 16
 
     # legacy single-shot (one fixed batch, teacher-forced prefill)
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
@@ -26,7 +33,9 @@ from repro.models import encdec
 from repro.models import transformer as tfm
 from repro.models.layers import PEContext
 from repro.runtime import train_loop as tl
-from repro.serving import build_engine, latency_stats, poisson_trace
+from repro.serving import (AdmissionPolicy, build_engine, build_fleet,
+                           bursty_trace, diurnal_trace, latency_stats,
+                           poisson_trace, slo_stats)
 
 
 def run_single_shot(args, cfg, mesh, use_mesh):
@@ -81,6 +90,65 @@ def run_single_shot(args, cfg, mesh, use_mesh):
     print(f"prefill {t_prefill*1e3:.0f}ms  decode {t_decode*1e3:.0f}ms "
           f"({tps:.1f} tok/s aggregate)")
     print("sample token ids:", [int(t[0]) for t in out_tokens][:16])
+    return 0
+
+
+def make_trace(args, cfg, lo, hi):
+    """The synthetic workload for engine/fleet mode (--trace)."""
+    base = dict(vocab_size=cfg.vocab_size, prompt_lens=(lo, hi),
+                gen_tokens=args.gen, seed=args.seed)
+    if args.trace == "poisson":
+        return poisson_trace(args.requests,
+                             mean_interarrival_steps=args.rate, **base)
+    if args.trace == "bursty":
+        return bursty_trace(args.requests, burst_size=args.slots,
+                            burst_gap_steps=max(1, int(args.rate * 8)),
+                            **base)
+    prefix_len = min(2 * args.chunk, hi - 1) if args.prefix_cache else 0
+    return diurnal_trace(args.requests, batch_frac=args.batch_frac,
+                         prefix_pool=args.prefix_pool if prefix_len else 0,
+                         prefix_len=prefix_len, **base)
+
+
+def run_fleet(args, cfg):
+    """N replicas behind the planned-bytes router (single host: replicas
+    are logical engines; the router math is the multi-module story)."""
+    lo, hi = (int(x) for x in args.prompt_lens.split(","))
+    max_len = args.max_len or hi + args.gen
+    admission = (AdmissionPolicy(max_backlog=args.max_backlog)
+                 if args.max_backlog is not None else None)
+    fleet = build_fleet(
+        cfg, replicas=args.replicas, n_slots=args.slots, max_len=max_len,
+        prefill_chunk=args.chunk, kernel_backend=args.kernel_backend,
+        seed=args.seed, fused_decode=args.fused_decode,
+        prefix_entries=args.prefix_cache, admission=admission,
+        evict_patience=args.evict_patience)
+    trace = make_trace(args, cfg, lo, hi)
+    t0 = time.monotonic()
+    fleet.run(trace)
+    wall = time.monotonic() - t0
+    stats = latency_stats(fleet.events)
+    per_class = slo_stats(fleet)
+    print(f"arch={cfg.name} replicas={args.replicas} trace={args.trace} "
+          f"requests={args.requests} slots={args.slots}/replica "
+          f"chunk={args.chunk}")
+    print(f"steps={fleet.step_count} generated={stats['tokens']} "
+          f"wall={wall * 1e3:.0f}ms "
+          f"({stats['tokens'] / wall:.1f} tok/s generated)")
+    for slo, c in per_class.items():
+        print(f"  {slo:<12} submitted={c['submitted']} shed={c['shed']} "
+              f"completed={c['completed']} tokens={c['tokens']} "
+              f"p99_gap={c['p99_step_gap']:.0f} steps")
+    if fleet.prefix is not None:
+        px = fleet.prefix.stats()
+        print(f"  prefix cache: {px['hits']}/{px['lookups']} hits "
+              f"({px['hit_rate']:.1%}), {px['evictions']} evictions, "
+              f"{px['entries']}/{px['capacity']} rows")
+    counts = [0] * args.replicas
+    for r in fleet.placement.values():
+        counts[r] += 1
+    print(f"  placement: {counts} requests/replica "
+          f"(backlog high water {fleet.backlog_high_water})")
     return 0
 
 
@@ -148,6 +216,26 @@ def main(argv=None):
     ap.add_argument("--speculative", type=int, default=0, metavar="K",
                     help="speculative decoding: draft K tokens per verify "
                          "(0 = off)")
+    # fleet mode
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the planned-bytes router "
+                         "(>1, --prefix-cache, --max-backlog or a "
+                         "non-poisson --trace selects fleet mode)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "bursty", "diurnal"),
+                    help="arrival process of the synthetic workload")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="E",
+                    help="shared prefix cache rows fleet-wide (0 = off)")
+    ap.add_argument("--prefix-pool", type=int, default=4,
+                    help="[diurnal] distinct shared prompt heads in the "
+                         "trace")
+    ap.add_argument("--batch-frac", type=float, default=0.0,
+                    help="[diurnal] fraction of requests in the batch SLO "
+                         "class")
+    ap.add_argument("--max-backlog", type=int, default=None,
+                    help="SLO admission control: batch requests queue up "
+                         "to this backlog and are shed past it (default: "
+                         "no admission control)")
     # single-shot mode
     ap.add_argument("--single-shot", action="store_true",
                     help="legacy fixed-batch loop (parity oracle / audio)")
@@ -158,11 +246,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    fleet_mode = (args.replicas > 1 or args.prefix_cache
+                  or args.max_backlog is not None or args.trace != "poisson")
     mesh = make_host_mesh()
     use_mesh = mesh if mesh.devices.size > 1 else None
     if args.single_shot or cfg.family == "audio":
-        if args.fused_decode or args.speculative:
-            ap.error("--fused-decode/--speculative apply to engine mode only")
+        if args.fused_decode or args.speculative or fleet_mode:
+            ap.error("--fused-decode/--speculative/--replicas/--trace apply "
+                     "to engine/fleet mode only")
         args.batch = 4 if args.batch is None else args.batch
         args.prompt_len = 32 if args.prompt_len is None else args.prompt_len
         return run_single_shot(args, cfg, mesh, use_mesh)
@@ -170,6 +261,10 @@ def main(argv=None):
         # don't silently run a very different workload than the user asked
         ap.error("--batch/--prompt-len apply to --single-shot only; "
                  "engine mode sizes the trace with --requests/--prompt-lens")
+    if fleet_mode:
+        if args.speculative:
+            ap.error("--speculative applies to single-engine mode only")
+        return run_fleet(args, cfg)
     return run_engine(args, cfg, mesh, use_mesh)
 
 

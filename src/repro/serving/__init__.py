@@ -15,8 +15,13 @@ matvec).  This package schedules both onto one fixed cache arena:
 - :mod:`engine` — the array work: one jitted masked decode over the
   whole arena per step plus per-slot prefill chunk steps, both routed
   through ``PEContext`` under the PREFILL/DECODE program words.
-- :mod:`trace` — synthetic request traces (Poisson and bursty arrivals)
-  for examples and the throughput benchmark.
+- :mod:`trace` — synthetic request traces (Poisson, bursty and
+  diurnal/heavy-tail arrivals) for examples and the throughput
+  benchmarks.
+- :mod:`fleet` — the scale-out layer (PR 8): N engine replicas behind a
+  planned-free-bytes router, a shared prefix cache (common prompt heads
+  prefill once, fleet-wide), and SLO-aware admission control
+  (interactive vs batch, backlog + shedding under overload).
 
 Two opt-in fast paths (PR 6): ``build_engine(fused_decode=True)`` runs
 the per-layer decode megakernel words, ``build_engine(speculative=k)``
@@ -26,12 +31,17 @@ backend.
 """
 from repro.serving.engine import (ServingEngine, TokenEvent, build_engine,
                                   draft_config_for, latency_stats)
-from repro.serving.scheduler import Request, RequestState, Scheduler
+from repro.serving.fleet import (AdmissionPolicy, Fleet, PrefixCache,
+                                 build_fleet, prefix_key, slo_stats)
+from repro.serving.scheduler import (BATCH, INTERACTIVE, SLO_CLASSES,
+                                     Request, RequestState, Scheduler)
 from repro.serving.slots import (SlotPool, plan_cache_arena, reset_slots,
                                  slot_bytes)
-from repro.serving.trace import bursty_trace, poisson_trace
+from repro.serving.trace import bursty_trace, diurnal_trace, poisson_trace
 
 __all__ = ["ServingEngine", "TokenEvent", "build_engine", "draft_config_for",
            "latency_stats", "Request", "RequestState", "Scheduler",
            "SlotPool", "plan_cache_arena", "slot_bytes", "reset_slots",
-           "poisson_trace", "bursty_trace"]
+           "poisson_trace", "bursty_trace", "diurnal_trace",
+           "Fleet", "PrefixCache", "AdmissionPolicy", "build_fleet",
+           "prefix_key", "slo_stats", "INTERACTIVE", "BATCH", "SLO_CLASSES"]

@@ -46,7 +46,8 @@ from repro.configs.base import ModelConfig
 from repro.core.program import Program
 from repro.runtime import train_loop as tl
 from repro.serving.scheduler import DECODE, Request, Scheduler
-from repro.serving.slots import SlotPool, plan_cache_arena, reset_slots
+from repro.serving.slots import (SlotPool, plan_cache_arena, reset_slots,
+                                 slot_bytes)
 
 
 @dataclass(frozen=True)
@@ -74,7 +75,8 @@ class ServingEngine:
                  max_prefill_chunks_per_step: int = 1,
                  evict_patience: Optional[int] = None,
                  speculative: int = 0, draft_cfg: Optional[ModelConfig] = None,
-                 draft_program: Optional[Program] = None, draft_params=None):
+                 draft_program: Optional[Program] = None, draft_params=None,
+                 admit_hook=None, chunk_hook=None):
         if cfg.family == "audio":
             raise NotImplementedError(
                 "the serving engine targets decoder-only families; audio "
@@ -109,6 +111,15 @@ class ServingEngine:
         self.cache = tl.model_module(cfg).init_cache(cfg, n_slots, max_len)
         self.step_count = 0
         self.events: list = []
+        # fleet seams (serving/fleet.py): admit_hook(engine, state) runs
+        # after a newly admitted request's arena row is reset (a prefix
+        # cache may seed the row and skip prefill), chunk_hook(engine,
+        # state) after every consumed prefill chunk (it may snapshot the
+        # row at a prefix boundary).  Both default to None — the engine
+        # alone never calls out.
+        self.admit_hook = admit_hook
+        self.chunk_hook = chunk_hook
+        self._row_bytes = slot_bytes(cfg, max_len)
 
         make_decode = tl.make_fused_decode_step if program.fused_decode \
             else tl.make_decode_step
@@ -141,6 +152,19 @@ class ServingEngine:
         self._chunk = jax.jit(_chunk, donate_argnums=(1,))
         self._reset = jax.jit(
             lambda cache, slot: reset_slots(cache, jnp.reshape(slot, (1,))),
+            donate_argnums=(0,))
+        # single-row get/put over the arena: the speculative loop's draft
+        # snapshot/restore and the fleet's prefix-cache seed/capture both
+        # move one slot row at a time (jit is lazy — unused paths never
+        # compile)
+        self._row_get = jax.jit(
+            lambda cache, slot: jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, slot, 1, axis=1), cache))
+        self._row_put = jax.jit(
+            lambda cache, row, slot: jax.tree.map(
+                lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                    a, r, slot, axis=1), cache, row),
             donate_argnums=(0,))
 
         # --- speculative machinery (opt-in) ---
@@ -183,15 +207,6 @@ class ServingEngine:
 
             self._draft = jax.jit(_draft, donate_argnums=(1,))
             self._verify = jax.jit(_verify)
-            self._row_get = jax.jit(
-                lambda cache, slot: jax.tree.map(
-                    lambda a: jax.lax.dynamic_slice_in_dim(
-                        a, slot, 1, axis=1), cache))
-            self._row_put = jax.jit(
-                lambda cache, row, slot: jax.tree.map(
-                    lambda a, r: jax.lax.dynamic_update_slice_in_dim(
-                        a, r, slot, axis=1), cache, row),
-                donate_argnums=(0,))
 
     # --- request intake ----------------------------------------------------
 
@@ -204,6 +219,47 @@ class ServingEngine:
             raise ValueError(
                 f"{req.rid}: prompt({len(req.prompt)}) + "
                 f"max_new({req.max_new_tokens}) exceeds max_len={self.max_len}")
+
+    # --- fleet seams (router metrics + prefix-cache row moves) --------------
+
+    @property
+    def arena_row_bytes(self) -> int:
+        """Planned bytes of one slot row (the allocator's row size)."""
+        return self._row_bytes
+
+    @property
+    def free_arena_bytes(self) -> int:
+        """PLANNED free slot-arena bytes: (free slots - queued
+        admissions) x the allocator's row bytes — the deterministic
+        load-balance metric the fleet router ranks replicas by (PR 5's
+        plan sized the arena, so this is plan math, not a runtime
+        guess).  Queued requests are netted out because they hold a
+        claim on a row before the next step leases it; the value goes
+        negative on an oversubscribed replica, which is exactly the
+        ranking the router wants."""
+        return (self.pool.free_count - len(self.sched.queue)) \
+            * self._row_bytes
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.sched.queue)
+
+    def row_snapshot(self, slot: int):
+        """The arena row of `slot` as a standalone pytree (leaves shaped
+        (n_groups, 1, ...)) — what the prefix cache stores."""
+        return self._row_get(self.cache, jnp.int32(slot))
+
+    def seed_row(self, st, row, pos: int) -> None:
+        """Install a cached row into `st`'s slot and fast-forward its
+        prefill cursor: the row must hold exactly the cache state after
+        ``st.seq[:pos]`` (the chunk==sequential invariant then makes the
+        remaining prefill bit-identical to having run the head here)."""
+        if not 0 <= pos <= len(st.req.prompt) - 1:
+            raise ValueError(
+                f"{st.req.rid}: seed pos {pos} outside prompt "
+                f"(len {len(st.req.prompt)}; one token must remain to feed)")
+        self.cache = self._row_put(self.cache, row, jnp.int32(st.slot))
+        st.pos = pos
 
     # --- one engine iteration ----------------------------------------------
 
@@ -221,6 +277,8 @@ class ServingEngine:
                 self.draft_cache = self._reset(self.draft_cache,
                                                jnp.int32(st.slot))
                 self._draft_pos[st.req.rid] = 0
+            if self.admit_hook is not None:
+                self.admit_hook(self, st)
 
         # chunked prefill: bounded work per step, interleaved with decode
         chunked = self.sched.chunk_candidates()
@@ -232,6 +290,8 @@ class ServingEngine:
                 jnp.asarray([st.pos], jnp.int32), jnp.int32(st.slot))
             appended, _ = self.sched.consume_chunk(
                 st, self.prefill_chunk, int(last))
+            if self.chunk_hook is not None:
+                self.chunk_hook(self, st)
             if appended:
                 new_events.append(self._event(st, step))
 

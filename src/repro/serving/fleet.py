@@ -1,0 +1,410 @@
+"""Serving fleet: N engine replicas behind one router (paper §V scale-out).
+
+NeuroTrainer's scale-out story is many memory modules behind one
+programmable dataflow; serving millions of users is the same move one
+level up — N :class:`~repro.serving.engine.ServingEngine` replicas, each
+over its own planner-placed slot arena, behind a router.  Three layers:
+
+- **Router** — every request lands on the replica with the most PLANNED
+  free slot-arena bytes (``ServingEngine.free_arena_bytes``: free slots
+  x the allocator's row bytes — the same deterministic plan math PR 5's
+  ``plan_cache_arena`` sized the arena with, so placement is a pure
+  function of fleet state, never a runtime guess).  Ties break to the
+  shallower queue, then the lower replica index.
+- **Shared prefix cache** — common prompt heads (system prompts,
+  few-shot preambles) prefill ONCE fleet-wide.  Heads are
+  prefill-chunk-aligned, so the chunk==sequential invariant (PR 2)
+  makes a seeded row bit-identical to re-prefilling it: a hit leases
+  the cached row into the target replica's arena (``engine.seed_row``)
+  and the request's prefill cursor skips the head.  Entries lease rows
+  from their own ``SlotPool``-accounted arena (same lease/evict
+  machinery as the engines' slots) and evict LRU.
+- **SLO admission control** (opt-in) — requests carry
+  ``slo="interactive" | "batch"``.  Interactive work always dispatches
+  (the engines' queues + eviction absorb pressure); batch work only
+  dispatches onto a replica with a genuinely free slot, overflows into
+  a fleet-level backlog, and is SHED past ``max_backlog`` — so under
+  overload, interactive tail latency stays bounded while batch goodput
+  degrades gracefully instead of dragging everyone down.
+
+Parity contract (tests/test_fleet.py): a Fleet with one replica, no
+prefix cache and no admission policy is bit-identical per request to a
+single ServingEngine; enabling the prefix cache changes WHERE head rows
+come from, never their bytes, so outputs stay bit-identical too.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.program import Program
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import BATCH, INTERACTIVE, Request
+from repro.serving.slots import SlotPool, plan_cache_arena, slot_bytes
+
+
+def prefix_key(prompt, *, chunk: int, max_chunks: int = 4) -> tuple:
+    """The cacheable chunk-aligned head of `prompt`: the longest multiple
+    of `chunk` that still leaves >= 1 prompt token to feed after the head
+    (logits need a feed), capped at ``max_chunks`` chunks.  Chunked
+    prefill advances the cursor in exact `chunk` strides from 0, so the
+    engine's row state is capturable at every such boundary.  Empty tuple
+    = uncacheable (prompt shorter than one chunk + 1)."""
+    head = min(max_chunks * chunk, (len(prompt) - 1) // chunk * chunk)
+    return tuple(prompt[:head])
+
+
+class PrefixCache:
+    """Fleet-wide LRU of prefilled prompt-head arena rows.
+
+    Values are engine cache-row pytrees (leaves shaped (n_groups, 1,
+    ...)) captured right after a replica's chunked prefill crossed the
+    head boundary.  Capacity is ``entries`` rows; the backing arena is
+    sized and placed by the same allocator as every other arena
+    (``plan_cache_arena`` — ``self.pool.plan`` carries the offsets and
+    prices the cache against an HBM budget like any region), and
+    :class:`SlotPool` does the lease/release accounting while an
+    OrderedDict tracks recency (hits refresh; inserts past capacity
+    evict the coldest entry).
+    """
+
+    def __init__(self, cfg, *, entries: int, max_len: int, chunk: int,
+                 max_chunks: int = 4):
+        if entries < 1:
+            raise ValueError(f"entries must be >= 1, got {entries}")
+        self.chunk = chunk
+        self.max_chunks = max_chunks
+        _, plan = plan_cache_arena(cfg, max_len=max_len, n_slots=entries)
+        self.pool = SlotPool(entries, plan=plan)
+        self.row_bytes = slot_bytes(cfg, max_len)
+        self._rows: OrderedDict = OrderedDict()         # key -> (slot, row)
+        self._n = 0                                     # lease naming tick
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def key_for(self, req: Request) -> tuple:
+        return prefix_key(req.prompt, chunk=self.chunk,
+                          max_chunks=self.max_chunks)
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def lookup(self, key: tuple):
+        """The cached row for `key` (refreshing its recency), else None.
+        Empty keys (uncacheable prompts) are not counted as lookups."""
+        if not key:
+            return None
+        entry = self._rows.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._rows.move_to_end(key)
+        self.hits += 1
+        return entry[1]
+
+    def insert(self, key: tuple, row) -> None:
+        if not key or key in self._rows:
+            return
+        if self.pool.free_count == 0:
+            _, (slot, _) = self._rows.popitem(last=False)   # coldest
+            self.pool.release(slot)
+            self.evictions += 1
+        slot = self.pool.lease(f"prefix-{self._n}")
+        self._n += 1
+        self._rows[key] = (slot, row)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._rows), "capacity": self.pool.n_slots,
+                "hits": self.hits, "misses": self.misses,
+                "lookups": self.lookups, "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 6),
+                "row_bytes": self.row_bytes,
+                "planned_bytes": self.pool.plan.arena_bytes
+                if self.pool.plan else 0}
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """SLO-aware admission: interactive always dispatches; batch only
+    onto a replica with more than ``free_slots_floor`` free slots (the
+    floor reserves headroom for interactive arrivals), overflows into
+    the fleet backlog, and is shed past ``max_backlog``."""
+    max_backlog: int = 64
+    free_slots_floor: int = 0
+
+    def __post_init__(self):
+        if self.max_backlog < 0:
+            raise ValueError(f"max_backlog must be >= 0, got "
+                             f"{self.max_backlog}")
+        if self.free_slots_floor < 0:
+            raise ValueError(f"free_slots_floor must be >= 0, got "
+                             f"{self.free_slots_floor}")
+
+
+class Fleet:
+    """N ServingEngine replicas, one router, shared prefix cache, SLO
+    admission.  cfg/program/params exactly as one engine would take them
+    — all replicas share the immutable program + params and differ only
+    in arena state, so compile once (``build_fleet``) and fan out.
+    """
+
+    def __init__(self, cfg: ModelConfig, program: Program, params, *,
+                 replicas: int, n_slots: int, max_len: int,
+                 prefill_chunk: int = 32, kernel_backend: str = "reference",
+                 mesh=None, prefix_cache: Optional[PrefixCache] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 **engine_kwargs):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if admission is not None and admission.free_slots_floor >= n_slots:
+            raise ValueError(
+                f"free_slots_floor={admission.free_slots_floor} leaves no "
+                f"slot a batch request could ever take (n_slots={n_slots})")
+        if prefix_cache is not None and prefix_cache.chunk != prefill_chunk:
+            raise ValueError(
+                f"prefix cache chunk {prefix_cache.chunk} != engine "
+                f"prefill_chunk {prefill_chunk}: heads would not align "
+                f"with capturable prefill boundaries")
+        self.cfg = cfg
+        self.replicas = replicas
+        self.prefix = prefix_cache
+        self.admission = admission
+        self.step_count = 0
+        self.backlog: deque = deque()           # admitted-later batch work
+        self.shed: list = []                    # rejected batch Requests
+        self.placement: dict = {}               # rid -> replica index
+        self.slo_of: dict = {}                  # rid -> SLO class
+        self.backlog_high_water = 0
+        self._pending: dict = {}                # rid -> prefix key to capture
+        hooks = {}
+        if prefix_cache is not None:
+            hooks = dict(admit_hook=self._on_admit, chunk_hook=self._on_chunk)
+        self.engines = [
+            ServingEngine(cfg, program, params, n_slots=n_slots,
+                          max_len=max_len, prefill_chunk=prefill_chunk,
+                          kernel_backend=kernel_backend, mesh=mesh,
+                          **hooks, **engine_kwargs)
+            for _ in range(replicas)]
+
+    # --- prefix-cache hooks (run inside each engine's step) ----------------
+
+    def _on_admit(self, engine: ServingEngine, st) -> None:
+        """A request's row was just reset: seed it from the prefix cache
+        on a hit, else mark its head for capture when prefill crosses the
+        boundary (misses while a capture is in flight stay misses — the
+        head prefills once per *completed* capture, not per submit)."""
+        key = self.prefix.key_for(st.req)
+        if not key:
+            return
+        row = self.prefix.lookup(key)
+        if row is not None:
+            engine.seed_row(st, row, len(key))
+            self._pending.pop(st.req.rid, None)
+        else:
+            self._pending[st.req.rid] = key
+
+    def _on_chunk(self, engine: ServingEngine, st) -> None:
+        """A prefill chunk landed: if this request owes a head capture and
+        its cursor sits exactly on the head boundary, snapshot the row
+        into the cache (the row holds exactly seq[:pos] at this moment)."""
+        key = self._pending.get(st.req.rid)
+        if key is None or st.pos != len(key):
+            return
+        self.prefix.insert(key, engine.row_snapshot(st.slot))
+        del self._pending[st.req.rid]
+
+    # --- routing / admission ----------------------------------------------
+
+    def _route(self, candidates=None) -> int:
+        """The replica with the most planned free arena bytes (then the
+        shallowest queue, then the lowest index)."""
+        cands = range(self.replicas) if candidates is None else candidates
+        return min(cands, key=lambda r: (-self.engines[r].free_arena_bytes,
+                                         self.engines[r].queue_depth, r))
+
+    def _dispatch_batch(self, req: Request) -> bool:
+        """Place batch work only where a slot is genuinely free (above
+        the interactive headroom floor); False = no replica qualifies."""
+        floor = self.admission.free_slots_floor
+        cands = [r for r in range(self.replicas)
+                 if self.engines[r].pool.free_count
+                 - self.engines[r].queue_depth > floor]
+        if not cands:
+            return False
+        self._submit_to(self._route(cands), req)
+        return True
+
+    def _submit_to(self, r: int, req: Request) -> None:
+        self.engines[r].submit(req)
+        self.placement[req.rid] = r
+
+    def submit(self, req: Request) -> None:
+        """Route one request: interactive dispatches immediately to the
+        best replica; under an AdmissionPolicy, batch waits for a free
+        slot (backlog) or is shed when the backlog is full."""
+        if req.rid in self.slo_of:
+            raise ValueError(f"duplicate request id {req.rid!r}")
+        self.engines[0]._validate(req)          # same max_len fleet-wide
+        self.slo_of[req.rid] = req.slo
+        if self.admission is not None and req.slo == BATCH:
+            if not self._dispatch_batch(req):
+                if len(self.backlog) >= self.admission.max_backlog:
+                    self.shed.append(req)
+                    del self.slo_of[req.rid]    # sheds never produce output
+                    return
+                self.backlog.append(req)
+                self.backlog_high_water = max(self.backlog_high_water,
+                                              len(self.backlog))
+            return
+        self._submit_to(self._route(), req)
+
+    # --- one fleet iteration ----------------------------------------------
+
+    def step(self) -> list:
+        """Drain the batch backlog into freed slots, then advance every
+        replica one engine iteration.  Returns [(replica, TokenEvent)]."""
+        while self.backlog and self._dispatch_batch(self.backlog[0]):
+            self.backlog.popleft()
+        self.step_count += 1
+        events = []
+        for r, eng in enumerate(self.engines):
+            events.extend((r, e) for e in eng.step())
+        return events
+
+    # --- drive to completion ----------------------------------------------
+
+    def run(self, requests=(), max_steps: int = 1_000_000) -> dict:
+        """Feed `requests` at their arrival steps, run until every replica
+        drains and the backlog empties.  Returns {rid: generated tokens}
+        for every request that ran (shed requests are in ``self.shed``)."""
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        for r in pending:
+            self.engines[0]._validate(r)        # fail before any compute
+        i = 0
+        for _ in range(max_steps):
+            while i < len(pending) \
+                    and pending[i].arrival_step <= self.step_count:
+                self.submit(pending[i])
+                i += 1
+            if i == len(pending) and self.idle:
+                return self.results()
+            self.step()
+        raise RuntimeError(f"fleet did not drain in {max_steps} steps")
+
+    @property
+    def idle(self) -> bool:
+        return not self.backlog and all(e.sched.idle for e in self.engines)
+
+    def results(self) -> dict:
+        out: dict = {}
+        for eng in self.engines:
+            out.update(eng.sched.results())
+        return out
+
+    @property
+    def events(self) -> list:
+        """All replicas' TokenEvents (per-replica streams are ordered;
+        use ``slo_stats`` for cross-replica aggregates)."""
+        return [e for eng in self.engines for e in eng.events]
+
+    def stats(self) -> dict:
+        d = {"replicas": self.replicas, "steps": self.step_count,
+             "shed": len(self.shed),
+             "backlog_high_water": self.backlog_high_water,
+             "per_replica": [
+                 {"completed": len(e.sched.finished),
+                  "queue_depth": e.queue_depth,
+                  "free_arena_bytes": e.free_arena_bytes}
+                 for e in self.engines]}
+        if self.prefix is not None:
+            d["prefix"] = self.prefix.stats()
+        return d
+
+
+def slo_stats(fleet: Fleet) -> dict:
+    """Deterministic per-SLO-class metrics of a finished fleet run, in
+    ENGINE STEPS (wall-clock-free; multiply by a modeled step time for
+    seconds — every replica ticks once per fleet step, so step counts
+    are fleet-global).
+
+    Per class: submitted/shed/completed request counts, completed
+    generated tokens, and the p99 inter-token step gap (the tail a
+    latency SLO prices — preemption, queueing and backlog waits all
+    show up as multi-step gaps).
+    """
+    classes = {INTERACTIVE: {"submitted": 0, "shed": 0, "completed": 0,
+                             "tokens": 0, "p99_step_gap": 0.0},
+               BATCH: {"submitted": 0, "shed": 0, "completed": 0,
+                       "tokens": 0, "p99_step_gap": 0.0}}
+    for req in fleet.shed:
+        classes[req.slo]["shed"] += 1
+        classes[req.slo]["submitted"] += 1
+    for rid, slo in fleet.slo_of.items():
+        classes[slo]["submitted"] += 1
+    gaps: dict = {INTERACTIVE: [], BATCH: []}
+    for eng in fleet.engines:
+        for rid, st in eng.sched.finished.items():
+            c = classes[fleet.slo_of[rid]]
+            c["completed"] += 1
+            c["tokens"] += len(st.generated)
+        by_rid: dict = {}
+        for e in eng.events:
+            by_rid.setdefault(e.rid, []).append(e)
+        for rid, evs in by_rid.items():
+            evs = sorted(evs, key=lambda e: e.index)
+            gaps[fleet.slo_of[rid]] += [b.step - a.step
+                                        for a, b in zip(evs, evs[1:])]
+    for slo, g in gaps.items():
+        if g:
+            g.sort()
+            classes[slo]["p99_step_gap"] = float(
+                g[min(len(g) - 1, int(0.99 * len(g)))])
+    return classes
+
+
+def build_fleet(cfg: ModelConfig, *, replicas: int, n_slots: int,
+                max_len: int, prefill_chunk: int = 32,
+                kernel_backend: str = "reference", seed: int = 0,
+                fused_decode: bool = False,
+                prefix_entries: int = 0, prefix_max_chunks: int = 4,
+                admission: Optional[AdmissionPolicy] = None,
+                **engine_kwargs) -> Fleet:
+    """One-stop fleet constructor: compile ONE serve-kind program and one
+    bf16 param set shared by every replica (replicas differ only in
+    arena state), build the prefix cache when ``prefix_entries`` > 0,
+    fan out `replicas` engines.  Mirrors ``build_engine``'s defaults so
+    a 1-replica fleet is the same engine the CLI and benchmark build.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.core.dataflow import MeshSpec
+    from repro.core.program import compile_program
+    from repro.runtime import train_loop as tl
+
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=n_slots,
+                        kind="decode")
+    mesh_spec = MeshSpec(axis_sizes={"data": 1, "model": 1})
+    program = compile_program(cfg, shape, mesh_spec,
+                              fused_decode=fused_decode)
+    params = tl.cast_params(
+        tl.model_module(cfg).init(jax.random.PRNGKey(seed), cfg),
+        jnp.bfloat16)
+    prefix = None
+    if prefix_entries:
+        prefix = PrefixCache(cfg, entries=prefix_entries, max_len=max_len,
+                             chunk=prefill_chunk,
+                             max_chunks=prefix_max_chunks)
+    return Fleet(cfg, program, params, replicas=replicas, n_slots=n_slots,
+                 max_len=max_len, prefill_chunk=prefill_chunk,
+                 kernel_backend=kernel_backend, prefix_cache=prefix,
+                 admission=admission, **engine_kwargs)

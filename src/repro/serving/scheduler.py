@@ -32,6 +32,14 @@ from repro.serving.slots import SlotPool
 
 QUEUED, PREFILL, DECODE, FINISHED = "QUEUED", "PREFILL", "DECODE", "FINISHED"
 
+# SLO classes (serving/fleet.py): INTERACTIVE requests are latency-bound
+# (a user is waiting on every token), BATCH requests are throughput-bound
+# offline work (document pipelines, evals) that admission control may
+# queue or shed under overload.  The engine itself is SLO-blind — the
+# class only steers the fleet router.
+INTERACTIVE, BATCH = "interactive", "batch"
+SLO_CLASSES = (INTERACTIVE, BATCH)
+
 
 @dataclass(frozen=True)
 class Request:
@@ -39,6 +47,7 @@ class Request:
     prompt: tuple                       # token ids
     max_new_tokens: int
     arrival_step: int = 0
+    slo: str = INTERACTIVE
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
@@ -46,6 +55,9 @@ class Request:
             raise ValueError(f"{self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"{self.rid}: max_new_tokens must be >= 1")
+        if self.slo not in SLO_CLASSES:
+            raise ValueError(f"{self.rid}: unknown SLO class {self.slo!r} "
+                             f"(one of {SLO_CLASSES})")
 
 
 @dataclass

@@ -4,12 +4,29 @@ Poisson arrivals (exponential inter-arrival gaps, quantised to engine
 steps), log-uniform-ish prompt lengths in a [lo, hi] band, random token
 ids.  Deterministic per seed — the parity tests replay the same trace
 through the engine and the single-shot oracle.
+
+Three generators, in rising realism:
+
+- :func:`poisson_trace` — memoryless steady state (the optimist's load).
+- :func:`bursty_trace` — whole bursts land on one step (retries, fan-out
+  callers, batch jobs synchronising).
+- :func:`diurnal_trace` — a day-shaped rate curve with heavy-tailed
+  inter-arrival gaps, an interactive/batch SLO mix, and a pool of shared
+  prompt heads (system prompts, few-shot preambles) that the fleet's
+  prefix cache deduplicates.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import BATCH, INTERACTIVE, Request
+
+
+def _prompt_len(rng, lo: int, hi: int) -> int:
+    """One log-uniform prompt length clamped to the [lo, hi] band (short
+    interactive prompts and long documents both appear)."""
+    plen = int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
+    return max(lo, min(hi, plen))
 
 
 def poisson_trace(n_requests: int, *, vocab_size: int,
@@ -30,8 +47,7 @@ def poisson_trace(n_requests: int, *, vocab_size: int,
     reqs = []
     for i in range(n_requests):
         t += rng.exponential(mean_interarrival_steps)
-        plen = int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
-        plen = max(lo, min(hi, plen))
+        plen = _prompt_len(rng, lo, hi)
         prompt = rng.integers(0, vocab_size, size=plen)
         reqs.append(Request(rid=f"req-{i:04d}", prompt=tuple(int(x) for x in prompt),
                             max_new_tokens=gen_tokens, arrival_step=int(t)))
@@ -66,8 +82,7 @@ def bursty_trace(n_requests: int, *, vocab_size: int,
     i = 0
     while i < n_requests:
         for _ in range(min(burst_size, n_requests - i)):
-            plen = int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
-            plen = max(lo, min(hi, plen))
+            plen = _prompt_len(rng, lo, hi)
             prompt = rng.integers(0, vocab_size, size=plen)
             reqs.append(Request(rid=f"req-{i:04d}",
                                 prompt=tuple(int(x) for x in prompt),
@@ -75,4 +90,77 @@ def bursty_trace(n_requests: int, *, vocab_size: int,
             i += 1
         t += max(1, int(round(burst_gap_steps
                               * rng.uniform(0.75, 1.25))))
+    return reqs
+
+
+def diurnal_trace(n_requests: int, *, vocab_size: int,
+                  prompt_lens: tuple = (16, 512), gen_tokens: int = 32,
+                  period_steps: int = 64,
+                  peak_interarrival_steps: float = 0.5,
+                  trough_interarrival_steps: float = 8.0,
+                  tail_prob: float = 0.05, tail_shape: float = 1.5,
+                  batch_frac: float = 0.0,
+                  prefix_pool: int = 0, prefix_len: int = 0,
+                  seed: int = 0) -> list:
+    """Diurnal + heavy-tail arrivals with SLO classes and shared heads.
+
+    The arrival rate follows a day-shaped cosine: the mean inter-arrival
+    gap interpolates log-linearly between ``peak_interarrival_steps``
+    (rush hour) and ``trough_interarrival_steps`` (3am) over
+    ``period_steps``.  Gaps are exponential at the instantaneous rate,
+    except a ``tail_prob`` fraction are multiplied by a Pareto(
+    ``tail_shape``) draw — shape < 2 gives the infinite-variance lull
+    tail real traffic shows (a Poisson fit under-predicts both the
+    clumps and the silences).
+
+    Each request is BATCH with probability ``batch_frac`` (else
+    INTERACTIVE) — the admission-control mix.  With ``prefix_pool`` > 0,
+    every request's prompt starts with one of ``prefix_pool`` shared
+    heads of ``prefix_len`` tokens (drawn with a quadratic skew, so a
+    few heads dominate like production system prompts do) followed by a
+    unique tail; the fleet's prefix cache exists to prefill those heads
+    once.
+
+    Same determinism contract as :func:`poisson_trace`: the request
+    list, classes and heads are a pure function of the arguments.
+    """
+    lo, hi = prompt_lens
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad prompt_lens {prompt_lens}")
+    if prefix_pool and not 0 < prefix_len < hi:
+        raise ValueError(
+            f"prefix_len must be in (0, {hi}) with prefix_pool, "
+            f"got {prefix_len}")
+    if not 0.0 < peak_interarrival_steps <= trough_interarrival_steps:
+        raise ValueError("need 0 < peak_interarrival <= trough_interarrival")
+    rng = np.random.default_rng(seed)
+    heads = [tuple(int(x) for x in rng.integers(0, vocab_size,
+                                                size=prefix_len))
+             for _ in range(prefix_pool)]
+    log_peak = np.log(peak_interarrival_steps)
+    log_trough = np.log(trough_interarrival_steps)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        # day position in [0, 1): 0 = peak, 0.5 = trough
+        day = (t % period_steps) / period_steps
+        mix = 0.5 - 0.5 * np.cos(2.0 * np.pi * day)      # 0 @ peak, 1 @ trough
+        mean_gap = float(np.exp(log_peak + mix * (log_trough - log_peak)))
+        gap = rng.exponential(mean_gap)
+        if rng.uniform() < tail_prob:
+            gap *= rng.pareto(tail_shape) + 1.0
+        t += gap
+        plen = _prompt_len(rng, lo, hi)
+        if heads:
+            plen = max(plen, prefix_len + 1)             # a tail must remain
+            head = heads[int(prefix_pool * rng.uniform() ** 2)]
+            tail = rng.integers(0, vocab_size, size=plen - prefix_len)
+            prompt = head + tuple(int(x) for x in tail)
+        else:
+            prompt = tuple(int(x) for x in
+                           rng.integers(0, vocab_size, size=plen))
+        slo = BATCH if rng.uniform() < batch_frac else INTERACTIVE
+        reqs.append(Request(rid=f"req-{i:04d}", prompt=prompt,
+                            max_new_tokens=gen_tokens, arrival_step=int(t),
+                            slo=slo))
     return reqs

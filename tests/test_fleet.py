@@ -1,0 +1,266 @@
+"""Fleet invariants: routing, prefix cache and admission change WHERE
+and WHEN work runs, never WHAT it computes.
+
+The acceptance contract: a Fleet with one replica and no prefix cache is
+bit-identical per request to a bare ServingEngine; enabling the shared
+prefix cache changes where head rows come from (a lease instead of a
+re-prefill), so outputs stay bit-identical too.  Admission control is
+exact arithmetic over slots and backlog capacity — asserted to the
+request.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import compile_program
+from repro.core.dataflow import MeshSpec
+from repro.models import transformer as tfm
+from repro.runtime import train_loop as tl
+from repro.serving import (BATCH, INTERACTIVE, AdmissionPolicy, Fleet,
+                           PrefixCache, Request, ServingEngine, prefix_key,
+                           slo_stats)
+
+MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1}, batch_axes=("data",))
+
+
+def build(arch: str, *, n_slots: int, max_len: int):
+    cfg = get_reduced(arch)
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=n_slots,
+                        kind="decode")
+    program = compile_program(cfg, shape, MESH1)
+    params = tl.cast_params(tfm.init(jax.random.PRNGKey(0), cfg),
+                            jnp.bfloat16)
+    return cfg, program, params
+
+
+def mixed_prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [tuple(int(x) for x in rng.integers(0, cfg.vocab_size, size=l))
+            for l in lens]
+
+
+def shared_head_prompts(cfg, head_len, tail_lens, seed=0):
+    """Prompts sharing one chunk-aligned head, unique tails."""
+    rng = np.random.default_rng(seed)
+    head = tuple(int(x) for x in rng.integers(0, cfg.vocab_size,
+                                              size=head_len))
+    return [head + tuple(int(x) for x in
+                         rng.integers(0, cfg.vocab_size, size=t))
+            for t in tail_lens]
+
+
+# ---------------------------------------------------------------------------
+# prefix_key
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_key_chunk_aligned_and_feed_preserving():
+    p = tuple(range(20))
+    # longest chunk multiple leaving >= 1 feed token
+    assert prefix_key(p, chunk=8) == p[:16]
+    # exact-multiple prompt backs off one chunk (a feed token must remain)
+    assert prefix_key(tuple(range(16)), chunk=8) == tuple(range(8))
+    # shorter than chunk + 1: uncacheable
+    assert prefix_key(tuple(range(8)), chunk=8) == ()
+    assert prefix_key(tuple(range(3)), chunk=8) == ()
+    # max_chunks caps the head
+    assert prefix_key(tuple(range(100)), chunk=8, max_chunks=2) \
+        == tuple(range(16))
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache bookkeeping (no engine involved)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_lru_eviction_and_accounting():
+    cfg = get_reduced("qwen2-0.5b")
+    pc = PrefixCache(cfg, entries=2, max_len=16, chunk=4)
+    assert pc.pool.plan.arena_bytes >= 2 * pc.row_bytes
+    a, b, c = (1, 2, 3, 4), (5, 6, 7, 8), (9, 10, 11, 12)
+    pc.insert(a, "row-a")
+    pc.insert(b, "row-b")
+    assert pc.pool.free_count == 0
+    assert pc.lookup(a) == "row-a"                   # refreshes a's recency
+    pc.insert(c, "row-c")                            # evicts b (coldest)
+    assert pc.evictions == 1
+    assert pc.lookup(b) is None
+    assert pc.lookup(a) == "row-a" and pc.lookup(c) == "row-c"
+    assert pc.pool.free_count == 0                   # lease/release balanced
+    # empty keys are neither stored nor counted
+    n = pc.lookups
+    assert pc.lookup(()) is None
+    pc.insert((), "row-x")
+    assert pc.lookups == n and len(pc._rows) == 2
+    st = pc.stats()
+    assert st["hits"] == 3 and st["misses"] == 1 and st["evictions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Parity: fleet == engine (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_fleet_bit_identical_to_engine():
+    """One replica, no prefix cache, no admission: the fleet IS the
+    engine — identical results and identical step count."""
+    MAX_LEN, GEN = 48, 8
+    cfg, program, params = build("qwen2-0.5b", n_slots=3, max_len=MAX_LEN)
+    prompts = mixed_prompts(cfg, [17, 4, 23, 9, 31, 6], seed=1)
+    reqs = [Request(rid=f"r{i}", prompt=p, max_new_tokens=GEN,
+                    arrival_step=2 * i)
+            for i, p in enumerate(prompts)]
+    engine = ServingEngine(cfg, program, params, n_slots=3, max_len=MAX_LEN,
+                           prefill_chunk=8)
+    want = engine.run(reqs)
+    fleet = Fleet(cfg, program, params, replicas=1, n_slots=3,
+                  max_len=MAX_LEN, prefill_chunk=8)
+    got = fleet.run(reqs)
+    assert got == want
+    assert fleet.step_count == engine.step_count
+
+
+def test_prefix_cache_is_bit_invisible_and_hits():
+    """Shared heads: with the cache, later requests lease the head row
+    instead of re-prefilling — outputs bit-identical, hits counted."""
+    MAX_LEN, GEN, CHUNK = 48, 6, 8
+    cfg, program, params = build("qwen2-0.5b", n_slots=2, max_len=MAX_LEN)
+    prompts = shared_head_prompts(cfg, 2 * CHUNK, [5, 9, 3, 7], seed=2)
+    reqs = [Request(rid=f"r{i}", prompt=p, max_new_tokens=GEN,
+                    arrival_step=3 * i)
+            for i, p in enumerate(prompts)]
+    plain = Fleet(cfg, program, params, replicas=1, n_slots=2,
+                  max_len=MAX_LEN, prefill_chunk=CHUNK)
+    want = plain.run(reqs)
+    pc = PrefixCache(cfg, entries=2, max_len=MAX_LEN, chunk=CHUNK)
+    cached = Fleet(cfg, program, params, replicas=1, n_slots=2,
+                   max_len=MAX_LEN, prefill_chunk=CHUNK, prefix_cache=pc)
+    got = cached.run(reqs)
+    assert got == want
+    assert pc.hits >= 2, pc.stats()                  # head prefilled once
+    assert pc.misses >= 1
+    # the cache can only shorten prefill, never lengthen it
+    assert cached.step_count <= plain.step_count
+
+
+def test_prefix_cache_shared_across_replicas():
+    """The cache is fleet-global: a head captured on one replica seeds
+    requests routed to another."""
+    MAX_LEN, GEN, CHUNK = 48, 5, 8
+    cfg, program, params = build("qwen2-0.5b", n_slots=1, max_len=MAX_LEN)
+    prompts = shared_head_prompts(cfg, CHUNK, [4, 6, 3, 5], seed=3)
+    reqs = [Request(rid=f"r{i}", prompt=p, max_new_tokens=GEN,
+                    arrival_step=4 * i)
+            for i, p in enumerate(prompts)]
+    pc = PrefixCache(cfg, entries=2, max_len=MAX_LEN, chunk=CHUNK)
+    fleet = Fleet(cfg, program, params, replicas=2, n_slots=1,
+                  max_len=MAX_LEN, prefill_chunk=CHUNK, prefix_cache=pc)
+    fleet.run(reqs)
+    assert len(set(fleet.placement.values())) == 2   # both replicas used
+    assert pc.hits >= 1
+    # parity vs a cache-less single engine
+    engine = ServingEngine(cfg, program, params, n_slots=2, max_len=MAX_LEN,
+                           prefill_chunk=CHUNK)
+    want = engine.run(reqs)
+    assert fleet.results() == want
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def test_router_balances_on_planned_free_bytes():
+    MAX_LEN = 32
+    cfg, program, params = build("qwen2-0.5b", n_slots=2, max_len=MAX_LEN)
+    fleet = Fleet(cfg, program, params, replicas=2, n_slots=2,
+                  max_len=MAX_LEN, prefill_chunk=8)
+    prompts = mixed_prompts(cfg, [9, 9, 9, 9], seed=4)
+    for i, p in enumerate(prompts):
+        fleet.submit(Request(rid=f"r{i}", prompt=p, max_new_tokens=2))
+    # queued admissions count against planned free bytes, so equal-sized
+    # submissions alternate replicas instead of piling onto replica 0
+    placed = [fleet.placement[f"r{i}"] for i in range(4)]
+    assert placed == [0, 1, 0, 1]
+    with pytest.raises(ValueError, match="duplicate"):
+        fleet.submit(Request(rid="r0", prompt=prompts[0], max_new_tokens=2))
+
+
+def test_fleet_constructor_validation():
+    MAX_LEN = 16
+    cfg, program, params = build("qwen2-0.5b", n_slots=1, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="replicas"):
+        Fleet(cfg, program, params, replicas=0, n_slots=1, max_len=MAX_LEN)
+    pc = PrefixCache(cfg, entries=1, max_len=MAX_LEN, chunk=4)
+    with pytest.raises(ValueError, match="chunk"):
+        Fleet(cfg, program, params, replicas=1, n_slots=1, max_len=MAX_LEN,
+              prefill_chunk=8, prefix_cache=pc)
+    with pytest.raises(ValueError, match="free_slots_floor"):
+        Fleet(cfg, program, params, replicas=1, n_slots=1, max_len=MAX_LEN,
+              admission=AdmissionPolicy(free_slots_floor=1))
+    with pytest.raises(ValueError, match="SLO"):
+        Request(rid="x", prompt=(1, 2), max_new_tokens=1, slo="bulk")
+
+
+# ---------------------------------------------------------------------------
+# SLO admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_sheds_batch_past_backlog_and_drains():
+    """Exact arithmetic: 2 slots, max_backlog=1.  Four batch arrivals →
+    two dispatch, one backlogs (and later drains to completion), one is
+    shed.  Interactive always dispatches."""
+    MAX_LEN, GEN = 32, 4
+    cfg, program, params = build("qwen2-0.5b", n_slots=2, max_len=MAX_LEN)
+    fleet = Fleet(cfg, program, params, replicas=1, n_slots=2,
+                  max_len=MAX_LEN, prefill_chunk=8,
+                  admission=AdmissionPolicy(max_backlog=1))
+    prompts = mixed_prompts(cfg, [9, 9, 9, 9, 9], seed=5)
+    reqs = [Request(rid=f"b{i}", prompt=p, max_new_tokens=GEN, slo=BATCH)
+            for i, p in enumerate(prompts[:4])]
+    reqs.append(Request(rid="i0", prompt=prompts[4], max_new_tokens=GEN,
+                        slo=INTERACTIVE))
+    for r in reqs:
+        fleet.submit(r)
+    assert [r.rid for r in fleet.shed] == ["b3"]
+    assert [r.rid for r in fleet.backlog] == ["b2"]
+    assert "i0" in fleet.placement                   # interactive admitted
+    while not fleet.idle:
+        fleet.step()
+    results = fleet.results()
+    assert set(results) == {"b0", "b1", "b2", "i0"}  # backlog drained
+    per = slo_stats(fleet)
+    assert per[BATCH]["submitted"] == 4 and per[BATCH]["shed"] == 1
+    assert per[BATCH]["completed"] == 3
+    assert per[INTERACTIVE]["completed"] == 1
+    assert per[INTERACTIVE]["shed"] == 0
+    st = fleet.stats()
+    assert st["shed"] == 1 and st["backlog_high_water"] == 1
+
+
+def test_free_slots_floor_reserves_interactive_headroom():
+    """floor=1 on a 2-slot replica: batch may take at most one slot; the
+    reserved slot only ever serves interactive work."""
+    MAX_LEN = 32
+    cfg, program, params = build("qwen2-0.5b", n_slots=2, max_len=MAX_LEN)
+    fleet = Fleet(cfg, program, params, replicas=1, n_slots=2,
+                  max_len=MAX_LEN, prefill_chunk=8,
+                  admission=AdmissionPolicy(max_backlog=4,
+                                            free_slots_floor=1))
+    prompts = mixed_prompts(cfg, [9, 9, 9], seed=6)
+    fleet.submit(Request(rid="b0", prompt=prompts[0], max_new_tokens=2,
+                         slo=BATCH))
+    fleet.submit(Request(rid="b1", prompt=prompts[1], max_new_tokens=2,
+                         slo=BATCH))
+    assert "b0" in fleet.placement                   # one slot above floor
+    assert [r.rid for r in fleet.backlog] == ["b1"]  # floor holds b1 back
+    fleet.submit(Request(rid="i0", prompt=prompts[2], max_new_tokens=2,
+                         slo=INTERACTIVE))
+    assert "i0" in fleet.placement                   # headroom was for this
+    while not fleet.idle:
+        fleet.step()
+    assert set(fleet.results()) == {"b0", "b1", "i0"}

@@ -1,0 +1,72 @@
+"""CI self-verification: tools/check_shards.py catches shard drift.
+
+The acceptance case is the NEGATIVE one — a test file missing from every
+shard must fail the check (that is the silent-zero-coverage failure mode
+the tool exists for).  Also pinned: duplicates, stale entries, and that
+the REAL workflow currently passes (so the lint job is green and the
+tool is exercised against the artifact it guards).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import check_shards  # noqa: E402  (tools/ is not a package)
+
+SHARDS = {"a": ["tests/test_x.py", "tests/test_y.py"],
+          "b": ["tests/test_z.py"]}
+FILES = ["tests/test_x.py", "tests/test_y.py", "tests/test_z.py"]
+
+
+def test_bijection_passes():
+    assert check_shards.check(FILES, SHARDS) == []
+
+
+def test_unassigned_file_fails():
+    bad = check_shards.check(FILES + ["tests/test_new.py"], SHARDS)
+    assert len(bad) == 1
+    assert "test_new.py" in bad[0] and "not assigned" in bad[0]
+
+
+def test_duplicated_file_fails():
+    dup = {"a": SHARDS["a"], "b": SHARDS["b"] + ["tests/test_x.py"]}
+    bad = check_shards.check(FILES, dup)
+    assert any("multiple shards" in b and "test_x.py" in b for b in bad)
+
+
+def test_stale_entry_fails():
+    bad = check_shards.check(FILES[:-1], SHARDS)
+    assert any("not on disk" in b and "test_z.py" in b for b in bad)
+
+
+def test_real_workflow_parses_and_passes():
+    shards = check_shards.parse_shards(check_shards.WORKFLOW)
+    assert set(shards) == {"kernels", "models", "system"}
+    assert "tests/test_fleet.py" in shards["system"]
+    from glob import glob
+    files = sorted(os.path.relpath(p, ROOT).replace(os.sep, "/")
+                   for p in glob(os.path.join(ROOT, "tests", "test_*.py")))
+    assert check_shards.check(files, shards) == []
+
+
+def test_missing_matrix_is_an_error(tmp_path):
+    wf = tmp_path / "ci.yml"
+    wf.write_text("jobs:\n  tests:\n    runs-on: ubuntu-latest\n")
+    with pytest.raises(SystemExit, match="shard"):
+        check_shards.parse_shards(str(wf))
+
+
+def test_cli_exit_codes(tmp_path):
+    """End-to-end: the script exits 0 on the real repo and nonzero when
+    pointed at a workflow missing a file (the CI contract)."""
+    env = dict(os.environ)
+    proc = subprocess.run([sys.executable, "tools/check_shards.py"],
+                          cwd=ROOT, capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "PASS" in proc.stdout

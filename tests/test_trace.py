@@ -1,0 +1,130 @@
+"""Trace-generator properties: deterministic, correctly-rated, and (for
+the diurnal generator) actually day-shaped and heavy-tailed.
+
+Everything asserts on the generated Request lists — no engine, no jax;
+these are pure numpy generators and the fleet parity tests replay them
+bit-for-bit, so the contract here is shape + determinism.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (BATCH, INTERACTIVE, bursty_trace, diurnal_trace,
+                           poisson_trace)
+
+VOCAB = 1000
+
+
+def gaps(reqs):
+    arr = [r.arrival_step for r in reqs]
+    return [b - a for a, b in zip(arr, arr[1:])]
+
+
+# ---------------------------------------------------------------------------
+# Determinism + validation (all three generators)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gen", [
+    lambda s: poisson_trace(40, vocab_size=VOCAB, seed=s),
+    lambda s: bursty_trace(40, vocab_size=VOCAB, seed=s),
+    lambda s: diurnal_trace(40, vocab_size=VOCAB, batch_frac=0.4,
+                            prefix_pool=2, prefix_len=8, seed=s),
+])
+def test_trace_deterministic_under_seed(gen):
+    a, b = gen(7), gen(7)
+    assert [(r.rid, r.prompt, r.arrival_step, r.slo) for r in a] \
+        == [(r.rid, r.prompt, r.arrival_step, r.slo) for r in b]
+    c = gen(8)
+    assert [r.arrival_step for r in a] != [r.arrival_step for r in c] \
+        or [r.prompt for r in a] != [r.prompt for r in c]
+
+
+def test_trace_validation_errors():
+    with pytest.raises(ValueError, match="prompt_lens"):
+        poisson_trace(4, vocab_size=VOCAB, prompt_lens=(0, 8))
+    with pytest.raises(ValueError, match="burst"):
+        bursty_trace(4, vocab_size=VOCAB, burst_size=0)
+    with pytest.raises(ValueError, match="prefix_len"):
+        diurnal_trace(4, vocab_size=VOCAB, prompt_lens=(4, 16),
+                      prefix_pool=2, prefix_len=16)
+    with pytest.raises(ValueError, match="interarrival"):
+        diurnal_trace(4, vocab_size=VOCAB, peak_interarrival_steps=4.0,
+                      trough_interarrival_steps=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Rate / shape properties
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_mean_rate_and_prompt_band():
+    N, MEAN = 400, 3.0
+    reqs = poisson_trace(N, vocab_size=VOCAB, prompt_lens=(8, 64),
+                         mean_interarrival_steps=MEAN, seed=0)
+    assert len(reqs) == N
+    mean_gap = reqs[-1].arrival_step / (N - 1)
+    assert 0.8 * MEAN < mean_gap < 1.2 * MEAN
+    for r in reqs:
+        assert 8 <= len(r.prompt) <= 64
+        assert all(0 <= t < VOCAB for t in r.prompt)
+        assert r.slo == INTERACTIVE                  # default class
+
+
+def test_bursty_whole_bursts_share_one_step():
+    reqs = bursty_trace(22, vocab_size=VOCAB, burst_size=5,
+                        burst_gap_steps=16, seed=1)
+    by_step: dict = {}
+    for r in reqs:
+        by_step.setdefault(r.arrival_step, []).append(r)
+    sizes = [len(v) for _, v in sorted(by_step.items())]
+    assert sizes == [5, 5, 5, 5, 2]                  # last burst truncated
+    arrivals = sorted(by_step)
+    assert all(12 <= b - a <= 20 for a, b in zip(arrivals, arrivals[1:]))
+
+
+def test_diurnal_rate_follows_the_day_curve():
+    """Arrivals near the cosine peak (day phase ~0) must be denser than
+    near the trough (~0.5): bucket by phase, compare counts."""
+    PERIOD = 64
+    reqs = diurnal_trace(600, vocab_size=VOCAB, period_steps=PERIOD,
+                         peak_interarrival_steps=0.5,
+                         trough_interarrival_steps=8.0, tail_prob=0.0,
+                         seed=2)
+    phases = [(r.arrival_step % PERIOD) / PERIOD for r in reqs]
+    peak = sum(1 for p in phases if p < 0.25 or p >= 0.75)
+    trough = sum(1 for p in phases if 0.25 <= p < 0.75)
+    assert peak > 2 * trough, (peak, trough)
+
+
+def test_diurnal_heavy_tail_stretches_the_max_gap():
+    """The Pareto-multiplied lulls make the max gap far exceed the mean
+    gap — the dispersion a pure exponential never shows."""
+    kw = dict(vocab_size=VOCAB, period_steps=10_000,   # flat: isolate tails
+              peak_interarrival_steps=2.0, trough_interarrival_steps=2.0,
+              seed=3)
+    tail = diurnal_trace(500, tail_prob=0.3, tail_shape=1.1, **kw)
+    none = diurnal_trace(500, tail_prob=0.0, **kw)
+    g_tail, g_none = gaps(tail), gaps(none)
+    assert max(g_tail) > 3 * max(g_none), (max(g_tail), max(g_none))
+    assert max(g_tail) > 10 * np.mean(g_tail)
+
+
+def test_diurnal_slo_mix_and_shared_heads():
+    N, FRAC, POOL, PLEN = 300, 0.5, 3, 8
+    reqs = diurnal_trace(N, vocab_size=VOCAB, prompt_lens=(4, 32),
+                         batch_frac=FRAC, prefix_pool=POOL,
+                         prefix_len=PLEN, seed=4)
+    n_batch = sum(1 for r in reqs if r.slo == BATCH)
+    assert 0.35 * N < n_batch < 0.65 * N
+    assert {r.slo for r in reqs} == {BATCH, INTERACTIVE}
+    heads = {r.prompt[:PLEN] for r in reqs}
+    assert 1 < len(heads) <= POOL                    # a few shared heads
+    for r in reqs:
+        assert len(r.prompt) > PLEN                  # a tail always remains
+    # skewed draw: the hottest head dominates (production system prompts)
+    counts = sorted((sum(1 for r in reqs if r.prompt[:PLEN] == h)
+                     for h in heads), reverse=True)
+    assert counts[0] > N / POOL
+    # without a pool, prompts are unique tails only
+    solo = diurnal_trace(50, vocab_size=VOCAB, seed=4)
+    assert all(r.slo == INTERACTIVE for r in solo)

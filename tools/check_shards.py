@@ -1,0 +1,85 @@
+"""Shard-coverage gate: every test module runs in exactly one CI shard.
+
+    python tools/check_shards.py
+
+The tier-1 ``tests`` job shards ``tests/test_*.py`` into parallel
+module chunks inside ``.github/workflows/ci.yml``.  The shard lists are
+hand-maintained, so two silent failure modes exist:
+
+  * a new test file lands but is never added to a shard — it simply
+    never runs in CI (green checkmark, zero coverage);
+  * a file is listed in two shards (wasted runtime, or worse, a later
+    "dedupe" drops it from both).
+
+This tool parses the workflow's shard matrix with PyYAML and asserts a
+bijection between ``tests/test_*.py`` on disk and the union of shard
+file lists.  Stale entries (listed but deleted from disk) also fail.
+Exit nonzero listing every violation (CI: the ``lint`` job).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from glob import glob
+
+import yaml
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(ROOT, ".github", "workflows", "ci.yml")
+
+
+def parse_shards(workflow_path: str) -> dict:
+    """{shard_name: [test file, ...]} from the tests job's matrix."""
+    with open(workflow_path) as f:
+        wf = yaml.safe_load(f)
+    shards = (wf.get("jobs", {}).get("tests", {})
+                .get("strategy", {}).get("matrix", {}).get("shard"))
+    if not shards:
+        raise SystemExit(
+            f"{workflow_path}: no jobs.tests.strategy.matrix.shard list "
+            f"(did the tests job move? update tools/check_shards.py)")
+    return {s["name"]: s["files"].split() for s in shards}
+
+
+def check(test_files: list, shards: dict) -> list:
+    """Violation strings (empty = bijection holds).
+
+    ``test_files`` are repo-relative (``tests/test_x.py``), as are the
+    shard entries.
+    """
+    bad = []
+    seen: dict = {}
+    for name, files in shards.items():
+        for f in files:
+            seen.setdefault(f, []).append(name)
+    for f, where in sorted(seen.items()):
+        if len(where) > 1:
+            bad.append(f"{f}: in multiple shards {sorted(where)}")
+        if f not in test_files:
+            bad.append(f"{f}: listed in shard '{where[0]}' but not on disk")
+    for f in sorted(test_files):
+        if f not in seen:
+            bad.append(f"{f}: not assigned to any CI shard "
+                       f"(add it to one shard in .github/workflows/ci.yml)")
+    return bad
+
+
+def main() -> int:
+    test_files = sorted(
+        os.path.relpath(p, ROOT).replace(os.sep, "/")
+        for p in glob(os.path.join(ROOT, "tests", "test_*.py")))
+    shards = parse_shards(WORKFLOW)
+    bad = check(test_files, shards)
+    if bad:
+        print("[check_shards] FAIL:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    n = sum(len(v) for v in shards.values())
+    print(f"[check_shards] PASS: {n} test modules across "
+          f"{len(shards)} shards, one shard each")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
