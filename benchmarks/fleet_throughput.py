@@ -12,12 +12,24 @@ never move with runner load (same contract as ``serve_throughput``'s
                                           pred_prefix_hit_rate
   fleet_pred/{arch}/overload/interactive  pred_p99_ms, pred_goodput
   fleet_pred/{arch}/overload/batch        pred_p99_ms, pred_goodput
+  fleet_pred/{arch}/elastic               pred_goodput, pred_replica_steps,
+                                          pred_goodput_vs_fixed
+  fleet_pred/{arch}/recovery              pred_recovery_steps, pred_goodput
 
 The overload pair is the SLO story the gate pins: the trace
 oversubscribes the arenas at peak, admission backlogs + sheds batch
 work, and the gate holds interactive pred_p99_ms DOWN while batch
 pred_goodput degrades (graceful, not collapsed — its baseline value is
 the degraded-but-nonzero level).
+
+The elastic pair is the PR 9 story: on a diurnal trace that STARTS at
+the 3am trough (``day_phase=0.5``), the autoscaler's replica-step bill
+(``pred_replica_steps`` — arena-holding replicas summed over steps,
+gated LOWER) undercuts a fixed fleet provisioned for peak, while
+``pred_goodput_vs_fixed`` pins how much goodput that saving costs.  The
+recovery row kills the busiest replica mid-run and gates how many steps
+the ejected requests need to finish elsewhere (``pred_recovery_steps``,
+lower), with outputs bit-identical by the eviction contract.
 
     PYTHONPATH=src python -m benchmarks.fleet_throughput [--smoke]
 
@@ -30,8 +42,8 @@ import argparse
 from benchmarks.common import row
 from repro.configs import get_reduced
 from repro.core.program import extract_ops
-from repro.serving import (AdmissionPolicy, build_fleet, diurnal_trace,
-                           slo_stats)
+from repro.serving import (AdmissionPolicy, Autoscaler, build_fleet,
+                           diurnal_trace, slo_stats)
 from repro.tuner import tune_fused_decode
 
 
@@ -90,6 +102,64 @@ def bench_pred(arch: str, *, replicas: int, slots: int, requests: int,
             f"completed={c['completed']} steps={fleet.step_count}")
 
 
+def bench_elastic(arch: str, *, slots: int, requests: int,
+                  prompt_lens: tuple, gen: int, chunk: int,
+                  max_replicas: int, cooldown: int, kill_at: int,
+                  seed: int = 0, tag: str = "") -> None:
+    """Elastic rows: autoscaled capacity bill vs a peak-provisioned
+    fixed fleet on the same trough-starting diurnal trace, plus the
+    replica-death recovery tail.  Deterministic like ``bench_pred``:
+    real scheduling, cost-modeled clock."""
+    cfg = get_reduced(arch)
+    fd = tune_fused_decode(extract_ops(cfg), tokens=slots)
+    step_s = fd["fused_s"] * cfg.n_layers
+    mk = dict(n_slots=slots, max_len=prompt_lens[1] + gen,
+              prefill_chunk=chunk, seed=seed, fused_decode=True)
+
+    def trace():
+        # start at the 3am trough so the autoscaler has a ramp to climb
+        return diurnal_trace(requests, vocab_size=cfg.vocab_size,
+                             prompt_lens=prompt_lens, gen_tokens=gen,
+                             peak_interarrival_steps=0.5,
+                             trough_interarrival_steps=8.0,
+                             day_phase=0.5, seed=seed)
+
+    # the bill to beat: a fixed fleet provisioned for peak
+    fixed = build_fleet(cfg, replicas=max_replicas, **mk)
+    f_toks = sum(len(t) for t in fixed.run(trace()).values())
+    f_good = _goodput(f_toks, fixed.step_count, step_s)
+
+    aut = Autoscaler(min_replicas=1, max_replicas=max_replicas,
+                     scale_up_backlog=0, cooldown=cooldown)
+    el = build_fleet(cfg, replicas=1, autoscaler=aut, **mk)
+    e_toks = sum(len(t) for t in el.run(trace()).values())
+    e_good = _goodput(e_toks, el.step_count, step_s)
+    ups = sum(1 for _, w, _ in el.scale_events if w == "up")
+    downs = sum(1 for _, w, _ in el.scale_events if w in ("down", "retired"))
+    row(f"fleet_pred/{arch}/elastic{tag}", step_s * 1e6,
+        f"pred_goodput={e_good:.1f} "
+        f"pred_replica_steps={el.replica_steps} "
+        f"pred_goodput_vs_fixed={e_good / f_good:.4f} "
+        f"fixed_replica_steps={max_replicas * fixed.step_count} "
+        f"high_water={el.replica_high_water} steps={el.step_count} "
+        f"ups={ups} downs={downs}")
+
+    # replica death: kill the busiest replica mid-run; the tail the gate
+    # pins is how long the ejected requests take to finish elsewhere
+    rec = build_fleet(cfg, replicas=max_replicas, elastic=True, **mk)
+    r_toks = sum(len(t)
+                 for t in rec.run(trace(), chaos=[(kill_at, None)]).values())
+    kill_step = next(s for s, w, _ in rec.scale_events if w == "dead")
+    recovered = set(rec.recovered)
+    last = max((ev.step for ev in rec.events if ev.rid in recovered),
+               default=kill_step)
+    row(f"fleet_pred/{arch}/recovery{tag}", step_s * 1e6,
+        f"pred_recovery_steps={last - kill_step} "
+        f"pred_goodput={_goodput(r_toks, rec.step_count, step_s):.1f} "
+        f"recovered={len(recovered)} kill_step={kill_step} "
+        f"steps={rec.step_count}")
+
+
 def run(smoke: bool = True) -> None:
     """Harness entry (benchmarks.run): the smoke-sized fleet — run this
     module directly (no --smoke) for the full trace."""
@@ -97,10 +167,16 @@ def run(smoke: bool = True) -> None:
         bench_pred("qwen2-0.5b", replicas=2, slots=3, requests=12,
                    prompt_lens=(8, 40), gen=6, chunk=8,
                    prefix_entries=4, prefix_pool=2, tag="/smoke")
+        bench_elastic("qwen2-0.5b", slots=2, requests=12,
+                      prompt_lens=(8, 24), gen=6, chunk=8,
+                      max_replicas=3, cooldown=6, kill_at=8, tag="/smoke")
     else:
         bench_pred("qwen2-0.5b", replicas=4, slots=8, requests=64,
                    prompt_lens=(16, 128), gen=16, chunk=16,
                    prefix_entries=16, prefix_pool=4)
+        bench_elastic("qwen2-0.5b", slots=4, requests=64,
+                      prompt_lens=(16, 64), gen=16, chunk=16,
+                      max_replicas=4, cooldown=16, kill_at=32)
 
 
 def main() -> None:

@@ -33,7 +33,7 @@ import sys
 
 # one bump per PR that changes the gated surface; the artifact name and
 # CI upload glob both derive from it
-BENCH_VERSION = 8
+BENCH_VERSION = 9
 
 DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
@@ -41,16 +41,19 @@ DEFAULT_SUITES = "all"
 # predicted bubble/imbalance/speedup, the memory planner's planned
 # peak/fragmentation, the serving rows' cost-modeled tokens/s,
 # p99 inter-token latency, and speculative accepted-per-verify, the
-# topology planner's hop-class byte split + comm ratio, and the fleet's
-# per-SLO goodput + prefix-cache hit rate
+# topology planner's hop-class byte split + comm ratio, the fleet's
+# per-SLO goodput + prefix-cache hit rate, and the elastic fleet's
+# replica-step bill, goodput-vs-fixed and kill-recovery tail
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
               "pred_imbalance", "pred_peak_mb", "pred_frag",
               "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify",
               "pred_inter_module_bytes", "pred_comm_ratio",
-              "pred_goodput", "pred_prefix_hit_rate")
+              "pred_goodput", "pred_prefix_hit_rate",
+              "pred_replica_steps", "pred_recovery_steps",
+              "pred_goodput_vs_fixed")
 # metrics where bigger is worse (gate direction "lower")
 LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99",
-                   "inter_module")
+                   "inter_module", "replica_steps", "recovery")
 
 
 def _parse_rows(text: str) -> dict:

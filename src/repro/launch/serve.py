@@ -13,6 +13,12 @@ family).
         --replicas 4 --trace diurnal --prefix-cache 8 --batch-frac 0.5 \
         --max-backlog 16
 
+    # elastic fleet: the autoscaler rides the diurnal curve between 1
+    # and 4 replicas; --kill-at injects a replica death mid-run
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --trace diurnal --autoscale --min-replicas 1 --max-replicas 4 \
+        --kill-at 64
+
     # legacy single-shot (one fixed batch, teacher-forced prefill)
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --single-shot --batch 4 --prompt-len 32 --gen 16
@@ -33,9 +39,10 @@ from repro.models import encdec
 from repro.models import transformer as tfm
 from repro.models.layers import PEContext
 from repro.runtime import train_loop as tl
-from repro.serving import (AdmissionPolicy, build_engine, build_fleet,
-                           bursty_trace, diurnal_trace, latency_stats,
-                           poisson_trace, slo_stats)
+from repro.serving import (AdmissionPolicy, Autoscaler, ElasticFleet,
+                           build_engine, build_fleet, bursty_trace,
+                           diurnal_trace, latency_stats, poisson_trace,
+                           slo_stats)
 
 
 def run_single_shot(args, cfg, mesh, use_mesh):
@@ -117,15 +124,26 @@ def run_fleet(args, cfg):
     max_len = args.max_len or hi + args.gen
     admission = (AdmissionPolicy(max_backlog=args.max_backlog)
                  if args.max_backlog is not None else None)
+    autoscaler = None
+    if args.autoscale:
+        autoscaler = Autoscaler(
+            min_replicas=args.min_replicas,
+            max_replicas=args.max_replicas or max(args.replicas,
+                                                  args.min_replicas))
     fleet = build_fleet(
         cfg, replicas=args.replicas, n_slots=args.slots, max_len=max_len,
         prefill_chunk=args.chunk, kernel_backend=args.kernel_backend,
         seed=args.seed, fused_decode=args.fused_decode,
         prefix_entries=args.prefix_cache, admission=admission,
-        evict_patience=args.evict_patience)
+        evict_patience=args.evict_patience, autoscaler=autoscaler,
+        elastic=args.kill_at is not None)
     trace = make_trace(args, cfg, lo, hi)
     t0 = time.monotonic()
-    fleet.run(trace)
+    if isinstance(fleet, ElasticFleet):
+        chaos = [(args.kill_at, None)] if args.kill_at is not None else ()
+        fleet.run(trace, chaos=chaos)
+    else:
+        fleet.run(trace)
     wall = time.monotonic() - t0
     stats = latency_stats(fleet.events)
     per_class = slo_stats(fleet)
@@ -144,11 +162,18 @@ def run_fleet(args, cfg):
         print(f"  prefix cache: {px['hits']}/{px['lookups']} hits "
               f"({px['hit_rate']:.1%}), {px['evictions']} evictions, "
               f"{px['entries']}/{px['capacity']} rows")
-    counts = [0] * args.replicas
+    counts = [0] * len(fleet.engines)
     for r in fleet.placement.values():
         counts[r] += 1
     print(f"  placement: {counts} requests/replica "
           f"(backlog high water {fleet.backlog_high_water})")
+    if isinstance(fleet, ElasticFleet):
+        print(f"  elastic: states={fleet.state} "
+              f"replica_steps={fleet.replica_steps} "
+              f"high_water={fleet.replica_high_water} "
+              f"recovered={len(fleet.recovered)}")
+        for step, what, r in fleet.scale_events:
+            print(f"    step {step:>5}  {what:<7} replica {r}")
     return 0
 
 
@@ -236,6 +261,18 @@ def main(argv=None):
                     help="SLO admission control: batch requests queue up "
                          "to this backlog and are shed past it (default: "
                          "no admission control)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet: an autoscaler rides backlog + "
+                         "planned free-arena pressure between "
+                         "--min-replicas and --max-replicas")
+    ap.add_argument("--min-replicas", type=int, default=1,
+                    help="[autoscale] replica floor")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help="[autoscale] replica ceiling (0 = --replicas)")
+    ap.add_argument("--kill-at", type=int, default=None, metavar="STEP",
+                    help="chaos: kill the busiest replica at this fleet "
+                         "step (in-flight requests recover elsewhere, "
+                         "bit-identically)")
     # single-shot mode
     ap.add_argument("--single-shot", action="store_true",
                     help="legacy fixed-batch loop (parity oracle / audio)")
@@ -247,7 +284,8 @@ def main(argv=None):
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     fleet_mode = (args.replicas > 1 or args.prefix_cache
-                  or args.max_backlog is not None or args.trace != "poisson")
+                  or args.max_backlog is not None or args.trace != "poisson"
+                  or args.autoscale or args.kill_at is not None)
     mesh = make_host_mesh()
     use_mesh = mesh if mesh.devices.size > 1 else None
     if args.single_shot or cfg.family == "audio":

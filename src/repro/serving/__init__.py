@@ -21,7 +21,11 @@ matvec).  This package schedules both onto one fixed cache arena:
 - :mod:`fleet` — the scale-out layer (PR 8): N engine replicas behind a
   planned-free-bytes router, a shared prefix cache (common prompt heads
   prefill once, fleet-wide), and SLO-aware admission control
-  (interactive vs batch, backlog + shedding under overload).
+  (interactive vs batch, backlog + shedding under overload).  PR 9 made
+  the fleet elastic: ``ElasticFleet`` + ``Autoscaler`` scale the replica
+  set with the diurnal curve (drain → release the arena back through
+  the planner) and survive replica death (in-flight requests re-prefill
+  elsewhere from prompt + generated, bit-identically).
 
 Two opt-in fast paths (PR 6): ``build_engine(fused_decode=True)`` runs
 the per-layer decode megakernel words, ``build_engine(speculative=k)``
@@ -31,8 +35,10 @@ backend.
 """
 from repro.serving.engine import (ServingEngine, TokenEvent, build_engine,
                                   draft_config_for, latency_stats)
-from repro.serving.fleet import (AdmissionPolicy, Fleet, PrefixCache,
-                                 build_fleet, prefix_key, slo_stats)
+from repro.serving.fleet import (ACTIVE, DEAD, DRAINING, RETIRED,
+                                 AdmissionPolicy, Autoscaler, ElasticFleet,
+                                 Fleet, PrefixCache, build_fleet, prefix_key,
+                                 slo_stats)
 from repro.serving.scheduler import (BATCH, INTERACTIVE, SLO_CLASSES,
                                      Request, RequestState, Scheduler)
 from repro.serving.slots import (SlotPool, plan_cache_arena, reset_slots,
@@ -44,4 +50,6 @@ __all__ = ["ServingEngine", "TokenEvent", "build_engine", "draft_config_for",
            "SlotPool", "plan_cache_arena", "slot_bytes", "reset_slots",
            "poisson_trace", "bursty_trace", "diurnal_trace",
            "Fleet", "PrefixCache", "AdmissionPolicy", "build_fleet",
-           "prefix_key", "slo_stats", "INTERACTIVE", "BATCH", "SLO_CLASSES"]
+           "prefix_key", "slo_stats", "INTERACTIVE", "BATCH", "SLO_CLASSES",
+           "ElasticFleet", "Autoscaler", "ACTIVE", "DRAINING", "RETIRED",
+           "DEAD"]

@@ -261,11 +261,45 @@ class ServingEngine:
         self.cache = self._row_put(self.cache, row, jnp.int32(st.slot))
         st.pos = pos
 
+    # --- elastic-fleet seams (drain / replica death) ------------------------
+
+    @property
+    def released(self) -> bool:
+        """True once the slot arena has been given back (retired replica)."""
+        return self.cache is None
+
+    def eject_states(self) -> list:
+        """Pull every in-flight request out of this replica (death or
+        forced drain): slots are released and the states requeued with
+        their generated tokens intact — re-admission elsewhere
+        re-prefills prompt + generated, so the handoff is bit-invisible
+        (the eviction contract, fleet-wide).  Speculative draft cursors
+        are dropped; the draft catches up from the true sequence on
+        re-admission."""
+        states = self.sched.eject(self.step_count)
+        if self.speculative:
+            for st in states:
+                self._draft_pos.pop(st.req.rid, None)
+        return states
+
+    def release_arena(self) -> None:
+        """Give the slot arena back (drained replica retiring): the cache
+        rows are freed and the fleet's planner ledger stops counting
+        ``pool.plan.arena_bytes``.  Only legal once the scheduler is
+        idle — residents must finish or be ejected first."""
+        if not self.sched.idle:
+            raise RuntimeError(
+                f"release_arena with {len(self.sched.active)} residents + "
+                f"{len(self.sched.queue)} queued; drain or eject first")
+        self.cache = None
+
     # --- one engine iteration ----------------------------------------------
 
     def step(self) -> list:
         """One continuous-batching iteration: evict / admit / chunk-prefill
         / masked arena decode.  Returns the TokenEvents of this step."""
+        if self.released:
+            raise RuntimeError("stepping a retired replica (arena released)")
         step = self.step_count
         self.step_count += 1
         new_events: list = []

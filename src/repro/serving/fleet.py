@@ -27,10 +27,23 @@ over its own planner-placed slot arena, behind a router.  Three layers:
   overload, interactive tail latency stays bounded while batch goodput
   degrades gracefully instead of dragging everyone down.
 
-Parity contract (tests/test_fleet.py): a Fleet with one replica, no
-prefix cache and no admission policy is bit-identical per request to a
-single ServingEngine; enabling the prefix cache changes WHERE head rows
-come from, never their bytes, so outputs stay bit-identical too.
+- **Elastic scale (PR 9)** — :class:`ElasticFleet` lets the replica set
+  change at runtime: an :class:`Autoscaler` (hysteresis + cooldown over
+  backlog depth and planned free-arena fraction) spins replicas up and
+  down with the diurnal curve, scale-down DRAINS a replica (router
+  stops placing there; residents finish or evict; the arena is then
+  released back through the planner ledger), and replica DEATH ejects
+  in-flight requests with their generated tokens and re-places them on
+  survivors — the fleet-level analogue of PR 7's module-loss
+  ``surviving_topology`` replan, with the eviction contract standing in
+  for the checkpoint reshard.
+
+Parity contract (tests/test_fleet.py, tests/test_elastic.py): a Fleet
+with one replica, no prefix cache and no admission policy is
+bit-identical per request to a single ServingEngine; enabling the
+prefix cache changes WHERE head rows come from, never their bytes, so
+outputs stay bit-identical too; and draining or killing replicas
+changes WHEN and WHERE requests run, never their final tokens.
 """
 from __future__ import annotations
 
@@ -174,6 +187,8 @@ class Fleet:
                 f"prefill_chunk {prefill_chunk}: heads would not align "
                 f"with capturable prefill boundaries")
         self.cfg = cfg
+        self.program = program
+        self.params = params
         self.replicas = replicas
         self.prefix = prefix_cache
         self.admission = admission
@@ -187,12 +202,32 @@ class Fleet:
         hooks = {}
         if prefix_cache is not None:
             hooks = dict(admit_hook=self._on_admit, chunk_hook=self._on_chunk)
-        self.engines = [
-            ServingEngine(cfg, program, params, n_slots=n_slots,
-                          max_len=max_len, prefill_chunk=prefill_chunk,
-                          kernel_backend=kernel_backend, mesh=mesh,
-                          **hooks, **engine_kwargs)
-            for _ in range(replicas)]
+        # one spawn recipe for every replica: ElasticFleet re-runs it to
+        # scale up, and plan_cache_arena is a pure function of (cfg,
+        # max_len, n_slots), so every spawn reproduces the SAME allocator
+        # offsets the first replica got (tested in tests/test_fleet.py)
+        self._engine_args = dict(n_slots=n_slots, max_len=max_len,
+                                 prefill_chunk=prefill_chunk,
+                                 kernel_backend=kernel_backend, mesh=mesh,
+                                 **hooks, **engine_kwargs)
+        self.engines = [self._new_engine() for _ in range(replicas)]
+
+    def _new_engine(self) -> ServingEngine:
+        return ServingEngine(self.cfg, self.program, self.params,
+                             **self._engine_args)
+
+    # --- replica index sets (ElasticFleet narrows both) ---------------------
+
+    @property
+    def serving(self) -> list:
+        """Replica indices the router may place NEW work on."""
+        return list(range(len(self.engines)))
+
+    @property
+    def live(self) -> list:
+        """Replica indices that still advance each fleet step (serving
+        plus, in an ElasticFleet, draining replicas finishing residents)."""
+        return list(range(len(self.engines)))
 
     # --- prefix-cache hooks (run inside each engine's step) ----------------
 
@@ -226,7 +261,7 @@ class Fleet:
     def _route(self, candidates=None) -> int:
         """The replica with the most planned free arena bytes (then the
         shallowest queue, then the lowest index)."""
-        cands = range(self.replicas) if candidates is None else candidates
+        cands = self.serving if candidates is None else candidates
         return min(cands, key=lambda r: (-self.engines[r].free_arena_bytes,
                                          self.engines[r].queue_depth, r))
 
@@ -234,7 +269,7 @@ class Fleet:
         """Place batch work only where a slot is genuinely free (above
         the interactive headroom floor); False = no replica qualifies."""
         floor = self.admission.free_slots_floor
-        cands = [r for r in range(self.replicas)
+        cands = [r for r in self.serving
                  if self.engines[r].pool.free_count
                  - self.engines[r].queue_depth > floor]
         if not cands:
@@ -275,8 +310,8 @@ class Fleet:
             self.backlog.popleft()
         self.step_count += 1
         events = []
-        for r, eng in enumerate(self.engines):
-            events.extend((r, e) for e in eng.step())
+        for r in self.live:
+            events.extend((r, e) for e in self.engines[r].step())
         return events
 
     # --- drive to completion ----------------------------------------------
@@ -301,7 +336,8 @@ class Fleet:
 
     @property
     def idle(self) -> bool:
-        return not self.backlog and all(e.sched.idle for e in self.engines)
+        return not self.backlog and all(self.engines[r].sched.idle
+                                        for r in self.live)
 
     def results(self) -> dict:
         out: dict = {}
@@ -326,6 +362,314 @@ class Fleet:
                  for e in self.engines]}
         if self.prefix is not None:
             d["prefix"] = self.prefix.stats()
+        return d
+
+
+# --- elastic fleet: autoscaling + replica-loss recovery --------------------
+
+# replica lifecycle (ElasticFleet.state):
+#   ACTIVE   — routed and stepped (the only state a plain Fleet has)
+#   DRAINING — stepped but not routed; residents finish (or evict), the
+#              unadmitted queue rerouted at drain start
+#   RETIRED  — drain complete: arena released back through the planner
+#              ledger; keeps its finished results/events, never steps
+#   DEAD     — killed: in-flight work ejected + re-placed on survivors,
+#              arena released; keeps its finished results/events
+ACTIVE, DRAINING, RETIRED, DEAD = "active", "draining", "retired", "dead"
+
+
+@dataclass
+class Autoscaler:
+    """Hysteresis + cooldown decision machine for the elastic fleet.
+
+    Observed each fleet step: the fleet backlog depth and the planned
+    free-arena fraction over ACTIVE replicas (both pure plan/bookkeeping
+    numbers — same determinism contract as the router).  Scale up when
+    the backlog tops ``scale_up_backlog`` or the free fraction falls
+    below ``scale_up_free_frac``; scale down only when the backlog is
+    EMPTY and the free fraction exceeds ``scale_down_free_frac``.  The
+    gap between the two fractions is the hysteresis band, and
+    ``cooldown`` steps must pass between ANY two actions — together
+    they keep the diurnal trace from flapping a replica up and down.
+
+    ``decide`` is a pure function of (observation, internal cooldown
+    clock), so the hypothesis suite drives it with arbitrary observation
+    sequences (tests/test_elastic.py): the count never leaves
+    [min_replicas, max_replicas] and no two actions land within one
+    cooldown window.
+    """
+
+    min_replicas: int = 1
+    max_replicas: int = 4
+    scale_up_backlog: int = 4
+    scale_up_free_frac: float = 0.125
+    scale_down_free_frac: float = 0.75
+    cooldown: int = 16
+    last_action_step: Optional[int] = None      # internal cooldown clock
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas <= max_replicas, got "
+                f"[{self.min_replicas}, {self.max_replicas}]")
+        if not 0.0 <= self.scale_up_free_frac < self.scale_down_free_frac \
+                <= 1.0:
+            raise ValueError(
+                f"need 0 <= scale_up_free_frac < scale_down_free_frac <= 1 "
+                f"(the hysteresis band), got "
+                f"[{self.scale_up_free_frac}, {self.scale_down_free_frac}]")
+        if self.cooldown < 1:
+            raise ValueError(f"cooldown must be >= 1, got {self.cooldown}")
+        if self.scale_up_backlog < 0:
+            raise ValueError(f"scale_up_backlog must be >= 0, got "
+                             f"{self.scale_up_backlog}")
+
+    def decide(self, *, step: int, serving: int, backlog: int,
+               free_frac: float) -> int:
+        """+1 (scale up), -1 (scale down) or 0 (hold) for this step."""
+        if self.last_action_step is not None \
+                and step - self.last_action_step < self.cooldown:
+            return 0
+        want_up = (backlog > self.scale_up_backlog
+                   or free_frac < self.scale_up_free_frac)
+        if want_up:
+            if serving < self.max_replicas:
+                self.last_action_step = step
+                return 1
+            return 0
+        if (backlog == 0 and free_frac > self.scale_down_free_frac
+                and serving > self.min_replicas):
+            self.last_action_step = step
+            return -1
+        return 0
+
+
+class ElasticFleet(Fleet):
+    """A Fleet whose replica set changes at runtime.
+
+    Three mechanisms on top of the fixed fleet, all scheduling-layer —
+    per-request math is untouched, so every path below stays
+    bit-identical to an unperturbed run (tests/test_elastic.py):
+
+    - **autoscale** — an :class:`Autoscaler` watches the backlog and the
+      planned free-arena fraction each step and spins replicas up/down
+      with hysteresis + cooldown.  Scale-up reactivates the youngest
+      DRAINING replica when one exists (its arena is still live —
+      free), else spawns a fresh engine from the fleet's spawn recipe
+      (same program/params; ``plan_cache_arena`` being pure reproduces
+      the exact allocator offsets every time).
+    - **drain** (scale-down) — the emptiest ACTIVE replica stops taking
+      new work; its unadmitted queue reroutes immediately, residents
+      finish (or evict via the engine's starvation-free eviction), and
+      when the scheduler goes idle the arena is released back through
+      the planner ledger (``planned_arena_bytes`` drops by the plan's
+      arena bytes).
+    - **kill** (replica death) — every in-flight request on the dead
+      replica is ejected WITH its generated tokens and re-placed on
+      survivors via the router; re-admission re-prefills prompt +
+      generated, which the eviction contract proves bit-identical to
+      never having been interrupted.  Finished results were already
+      delivered and are kept.
+    """
+
+    def __init__(self, cfg: ModelConfig, program: Program, params, *,
+                 replicas: int = 1, autoscaler: Optional[Autoscaler] = None,
+                 **kwargs):
+        if autoscaler is not None:
+            replicas = min(max(replicas, autoscaler.min_replicas),
+                           autoscaler.max_replicas)
+        super().__init__(cfg, program, params, replicas=replicas, **kwargs)
+        self.autoscaler = autoscaler
+        self.state = [ACTIVE] * replicas
+        self.replica_steps = 0          # sum over steps of live replicas
+        self.replica_high_water = replicas
+        self.scale_events: list = []    # (step, "up"|"down"|"retired"|"dead",
+        #                                  replica index)
+        self.recovered: dict = {}       # rid -> dead replica it escaped
+
+    # --- index sets ---------------------------------------------------------
+
+    @property
+    def serving(self) -> list:
+        return [r for r, s in enumerate(self.state) if s == ACTIVE]
+
+    @property
+    def live(self) -> list:
+        return [r for r, s in enumerate(self.state)
+                if s in (ACTIVE, DRAINING)]
+
+    @property
+    def free_arena_frac(self) -> float:
+        """Planned free slot-arena bytes over ACTIVE replicas as a
+        fraction of their planned capacity (oversubscribed replicas
+        clamp to 0 — negative free bytes are a routing signal, not
+        capacity)."""
+        serving = self.serving
+        total = sum(self.engines[r].pool.n_slots
+                    * self.engines[r].arena_row_bytes for r in serving)
+        free = sum(max(0, self.engines[r].free_arena_bytes)
+                   for r in serving)
+        return free / total if total else 0.0
+
+    @property
+    def planned_arena_bytes(self) -> int:
+        """The planner ledger: slot-arena bytes currently HELD across
+        replicas (retired/dead replicas' plans are released back) plus
+        the prefix-cache pool's arena."""
+        held = sum(self.engines[r].pool.plan.arena_bytes for r in self.live
+                   if self.engines[r].pool.plan is not None)
+        if self.prefix is not None and self.prefix.pool.plan is not None:
+            held += self.prefix.pool.plan.arena_bytes
+        return held
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def scale_up(self) -> int:
+        """Add one serving replica: un-drain the youngest DRAINING one
+        (arena still live — free) or spawn a fresh engine."""
+        draining = [r for r, s in enumerate(self.state) if s == DRAINING]
+        if draining:
+            r = draining[-1]
+            self.state[r] = ACTIVE
+        else:
+            self.engines.append(self._new_engine())
+            self.state.append(ACTIVE)
+            r = len(self.engines) - 1
+        self.scale_events.append((self.step_count, "up", r))
+        self._recount()
+        return r
+
+    def scale_down(self) -> int:
+        """Start draining the emptiest ACTIVE replica: it leaves the
+        router immediately, its unadmitted queue reroutes to the other
+        serving replicas, and the arena is released once residents
+        finish (``_finish_drains``)."""
+        cands = self.serving
+        if len(cands) <= 1:
+            raise RuntimeError("cannot drain the last serving replica")
+        r = min(cands, key=lambda i: (len(self.engines[i].sched.active)
+                                      + self.engines[i].queue_depth, -i))
+        self.state[r] = DRAINING
+        self.scale_events.append((self.step_count, "down", r))
+        self._recount()
+        for st in self.engines[r].sched.eject_queued():
+            self._place_state(st)
+        return r
+
+    def kill(self, r: Optional[int] = None) -> int:
+        """Replica death (chaos): eject every in-flight request on `r`
+        and re-place each on a survivor with its generated tokens —
+        final outputs stay bit-identical to an unkilled run.  ``r=None``
+        kills the busiest live replica (the adversarial choice).  When
+        an autoscaler is attached, dead capacity below ``min_replicas``
+        is respawned immediately (recovery is not flapping, so the
+        cooldown clock is not consulted)."""
+        live = self.live
+        if r is None:
+            r = max(live, key=lambda i: (len(self.engines[i].sched.active)
+                                         + self.engines[i].queue_depth, -i))
+        if self.state[r] not in (ACTIVE, DRAINING):
+            raise ValueError(f"replica {r} is {self.state[r]}; only live "
+                             f"replicas can die")
+        if not [i for i in self.serving if i != r]:
+            # mirror surviving_topology: losing the last serving replica
+            # un-drains a survivor, or there is nothing to recover onto
+            draining = [i for i in self.live
+                        if i != r and self.state[i] == DRAINING]
+            if not draining:
+                raise RuntimeError(
+                    "no surviving replica to recover onto (fleet of one)")
+            self.state[draining[-1]] = ACTIVE
+            self.scale_events.append((self.step_count, "up", draining[-1]))
+        self.state[r] = DEAD
+        states = self.engines[r].eject_states()
+        self.engines[r].release_arena()
+        self.scale_events.append((self.step_count, "dead", r))
+        self._recount()
+        for st in states:
+            self.recovered[st.req.rid] = r
+            self._place_state(st)
+        if self.autoscaler is not None:
+            while len(self.serving) < self.autoscaler.min_replicas:
+                self.scale_up()
+        return r
+
+    def _place_state(self, st) -> int:
+        """Route an ejected RequestState (recovery bypasses batch
+        admission: the request was already admitted once)."""
+        r = self._route()
+        self.engines[r].sched.adopt(st, self.engines[r].step_count)
+        self.placement[st.req.rid] = r
+        return r
+
+    def _finish_drains(self) -> None:
+        for r in [r for r, s in enumerate(self.state) if s == DRAINING]:
+            eng = self.engines[r]
+            if eng.sched.idle:
+                eng.release_arena()
+                self.state[r] = RETIRED
+                self.scale_events.append((self.step_count, "retired", r))
+                self._recount()
+
+    def _recount(self) -> None:
+        self.replicas = len(self.serving)
+        self.replica_high_water = max(self.replica_high_water, self.replicas)
+
+    def _autoscale(self) -> None:
+        if self.autoscaler is None:
+            return
+        d = self.autoscaler.decide(
+            step=self.step_count, serving=len(self.serving),
+            backlog=len(self.backlog), free_frac=self.free_arena_frac)
+        if d > 0:
+            self.scale_up()
+        elif d < 0:
+            self.scale_down()
+
+    # --- one fleet iteration ------------------------------------------------
+
+    def step(self) -> list:
+        """Autoscale, retire finished drains, then the fixed-fleet step
+        over the live replicas.  ``replica_steps`` accumulates the
+        arena-holding replica count — the capacity the elastic fleet
+        actually paid for (the gated ``pred_replica_steps``)."""
+        self._autoscale()
+        self._finish_drains()
+        self.replica_steps += len(self.live)
+        return super().step()
+
+    def run(self, requests=(), max_steps: int = 1_000_000,
+            chaos=()) -> dict:
+        """Fleet.run plus fault injection: ``chaos`` is a sequence of
+        (step, replica-or-None) kills, each fired once the fleet clock
+        reaches its step (None = busiest live replica at that moment)."""
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        for r in pending:
+            self.engines[0]._validate(r)    # fail before any compute
+        kills = sorted(chaos, key=lambda k: k[0])
+        i = k = 0
+        for _ in range(max_steps):
+            while i < len(pending) \
+                    and pending[i].arrival_step <= self.step_count:
+                self.submit(pending[i])
+                i += 1
+            while k < len(kills) and kills[k][0] <= self.step_count:
+                self.kill(kills[k][1])
+                k += 1
+            self._finish_drains()           # retire before the idle check
+            if i == len(pending) and k == len(kills) and self.idle:
+                return self.results()
+            self.step()
+        raise RuntimeError(f"fleet did not drain in {max_steps} steps")
+
+    def stats(self) -> dict:
+        d = super().stats()
+        d.update(replica_states=list(self.state),
+                 replica_steps=self.replica_steps,
+                 replica_high_water=self.replica_high_water,
+                 scale_events=list(self.scale_events),
+                 recovered=len(self.recovered),
+                 planned_arena_bytes=self.planned_arena_bytes)
         return d
 
 
@@ -376,12 +720,19 @@ def build_fleet(cfg: ModelConfig, *, replicas: int, n_slots: int,
                 fused_decode: bool = False,
                 prefix_entries: int = 0, prefix_max_chunks: int = 4,
                 admission: Optional[AdmissionPolicy] = None,
+                autoscaler: Optional[Autoscaler] = None,
+                elastic: bool = False,
                 **engine_kwargs) -> Fleet:
     """One-stop fleet constructor: compile ONE serve-kind program and one
     bf16 param set shared by every replica (replicas differ only in
     arena state), build the prefix cache when ``prefix_entries`` > 0,
     fan out `replicas` engines.  Mirrors ``build_engine``'s defaults so
     a 1-replica fleet is the same engine the CLI and benchmark build.
+
+    Passing ``autoscaler`` (or ``elastic=True`` for kill-only chaos
+    without autoscaling) returns an :class:`ElasticFleet`; `replicas`
+    is then the INITIAL replica count, clamped into the autoscaler's
+    [min, max] band.
     """
     import jax
     import jax.numpy as jnp
@@ -404,7 +755,11 @@ def build_fleet(cfg: ModelConfig, *, replicas: int, n_slots: int,
         prefix = PrefixCache(cfg, entries=prefix_entries, max_len=max_len,
                              chunk=prefill_chunk,
                              max_chunks=prefix_max_chunks)
-    return Fleet(cfg, program, params, replicas=replicas, n_slots=n_slots,
-                 max_len=max_len, prefill_chunk=prefill_chunk,
-                 kernel_backend=kernel_backend, prefix_cache=prefix,
-                 admission=admission, **engine_kwargs)
+    common = dict(n_slots=n_slots, max_len=max_len,
+                  prefill_chunk=prefill_chunk,
+                  kernel_backend=kernel_backend, prefix_cache=prefix,
+                  admission=admission, **engine_kwargs)
+    if autoscaler is not None or elastic:
+        return ElasticFleet(cfg, program, params, replicas=replicas,
+                            autoscaler=autoscaler, **common)
+    return Fleet(cfg, program, params, replicas=replicas, **common)

@@ -150,12 +150,61 @@ class Scheduler:
     def _evict(self, st: RequestState, step: int) -> None:
         self.pool.release(st.slot)
         del self.active[st.req.rid]
+        self._requeue(st, step)
+        self.queue.append(st)
+
+    @staticmethod
+    def _requeue(st: RequestState, step: int) -> None:
+        """Reset a state that lost its arena row back to QUEUED: generated
+        tokens are KEPT, so re-admission re-prefills prompt + generated
+        and greedy decode resumes bit-exactly (the eviction contract)."""
         st.slot = None
         st.phase = QUEUED
         st.pos = 0                      # cache row is gone; re-prefill
         st.waiting_since = step
         st.evictions += 1
+
+    # --- cross-scheduler handoff (fleet drain / replica death) -------------
+
+    def adopt(self, st: RequestState, step: int) -> RequestState:
+        """Enqueue an EXISTING RequestState (a drained or dead replica's
+        in-flight request moving here).  The state must already be
+        requeued (no slot, QUEUED); its generated tokens ride along, so
+        the eviction contract makes the handoff bit-invisible."""
+        rid = st.req.rid
+        if rid in self.active or rid in self.finished \
+                or any(s.req.rid == rid for s in self.queue):
+            raise ValueError(f"duplicate request id {rid!r}")
+        if st.slot is not None or st.phase != QUEUED:
+            raise ValueError(
+                f"{rid}: adopt needs a requeued state "
+                f"(phase={st.phase}, slot={st.slot}); eject first")
+        st.waiting_since = step
         self.queue.append(st)
+        return st
+
+    def eject_queued(self) -> list:
+        """Pull every not-yet-admitted request out (drain start: unadmitted
+        work reroutes immediately instead of waiting behind residents)."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    def eject(self, step: int) -> list:
+        """Pull EVERY in-flight request out (replica death): residents
+        lose their slot rows and are requeued (generated kept — they
+        re-prefill prompt + generated elsewhere), then the unadmitted
+        queue follows.  Finished results stay: they were already
+        delivered.  Returns the states in admission order then queue
+        order (deterministic re-placement)."""
+        out = []
+        for st in list(self.active.values()):
+            self.pool.release(st.slot)
+            del self.active[st.req.rid]
+            self._requeue(st, step)
+            out.append(st)
+        out.extend(self.eject_queued())
+        return out
 
     # --- per-step work selection ------------------------------------------
 

@@ -101,6 +101,7 @@ def diurnal_trace(n_requests: int, *, vocab_size: int,
                   tail_prob: float = 0.05, tail_shape: float = 1.5,
                   batch_frac: float = 0.0,
                   prefix_pool: int = 0, prefix_len: int = 0,
+                  day_phase: float = 0.0,
                   seed: int = 0) -> list:
     """Diurnal + heavy-tail arrivals with SLO classes and shared heads.
 
@@ -121,6 +122,11 @@ def diurnal_trace(n_requests: int, *, vocab_size: int,
     unique tail; the fleet's prefix cache exists to prefill those heads
     once.
 
+    ``day_phase`` shifts where in the day the trace starts, as a
+    fraction of ``period_steps``: 0.0 starts at rush hour, 0.5 at the
+    3am trough — the elastic-fleet benchmark starts at the trough so
+    the autoscaler has a ramp to climb.
+
     Same determinism contract as :func:`poisson_trace`: the request
     list, classes and heads are a pure function of the arguments.
     """
@@ -133,6 +139,8 @@ def diurnal_trace(n_requests: int, *, vocab_size: int,
             f"got {prefix_len}")
     if not 0.0 < peak_interarrival_steps <= trough_interarrival_steps:
         raise ValueError("need 0 < peak_interarrival <= trough_interarrival")
+    if not 0.0 <= day_phase < 1.0:
+        raise ValueError(f"day_phase must be in [0, 1), got {day_phase}")
     rng = np.random.default_rng(seed)
     heads = [tuple(int(x) for x in rng.integers(0, vocab_size,
                                                 size=prefix_len))
@@ -143,7 +151,7 @@ def diurnal_trace(n_requests: int, *, vocab_size: int,
     reqs = []
     for i in range(n_requests):
         # day position in [0, 1): 0 = peak, 0.5 = trough
-        day = (t % period_steps) / period_steps
+        day = (t / period_steps + day_phase) % 1.0
         mix = 0.5 - 0.5 * np.cos(2.0 * np.pi * day)      # 0 @ peak, 1 @ trough
         mean_gap = float(np.exp(log_peak + mix * (log_trough - log_peak)))
         gap = rng.exponential(mean_gap)

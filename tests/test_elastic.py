@@ -1,0 +1,400 @@
+"""Elastic fleet chaos + property suite.
+
+Chaos contract: killing a replica — mid-decode, mid-chunked-prefill, or
+while it holds a prefix-cache-seeded row — changes WHEN and WHERE the
+in-flight requests run, never their final tokens.  Ejected states carry
+their generated tokens and re-prefill prompt + generated on a survivor,
+which is exactly the path the eviction contract (tests/test_serving.py)
+proves bit-identical.
+
+Autoscaler properties run under hypothesis when the package is
+available (CI installs it via requirements-dev.txt); every property
+also has a deterministic pinned case below so the invariants stay
+covered in bare containers (the PR 7 convention).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import compile_program
+from repro.core.dataflow import MeshSpec
+from repro.models import transformer as tfm
+from repro.runtime import train_loop as tl
+from repro.serving import (ACTIVE, DEAD, DRAINING, RETIRED, Autoscaler,
+                           ElasticFleet, PrefixCache, Request, ServingEngine,
+                           diurnal_trace)
+from repro.serving.scheduler import DECODE, PREFILL
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: pinned cases only
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):           # decorator shims so the property class
+        return lambda f: f          # still *defines* (it is skipped whole)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        floats = integers = lists = tuples = staticmethod(
+            lambda *_a, **_k: None)
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+MAX_LEN, CHUNK = 48, 8
+_BUILT: dict = {}
+
+
+def build(n_slots: int = 2):
+    """One compiled program + param set per arena width, memoised —
+    every fleet/engine in this module shares it (the build_fleet
+    contract: replicas differ only in arena state)."""
+    if n_slots not in _BUILT:
+        cfg = get_reduced("qwen2-0.5b")
+        shape = ShapeConfig("serve", seq_len=MAX_LEN, global_batch=n_slots,
+                            kind="decode")
+        program = compile_program(
+            cfg, shape, MeshSpec(axis_sizes={"data": 1, "model": 1}))
+        params = tl.cast_params(tfm.init(jax.random.PRNGKey(0), cfg),
+                                jnp.bfloat16)
+        _BUILT[n_slots] = (cfg, program, params)
+    return _BUILT[n_slots]
+
+
+def mixed_requests(cfg, lens, gen=5, gap=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=f"r{i}",
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(0, cfg.vocab_size, size=ln)),
+                    max_new_tokens=gen, arrival_step=gap * i)
+            for i, ln in enumerate(lens)]
+
+
+def oracle(reqs, n_slots=None):
+    """Single big engine: per-request outputs are scheduling-independent,
+    so this is the bit-parity reference for every chaos scenario."""
+    cfg, program, params = build()
+    eng = ServingEngine(cfg, program, params,
+                        n_slots=n_slots or len(reqs), max_len=MAX_LEN,
+                        prefill_chunk=CHUNK)
+    return eng.run(reqs)
+
+
+def drive_until(fleet, reqs, trigger, max_steps=400):
+    """Submit `reqs` at their arrival steps, fire ``trigger(fleet)`` once
+    it returns a replica index, drain.  Returns (results, fired)."""
+    pending = sorted(reqs, key=lambda r: (r.arrival_step, r.rid))
+    i, fired = 0, None
+    for _ in range(max_steps):
+        while i < len(pending) \
+                and pending[i].arrival_step <= fleet.step_count:
+            fleet.submit(pending[i])
+            i += 1
+        if fired is None:
+            r = trigger(fleet)
+            if r is not None:
+                fleet.kill(r)
+                fired = r
+        if i == len(pending) and fleet.idle:
+            return fleet.results(), fired
+        fleet.step()
+    raise RuntimeError("fleet did not drain")
+
+
+def resident(fleet, pred):
+    """A live replica holding an active request matching `pred`."""
+    for r in fleet.live:
+        for s in fleet.engines[r].sched.active.values():
+            if pred(s):
+                return r
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Chaos: replica death is bit-invisible
+# ---------------------------------------------------------------------------
+
+
+def test_kill_mid_decode_bit_identical():
+    """Kill a replica while a resident is in DECODE with generated
+    tokens: the ejected request re-prefills prompt + generated elsewhere
+    and its final tokens match the unkilled run exactly."""
+    cfg, program, params = build()
+    reqs = mixed_requests(cfg, [17, 9, 23, 6, 12], seed=1)
+    want = oracle(reqs)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK)
+    got, killed = drive_until(
+        fleet, reqs,
+        lambda f: resident(f, lambda s: s.phase == DECODE and s.generated))
+    assert killed is not None
+    assert got == want
+    assert fleet.state[killed] == DEAD
+    assert fleet.recovered                       # work actually moved
+    for rid, frm in fleet.recovered.items():
+        assert frm == killed
+        assert fleet.placement[rid] != killed
+
+
+def test_kill_during_chunked_prefill_bit_identical():
+    """Kill while a resident sits mid-prompt (0 < pos, still PREFILL):
+    the partial prefill is thrown away and redone elsewhere, chunk ==
+    sequential makes the redo bit-identical."""
+    cfg, program, params = build()
+    reqs = mixed_requests(cfg, [25, 30, 19, 27], gen=4, gap=1, seed=2)
+    want = oracle(reqs)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK)
+    got, killed = drive_until(
+        fleet, reqs,
+        lambda f: resident(f, lambda s: s.phase == PREFILL
+                           and 0 < s.pos < len(s.req.prompt)))
+    assert killed is not None
+    assert got == want
+
+
+def test_kill_replica_holding_leased_prefix_row():
+    """Kill the replica serving a request whose row was SEEDED from the
+    fleet prefix cache: the re-placed request takes a fresh lookup on
+    the survivor (another hit), outputs stay bit-identical, and the
+    cache keeps serving hits afterwards."""
+    cfg, program, params = build()
+    rng = np.random.default_rng(3)
+    head = tuple(int(x) for x in
+                 rng.integers(0, cfg.vocab_size, size=2 * CHUNK))
+    reqs = [Request(rid=f"r{i}",
+                    prompt=head + tuple(
+                        int(x) for x in
+                        rng.integers(0, cfg.vocab_size, size=t)),
+                    max_new_tokens=5, arrival_step=3 * i)
+            for i, t in enumerate([5, 9, 3, 7])]
+    want = oracle(reqs)
+    pc = PrefixCache(cfg, entries=2, max_len=MAX_LEN, chunk=CHUNK)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK,
+                         prefix_cache=pc)
+
+    def seeded_resident(f):
+        if pc.hits < 1:                          # a row must be leased out
+            return None
+        return resident(f, lambda s: s.pos > 0 and not s.done)
+
+    got, killed = drive_until(fleet, reqs, seeded_resident)
+    assert killed is not None
+    assert got == want
+    hits_at_kill = pc.hits
+    assert hits_at_kill >= 1
+    assert pc.hits >= hits_at_kill               # cache survived the kill
+
+
+def test_kill_bookkeeping_and_validation():
+    """Finished results on the dead replica are kept (already
+    delivered), the dead engine refuses to step, and kill() rejects
+    non-live targets and a fleet of one."""
+    cfg, program, params = build()
+    reqs = mixed_requests(cfg, [6, 7], gen=2, gap=0, seed=4)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK)
+    for r in reqs:
+        fleet.submit(r)
+    while not fleet.engines[0].sched.finished:
+        fleet.step()
+    done = dict(fleet.engines[0].sched.results())
+    fleet.kill(0)
+    with pytest.raises(RuntimeError, match="retired"):
+        fleet.engines[0].step()
+    with pytest.raises(ValueError, match="only live"):
+        fleet.kill(0)                            # already dead
+    while not fleet.idle:
+        fleet.step()
+    results = fleet.results()
+    for rid, toks in done.items():
+        assert results[rid] == toks              # delivered results kept
+    solo = ElasticFleet(cfg, program, params, replicas=1, n_slots=2,
+                        max_len=MAX_LEN, prefill_chunk=CHUNK)
+    with pytest.raises(RuntimeError, match="no surviving replica"):
+        solo.kill(0)
+
+
+# ---------------------------------------------------------------------------
+# Drain: scale-down never strands work, arena goes back to the planner
+# ---------------------------------------------------------------------------
+
+
+def test_drain_with_residents_completes_everything():
+    """scale_down with residents + queued work: unadmitted work reroutes
+    immediately, residents run to completion, then the arena is
+    released; nothing is stranded and outputs stay bit-identical."""
+    cfg, program, params = build()
+    reqs = mixed_requests(cfg, [9, 13, 6, 11, 8], gen=4, gap=0, seed=5)
+    want = oracle(reqs)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK)
+    for r in reqs:
+        fleet.submit(r)
+    fleet.step()                                 # residents land
+    bytes_before = fleet.planned_arena_bytes
+    victim = fleet.scale_down()
+    assert fleet.state[victim] == DRAINING
+    assert victim not in fleet.serving and victim in fleet.live
+    while not fleet.idle:
+        fleet.step()
+    fleet._finish_drains()
+    assert fleet.state[victim] == RETIRED
+    assert fleet.engines[victim].released
+    assert fleet.planned_arena_bytes \
+        == bytes_before - fleet.engines[victim].pool.plan.arena_bytes
+    assert fleet.results() == want               # nothing stranded
+    with pytest.raises(RuntimeError, match="last serving replica"):
+        fleet.scale_down()
+
+
+def test_scale_up_undrains_before_spawning():
+    """The cheapest capacity is a replica mid-drain: scale_up cancels
+    the drain (same engine, arena never released) instead of spawning."""
+    cfg, program, params = build()
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK)
+    victim = fleet.scale_down()
+    n_engines = len(fleet.engines)
+    r = fleet.scale_up()
+    assert r == victim                           # un-drained, not spawned
+    assert len(fleet.engines) == n_engines
+    assert fleet.state[victim] == ACTIVE
+    assert not fleet.engines[victim].released
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler state machine (hypothesis + pinned)
+# ---------------------------------------------------------------------------
+
+
+def _apply(aut, obs):
+    """Run an observation sequence through decide(); returns the count
+    trajectory and the (step, delta) action list."""
+    count = aut.min_replicas
+    counts, actions = [count], []
+    for step, (backlog, frac) in enumerate(obs):
+        d = aut.decide(step=step, serving=count, backlog=backlog,
+                       free_frac=frac)
+        count += d
+        counts.append(count)
+        if d:
+            actions.append((step, d))
+    return counts, actions
+
+
+def _check(aut, counts, actions):
+    assert all(aut.min_replicas <= c <= aut.max_replicas for c in counts)
+    for (s1, _), (s2, _) in zip(actions, actions[1:]):
+        assert s2 - s1 >= aut.cooldown
+
+
+@needs_hypothesis
+class TestAutoscalerProperties:
+    @settings(max_examples=200, deadline=None)
+    @given(min_r=st.integers(1, 3), extra=st.integers(0, 3),
+           cooldown=st.integers(1, 8),
+           obs=st.lists(st.tuples(st.integers(0, 20), st.floats(0.0, 1.0)),
+                        max_size=64))
+    def test_bounds_and_cooldown_for_any_observations(self, min_r, extra,
+                                                      cooldown, obs):
+        """For ANY observation sequence: the replica count never leaves
+        [min, max] and no two actions land within one cooldown window
+        (up/down flapping included — the hysteresis contract)."""
+        aut = Autoscaler(min_replicas=min_r, max_replicas=min_r + extra,
+                         scale_up_backlog=2, scale_up_free_frac=0.25,
+                         scale_down_free_frac=0.75, cooldown=cooldown)
+        counts, actions = _apply(aut, obs)
+        _check(aut, counts, actions)
+
+
+def test_autoscaler_bounds_and_cooldown_pinned():
+    """Pinned fallback: an adversarial observation sequence that begs
+    for a flap — saturating pressure then instant idleness."""
+    aut = Autoscaler(min_replicas=1, max_replicas=3, scale_up_backlog=2,
+                     scale_up_free_frac=0.25, scale_down_free_frac=0.75,
+                     cooldown=4)
+    obs = ([(10, 0.0)] * 6 + [(0, 1.0)] * 6) * 3
+    counts, actions = _apply(aut, obs)
+    _check(aut, counts, actions)
+    assert max(counts) == 3 and min(counts) == 1  # it did actually move
+
+
+def test_autoscaler_hysteresis_band_holds():
+    """Inside the hysteresis band (neither threshold crossed) the
+    autoscaler never acts, however long the sequence."""
+    aut = Autoscaler(min_replicas=1, max_replicas=4, scale_up_backlog=4,
+                     scale_up_free_frac=0.25, scale_down_free_frac=0.75,
+                     cooldown=2)
+    _, actions = _apply(aut, [(2, 0.5)] * 50)
+    assert actions == []
+
+
+def test_autoscaler_validation():
+    with pytest.raises(ValueError, match="min_replicas"):
+        Autoscaler(min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError, match="hysteresis"):
+        Autoscaler(scale_up_free_frac=0.8, scale_down_free_frac=0.5)
+    with pytest.raises(ValueError, match="cooldown"):
+        Autoscaler(cooldown=0)
+    with pytest.raises(ValueError, match="scale_up_backlog"):
+        Autoscaler(scale_up_backlog=-1)
+
+
+# ---------------------------------------------------------------------------
+# Elastic fleet end-to-end (hypothesis + pinned): bounded, flap-free,
+# strand-free for real traces
+# ---------------------------------------------------------------------------
+
+
+def _run_elastic(seed, n_requests, cooldown):
+    cfg, program, params = build()
+    aut = Autoscaler(min_replicas=1, max_replicas=3, scale_up_backlog=0,
+                     scale_up_free_frac=0.25, scale_down_free_frac=0.75,
+                     cooldown=cooldown)
+    fleet = ElasticFleet(cfg, program, params, replicas=1, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=CHUNK,
+                         autoscaler=aut)
+    reqs = diurnal_trace(n_requests, vocab_size=cfg.vocab_size,
+                         prompt_lens=(4, 20), gen_tokens=3,
+                         period_steps=24, peak_interarrival_steps=0.5,
+                         trough_interarrival_steps=4.0, seed=seed)
+    results = fleet.run(reqs)
+    # no strand: every submitted request finished (no admission policy —
+    # nothing is ever shed, so ALL rids must come back)
+    assert set(results) == {r.rid for r in reqs}
+    assert 1 <= fleet.replica_high_water <= aut.max_replicas
+    assert len(fleet.serving) >= aut.min_replicas
+    moves = [(s, w) for s, w, _ in fleet.scale_events if w in ("up", "down")]
+    for (s1, _), (s2, _) in zip(moves, moves[1:]):
+        assert s2 - s1 >= aut.cooldown
+    return fleet, results
+
+
+@needs_hypothesis
+class TestElasticFleetTraceProperties:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 10_000), cooldown=st.integers(2, 8))
+    def test_any_trace_bounded_flapfree_strandfree(self, seed, cooldown):
+        _run_elastic(seed, n_requests=6, cooldown=cooldown)
+
+
+def test_elastic_trace_pinned_and_bit_identical():
+    """Pinned fallback for the trace property, plus the stronger claim:
+    autoscaling is bit-invisible — outputs equal the single-engine
+    oracle's."""
+    fleet, results = _run_elastic(seed=11, n_requests=8, cooldown=4)
+    assert fleet.replica_high_water > 1          # the curve moved it
+    reqs = diurnal_trace(8, vocab_size=fleet.cfg.vocab_size,
+                         prompt_lens=(4, 20), gen_tokens=3,
+                         period_steps=24, peak_interarrival_steps=0.5,
+                         trough_interarrival_steps=4.0, seed=11)
+    assert results == oracle(reqs, n_slots=8)

@@ -19,8 +19,9 @@ from repro.core import compile_program
 from repro.core.dataflow import MeshSpec
 from repro.models import transformer as tfm
 from repro.runtime import train_loop as tl
-from repro.serving import (BATCH, INTERACTIVE, AdmissionPolicy, Fleet,
-                           PrefixCache, Request, ServingEngine, prefix_key,
+from repro.serving import (ACTIVE, BATCH, DRAINING, INTERACTIVE, RETIRED,
+                           AdmissionPolicy, ElasticFleet, Fleet, PrefixCache,
+                           Request, ServingEngine, SlotPool, prefix_key,
                            slo_stats)
 
 MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1}, batch_axes=("data",))
@@ -264,3 +265,73 @@ def test_free_slots_floor_reserves_interactive_headroom():
     while not fleet.idle:
         fleet.step()
     assert set(fleet.results()) == {"b0", "b1", "i0"}
+
+
+# ---------------------------------------------------------------------------
+# SlotPool lease/release bookkeeping (no engine involved)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_pool_release_bookkeeping():
+    """release() error paths + lowest-free re-lease order: the arena is
+    an exact ledger, not best-effort (double release would let two
+    requests share a cache row)."""
+    pool = SlotPool(3)
+    assert [pool.lease(r) for r in ("a", "b", "c")] == [0, 1, 2]
+    assert pool.lease("d") is None                  # full: None, not raise
+    with pytest.raises(KeyError, match="not leased"):
+        pool.release(5)                             # never leased
+    pool.release(1)
+    with pytest.raises(KeyError, match="not leased"):
+        pool.release(1)                             # double release
+    assert pool.owner(1) is None
+    assert pool.lease("d") == 1                     # lowest free, re-leased
+    pool.release(2)
+    pool.release(0)
+    assert pool.lease("e") == 0                     # lowest free again
+    assert pool.free_count == 1 and pool.leased_count == 2
+
+
+# ---------------------------------------------------------------------------
+# Elastic drain: arena release + re-admission offset determinism
+# ---------------------------------------------------------------------------
+
+
+def test_drain_release_respawn_reproduces_allocator_offsets():
+    """Retiring a replica releases its arena through the planner ledger;
+    a later scale_up (fresh spawn — the drained one is RETIRED, not
+    reusable) re-plans the arena and must reproduce the exact allocator
+    offsets, because ``plan_cache_arena`` is pure.  This is what makes
+    elastic capacity bit-safe: a re-spawned replica's rows live at the
+    same offsets as the retired one's."""
+    MAX_LEN = 32
+    cfg, program, params = build("qwen2-0.5b", n_slots=2, max_len=MAX_LEN)
+    fleet = ElasticFleet(cfg, program, params, replicas=2, n_slots=2,
+                         max_len=MAX_LEN, prefill_chunk=8)
+    plan0 = fleet.engines[1].pool.plan
+    bytes0 = fleet.planned_arena_bytes
+    assert bytes0 == 2 * plan0.arena_bytes          # two identical replicas
+
+    victim = fleet.scale_down()                     # idle tie-break: highest
+    assert victim == 1 and fleet.state == [ACTIVE, DRAINING]
+    assert fleet.planned_arena_bytes == bytes0      # drain still holds it
+    fleet._finish_drains()                          # idle -> retire now
+    assert fleet.state == [ACTIVE, RETIRED]
+    assert fleet.engines[1].released
+    assert fleet.planned_arena_bytes == bytes0 - plan0.arena_bytes
+
+    r = fleet.scale_up()                            # no DRAINING left: spawn
+    assert r == 2 and len(fleet.engines) == 3
+    plan1 = fleet.engines[r].pool.plan
+    assert [(a.name, a.offset, a.bytes) for a in plan1.allocations] \
+        == [(a.name, a.offset, a.bytes) for a in plan0.allocations]
+    assert plan1.arena_bytes == plan0.arena_bytes
+    assert fleet.planned_arena_bytes == bytes0      # ledger restored
+
+    # and the respawned capacity actually serves, bit-identically
+    prompts = mixed_prompts(cfg, [7, 11, 5], seed=9)
+    reqs = [Request(rid=f"r{i}", prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    oracle = ServingEngine(cfg, program, params, n_slots=3, max_len=MAX_LEN,
+                           prefill_chunk=8).run(reqs)
+    assert fleet.run(reqs) == oracle
