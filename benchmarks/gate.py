@@ -33,7 +33,7 @@ import sys
 
 # one bump per PR that changes the gated surface; the artifact name and
 # CI upload glob both derive from it
-BENCH_VERSION = 9
+BENCH_VERSION = 10
 
 DEFAULT_SUITES = "all"
 # deterministic model metrics only (bit-stable across runners): the
@@ -42,18 +42,23 @@ DEFAULT_SUITES = "all"
 # peak/fragmentation, the serving rows' cost-modeled tokens/s,
 # p99 inter-token latency, and speculative accepted-per-verify, the
 # topology planner's hop-class byte split + comm ratio, the fleet's
-# per-SLO goodput + prefix-cache hit rate, and the elastic fleet's
-# replica-step bill, goodput-vs-fixed and kill-recovery tail
+# per-SLO goodput + prefix-cache hit rate, the elastic fleet's
+# replica-step bill, goodput-vs-fixed and kill-recovery tail, and the
+# guided tuner's evaluation-budget ratio + cost gap vs exhaustive
 GATED_KEYS = ("pred_speedup", "pred_bytes_ratio", "pred_bubble",
               "pred_imbalance", "pred_peak_mb", "pred_frag",
               "pred_tok_s", "pred_p99_ms", "pred_accept_per_verify",
               "pred_inter_module_bytes", "pred_comm_ratio",
               "pred_goodput", "pred_prefix_hit_rate",
               "pred_replica_steps", "pred_recovery_steps",
-              "pred_goodput_vs_fixed")
-# metrics where bigger is worse (gate direction "lower")
-LOWER_IS_BETTER = ("ratio", "bubble", "imbalance", "peak", "frag", "p99",
-                   "inter_module", "replica_steps", "recovery")
+              "pred_goodput_vs_fixed",
+              "pred_eval_ratio", "pred_cost_gap")
+# metrics where bigger is worse (gate direction "lower").  Substring
+# match, so "bytes_ratio" not "ratio": pred_eval_ratio (exhaustive evals
+# over guided — bigger is better) must gate in the "higher" direction.
+LOWER_IS_BETTER = ("bytes_ratio", "comm_ratio", "bubble", "imbalance",
+                   "peak", "frag", "p99", "inter_module", "replica_steps",
+                   "recovery", "cost_gap")
 
 
 def _parse_rows(text: str) -> dict:
@@ -102,7 +107,7 @@ def collect(suites: str) -> tuple:
         # autotune runs as its own subprocess below (the CI contract is
         # `run.py` + `autotune_gemm --smoke`); don't execute it twice
         suites = ("table1,fig10,fig13,fig16,table6,fig17,serve,pipeline,"
-                  "memory_plan,topology,fleet")
+                  "memory_plan,topology,fleet,tuner_search")
     rc, out = _run([sys.executable, "-m", "benchmarks.run",
                     "--only", suites])
     ok &= rc == 0

@@ -16,7 +16,8 @@ def main() -> None:
     from benchmarks import (autotune_gemm, fig10_precision, fig13_alexnet,
                             fig16_suite, fig17_scaling, fleet_throughput,
                             memory_plan, pipeline_scaling, serve_throughput,
-                            table1_mac, table6_efficiency, topology_scaling)
+                            table1_mac, table6_efficiency, topology_scaling,
+                            tuner_search)
     suites = {
         "table1": table1_mac, "fig10": fig10_precision,
         "fig13": fig13_alexnet, "fig16": fig16_suite,
@@ -24,6 +25,7 @@ def main() -> None:
         "serve": serve_throughput, "autotune": autotune_gemm,
         "pipeline": pipeline_scaling, "memory_plan": memory_plan,
         "topology": topology_scaling, "fleet": fleet_throughput,
+        "tuner_search": tuner_search,
     }
     chosen = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

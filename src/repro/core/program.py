@@ -300,6 +300,10 @@ class Program:
     # column (the draft model's width-1 proposals) to the iBuffer image.
     fused_decode: bool = False
     speculative: bool = False
+    # provenance of the tuning the program was compiled with: the search
+    # mode and evaluation counters (tuner search_stats()).  None for an
+    # untuned program or a tuning dict that predates guided search.
+    tuning_search: Optional[dict] = None
     _memory_plan: Optional[object] = field(default=None, repr=False)
 
     def weight_spec(self, op_name: str, *, stacked: bool = True) -> P:
@@ -454,6 +458,7 @@ class Program:
             "ibuffer": self.ibuffer_entries(),
             "ibuffer_bytes": self.ibuffer_size_bytes(),
             "memory": mem,
+            "tuning_search": self.tuning_search,
             "notes": self.plan.notes,
         }, indent=1)
 
@@ -469,21 +474,32 @@ class Program:
             out += (f"\nmemory: planned peak="
                     f"{self.memory_table.peak_bytes() / 1e9:.2f}GB/dev "
                     f"({peaks})")
+        if self.tuning_search is not None:
+            s = self.tuning_search
+            out += (f"\ntuning: {s.get('mode', '?')} search, "
+                    f"{s.get('n_evals', '?')} evals over "
+                    f"{s.get('n_candidates', '?')} candidates "
+                    f"(fallbacks={s.get('fallbacks', 0)})")
         return out
 
 
 def _normalize_tuning(tuning) -> tuple:
-    """(strategy overrides, tilings) from a tuner result.
+    """(strategy overrides, tilings, search meta) from a tuner result.
 
     Accepts a ``repro.tuner.ProgramTuning`` (duck-typed via as_overrides/
     as_tilings — core never imports the tuner package) or its ``to_dict()``
     JSON form ``{op: {"strategy": str, "tiles": {phase: [tm, tn, tk]}}}``.
+    The third element is the tuner's search provenance (mode + evaluation
+    counters) when the tuning carries one, else None.
     """
     if tuning is None:
-        return {}, {}
+        return {}, {}, None
     if hasattr(tuning, "as_overrides"):
-        return tuning.as_overrides(), tuning.as_tilings()
+        meta = (tuning.search_meta()
+                if hasattr(tuning, "search_meta") else None)
+        return tuning.as_overrides(), tuning.as_tilings(), meta
     ops = tuning.get("ops", tuning)
+    meta = tuning.get("search") if "ops" in tuning else None
     overrides: dict = {}
     tilings: dict = {}
     for name, t in ops.items():
@@ -492,7 +508,7 @@ def _normalize_tuning(tuning) -> tuple:
         tiles = {Phase(p): tuple(v) for p, v in (t.get("tiles") or {}).items()}
         if tiles:
             tilings[name] = tiles
-    return overrides, tilings
+    return overrides, tilings, meta
 
 
 def _build_liveness(cfg, plan, shape, policy, *, microbatch: int, remat,
@@ -571,7 +587,7 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
     # dW cotangents are emitted at the PARAM dtype (engine _grad_layout),
     # so comm/state grad arithmetic follows the policy, not f32
     grad_bytes = jnp.dtype(policy.param_dtype).itemsize
-    tuned_overrides, tilings = _normalize_tuning(tuning)
+    tuned_overrides, tilings, search_meta = _normalize_tuning(tuning)
     merged = dict(tuned_overrides)
     merged.update(overrides or {})
     merged = {k: Strategy(v) if not isinstance(v, Strategy) else v
@@ -610,7 +626,7 @@ def compile_program(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec,
                    plan=plan, ops=ops, tilings=tilings, memory_table=table,
                    remat=remat, microbatch=max(1, microbatch),
                    layer_range=layer_range, fused_decode=fused_decode,
-                   speculative=speculative)
+                   speculative=speculative, tuning_search=search_meta)
 
 
 def compile_stage_programs(cfg: ModelConfig, shape: ShapeConfig,

@@ -13,6 +13,16 @@ tuned mapping is what the PE engine actually runs.
                           seq_len=..., kind="train")
     program = compile_program(cfg, shape, mesh_spec, tuning=tuning.to_dict())
 
+The per-gemm search is pluggable (``CandidateSource`` x ``Scorer`` seams):
+``ExhaustiveSearch`` scores the whole grid (the default, bit-identical to
+the pre-seam tuner), ``GuidedSearch`` asks a learned cost model
+(``tuner/learned.py``, trained from the logged corpus in
+``tuner/dataset.py``) for top-K and scores only those, certified against
+the grid's analytic floor with exhaustive fallback:
+
+    model = CostModel.load("artifacts/tuner/model.json")
+    tuning = tune_program(ops, mesh, ..., search=GuidedSearch(model))
+
 CLI: ``python -m repro.launch.tune`` — see docs/PROGRAMMING_MODEL.md §6.
 """
 from repro.tuner.cache import (DEFAULT_CACHE_PATH, TuningCache, cache_key,
@@ -21,8 +31,16 @@ from repro.tuner.cost import (DEFAULT_TILE, DISPATCH_S, GemmShape, TileCost,
                               candidate_tiles, conv_im2col_gemm,
                               fused_decode_cost, gemm_for_phase,
                               per_op_decode_cost, tile_cost)
-from repro.tuner.search import (FUSED_DECODE_OPS, OpTuning, ProgramTuning,
-                                TunedGemm, default_tile_for, speedup_model,
+from repro.tuner.dataset import (DEFAULT_DATA_DIR, TuningDataset,
+                                 describe_records, load_records, make_record)
+from repro.tuner.learned import (DEFAULT_MODEL_PATH, FEATURE_NAMES,
+                                 FEATURE_VERSION, CostModel, featurize,
+                                 fit_records, fit_report, model_for)
+from repro.tuner.search import (FUSED_DECODE_OPS, AnalyticScorer,
+                                CandidateSource, ExhaustiveSearch, GridSource,
+                                GuidedSearch, OpTuning, ProgramTuning, Scorer,
+                                SearchResult, TunedGemm, default_tile_for,
+                                search_stats, speedup_model,
                                 tune_fused_decode, tune_gemm, tune_op,
                                 tune_program)
 
@@ -31,7 +49,13 @@ __all__ = [
     "DEFAULT_TILE", "DISPATCH_S", "GemmShape", "TileCost", "candidate_tiles",
     "conv_im2col_gemm", "fused_decode_cost", "gemm_for_phase",
     "per_op_decode_cost", "tile_cost",
-    "FUSED_DECODE_OPS", "OpTuning", "ProgramTuning", "TunedGemm",
-    "default_tile_for", "speedup_model", "tune_fused_decode", "tune_gemm",
-    "tune_op", "tune_program",
+    "DEFAULT_DATA_DIR", "TuningDataset", "describe_records", "load_records",
+    "make_record",
+    "DEFAULT_MODEL_PATH", "FEATURE_NAMES", "FEATURE_VERSION", "CostModel",
+    "featurize", "fit_records", "fit_report", "model_for",
+    "FUSED_DECODE_OPS", "AnalyticScorer", "CandidateSource",
+    "ExhaustiveSearch", "GridSource", "GuidedSearch", "OpTuning",
+    "ProgramTuning", "Scorer", "SearchResult", "TunedGemm",
+    "default_tile_for", "search_stats", "speedup_model", "tune_fused_decode",
+    "tune_gemm", "tune_op", "tune_program",
 ]

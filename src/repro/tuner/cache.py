@@ -16,10 +16,20 @@ once.  Format — one flat object under "entries", human-diffable:
     }
 
 The key is the GemmShape tag (local per-device gemm, SR flag included),
-the phase, the mesh tag, and the kernel backend — everything the winning
-tile can depend on.  Entries are insert-ordered; `merge=True` loads keep
-existing in-memory winners (a measured entry is never clobbered by a
-model-only one).
+the phase, the mesh tag — with the module TOPOLOGY folded in, because
+comm cost (and so the strategy the winner was tuned under) depends on
+how the mesh splits across modules and link classes, not just on axis
+sizes — and the kernel backend: everything the winning tile can depend
+on.  Entries are insert-ordered; `merge=True` loads keep existing
+in-memory winners (a measured entry is never clobbered by a model-only
+one).
+
+Version history: v1 keys tagged the mesh by axis sizes alone, so a
+winner tuned on a 1-module mesh was silently reused on a 4-module
+topology.  v2 appends a ``@mod...`` suffix for multi-module meshes;
+flat meshes keep the v1 tag, so v1 cache files still load (accepted on
+read) and their flat-mesh entries keep hitting — only multi-module
+lookups miss and re-tune, which is the fix.
 """
 from __future__ import annotations
 
@@ -31,12 +41,26 @@ from repro.core.dataflow import MeshSpec
 from repro.core.phases import Phase
 from repro.tuner.cost import GemmShape
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+COMPAT_CACHE_VERSIONS = (1, 2)
 DEFAULT_CACHE_PATH = "artifacts/tuner/cache.json"
 
 
 def mesh_tag(mesh: MeshSpec) -> str:
-    return "-".join(f"{a}{s}" for a, s in sorted(mesh.axis_sizes.items()))
+    """Cache tag for a mesh, topology included.
+
+    Flat meshes (no topology, or the degenerate 1-module topology that
+    PR 7 proved bit-identical to the flat planner) keep the axis-size
+    tag v1 files were written with — their old entries stay valid and
+    keep hitting.  Multi-module topologies append the module split and
+    per-class link bandwidths, everything `comm_time_s` prices by.
+    """
+    tag = "-".join(f"{a}{s}" for a, s in sorted(mesh.axis_sizes.items()))
+    topo = getattr(mesh, "topology", None)
+    if topo is not None and topo.n_modules > 1:
+        tag += (f"@mod{topo.n_modules}x{topo.pes_per_module}"
+                f"i{topo.intra_bw:.4g}e{topo.inter_bw:.4g}")
+    return tag
 
 
 def cache_key(shape: GemmShape, phase: Phase, mesh: str, backend: str) -> str:
@@ -86,9 +110,13 @@ class TuningCache:
         assert path is not None
         with open(path) as f:
             data = json.load(f)
-        if data.get("version") != CACHE_VERSION:
+        if data.get("version") not in COMPAT_CACHE_VERSIONS:
             raise ValueError(f"tuner cache {path}: unknown version "
                              f"{data.get('version')!r}")
+        # v1 files load as-is: flat-mesh keys are identical under v2;
+        # multi-module keys simply never match the new @mod-tagged
+        # lookups, so those configs re-tune instead of reusing a winner
+        # priced on the wrong topology.
         if merge:
             for k, v in data.get("entries", {}).items():
                 old = self.entries.get(k)

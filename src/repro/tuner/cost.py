@@ -160,14 +160,20 @@ def tile_cost(shape: GemmShape, tile: tuple) -> TileCost:
 def candidate_tiles(shape: GemmShape, extra: tuple = ()) -> list:
     """The search grid: power-of-two tiles on the MXU grain, clipped to the
     problem, plus any caller-supplied extras (always includes DEFAULT_TILE
-    so the tuner can never regress the status quo)."""
+    so the tuner can never regress the status quo).
+
+    Returns UNIQUE tiles: extras are normalized to int tuples before the
+    set union, so an extra that clips onto the generated grid — or the
+    same tile spelled as a list / numpy ints — cannot inflate
+    ``n_candidates``, which the perf gate now counts evaluations by.
+    """
     tms = {min(t, shape.m) for t in (64, 128, 256, 512)}
     tns = {min(t, shape.n) for t in (128, 256, 512)}
     tks = {min(t, shape.k) for t in (128, 256, 512, 1024)}
     cands = {(tm, tn, tk) for tm in tms for tn in tns for tk in tks}
     cands.add(clip_tile(shape, DEFAULT_TILE))
     for t in extra:
-        cands.add(clip_tile(shape, tuple(t)))
+        cands.add(clip_tile(shape, tuple(int(x) for x in t)))
     return sorted(cands)
 
 

@@ -1,0 +1,137 @@
+"""Tuning dataset: append-only JSONL corpus of search evaluations.
+
+Every candidate the tuner prices — exhaustively, through the guided
+path, or as a fallback sweep after a model disagreement — can be logged
+as one JSON line: the deterministic feature vector of
+``(shape, tile)`` (see :mod:`repro.tuner.learned`), the context that
+produced it (op, phase, mesh — topology folded into the mesh tag —
+strategy, search mode), the model's predicted cost when a model was
+consulted, the analytic cost, and the on-device measurement when one
+ran.  The corpus under ``benchmarks/tuning_data/`` is what
+``launch/tune.py fit`` trains the learned cost model from, and what the
+CI bench job uploads so every run grows the training set — the
+measure-once / learn / propose loop.
+
+Records are self-describing (feature names + version ride along at the
+file level via ``fv``), so old corpora stay readable after the
+featurization evolves: ``load_records`` filters to the current feature
+version by default.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, List, Optional
+
+DEFAULT_DATA_DIR = "benchmarks/tuning_data"
+RECORD_VERSION = 1
+
+
+def make_record(*, shape, tile, features, analytic_us: float,
+                pred_us: Optional[float] = None,
+                measured_us: Optional[float] = None,
+                source: str = "exhaustive",
+                context: Optional[dict] = None,
+                feature_version: int = 1) -> dict:
+    """One (features, predicted_cost, measured_us) training triple."""
+    rec = {
+        "v": RECORD_VERSION,
+        "fv": feature_version,
+        "shape": shape.tag(),
+        "m": shape.m, "n": shape.n, "k": shape.k, "rbits": bool(shape.rbits),
+        "tile": [int(x) for x in tile],
+        "features": [float(x) for x in features],
+        "pred_us": None if pred_us is None else float(pred_us),
+        "analytic_us": float(analytic_us),
+        "measured_us": None if measured_us is None else float(measured_us),
+        "source": source,
+    }
+    for key in ("op", "phase", "mesh", "strategy", "kind"):
+        if context and context.get(key) is not None:
+            rec[key] = str(context[key])
+    return rec
+
+
+class TuningDataset:
+    """In-memory record list, optionally mirrored to an append-only JSONL.
+
+    ``path=None`` keeps the dataset in memory (benchmarks fit from the
+    current run without depending on what previous runs appended);
+    otherwise every ``append`` also writes one line to ``path``.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.records: List[dict] = []
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def append(self, record: dict) -> None:
+        self.records.append(record)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(record, sort_keys=True) + "\n")
+
+    def extend(self, records: Iterable[dict]) -> None:
+        for r in records:
+            self.append(r)
+
+
+def load_records(paths, *, feature_version: Optional[int] = None) -> list:
+    """Read one JSONL file, a directory of them, or a list of either.
+
+    Lines that do not parse (a truncated append from a killed run) are
+    skipped rather than poisoning the whole corpus; ``feature_version``
+    filters to records whose feature vector matches the given layout.
+    """
+    if isinstance(paths, (str, os.PathLike)):
+        paths = [paths]
+    files: List[str] = []
+    for p in paths:
+        p = os.fspath(p)
+        if os.path.isdir(p):
+            files += [os.path.join(p, f) for f in sorted(os.listdir(p))
+                      if f.endswith(".jsonl")]
+        elif os.path.exists(p):
+            files.append(p)
+    out: List[dict] = []
+    for fp in files:
+        with open(fp) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if not isinstance(rec, dict) or "features" not in rec:
+                    continue
+                if (feature_version is not None
+                        and rec.get("fv") != feature_version):
+                    continue
+                out.append(rec)
+    return out
+
+
+def describe_records(records) -> str:
+    """One-paragraph corpus summary for ``launch/tune.py --report``."""
+    if not records:
+        return "tuning dataset: empty"
+    by_source: dict = {}
+    measured = 0
+    shapes = set()
+    for r in records:
+        by_source[r.get("source", "?")] = by_source.get(
+            r.get("source", "?"), 0) + 1
+        if r.get("measured_us") is not None:
+            measured += 1
+        shapes.add(r.get("shape"))
+    srcs = " ".join(f"{k}={v}" for k, v in sorted(by_source.items()))
+    return (f"tuning dataset: {len(records)} records over {len(shapes)} "
+            f"gemm shapes ({srcs}; {measured} with device measurements)")

@@ -1,0 +1,226 @@
+"""Learned mapping cost model: deterministic features + ridge ensemble.
+
+The exhaustive tuner prices every (tm, tn, tk) candidate with the
+analytic model; at fleet scale (every config x phase x mesh x topology)
+that sweep is the cost the ROADMAP's learned-mapper item wants gone.
+This module is the cheap replacement: a pure-numpy regressor trained on
+the tuner's own logged evaluations (:mod:`repro.tuner.dataset`) that
+ranks candidates so :class:`repro.tuner.search.GuidedSearch` only has
+to *score* a handful.
+
+Design choices, all in service of determinism and zero new deps:
+
+* ``featurize`` is a fixed-layout vector of the static shape/tile
+  arithmetic the cost model already exposes (log dims, log grid steps,
+  log traffic, log padded flops, the analytic roofline estimate itself
+  as one feature).  Sharing the bytes-moved math with ``tuner/cost.py``
+  means a model fit on ANALYTIC targets converges to weight~1 on the
+  roofline feature, while a model fit on MEASURED targets learns the
+  residual between the analytic story and the machine — the
+  measure-once/learn/propose loop of circuit-training-style mappers.
+* The regressor is ridge least-squares in log-time space, as a small
+  ensemble over deterministic strided folds of the dataset (member j
+  sees records with index % members == j); prediction is the ensemble
+  mean.  ``numpy.linalg.solve`` on the normal equations — no iterative
+  fitting, bit-stable across runs for the same corpus.
+* Serialization is plain JSON (feature names + normalization + member
+  weights), so a model rides the repo or a CI artifact like the tuning
+  cache does.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.tuner.cost import GemmShape, tile_cost
+
+MODEL_VERSION = 1
+FEATURE_VERSION = 1
+DEFAULT_MODEL_PATH = "artifacts/tuner/model.json"
+
+FEATURE_NAMES = (
+    "log_m", "log_n", "log_k",
+    "log_tm", "log_tn", "log_tk",
+    "log_steps", "log_flops_padded", "log_hbm_bytes", "log_vmem_bytes",
+    "pad_waste", "rbits", "infeasible",
+    "log_roofline_us",
+)
+
+
+def _log(x: float) -> float:
+    return math.log(max(float(x), 1e-30))
+
+
+def featurize(shape: GemmShape, tile) -> np.ndarray:
+    """Deterministic feature vector for one (gemm, candidate tile).
+
+    Pure static arithmetic (the same integer math ``tile_cost`` runs) —
+    featurizing a candidate is free; what the guided search economizes
+    is the *scorer*, the seam that can be an on-device measurement.
+    Infeasible tiles keep a finite roofline feature (priced as if they
+    fit) plus an ``infeasible`` indicator, so the model still sees them
+    on a comparable scale.
+    """
+    c = tile_cost(shape, tile)
+    tm, tn, tk = c.tile
+    finite_t = c.time_s if math.isfinite(c.time_s) else (
+        max(c.flops_padded / 1e12, c.hbm_bytes / 1e9))
+    return np.array([
+        _log(shape.m), _log(shape.n), _log(shape.k),
+        _log(tm), _log(tn), _log(tk),
+        _log(c.grid_steps), _log(c.flops_padded), _log(c.hbm_bytes),
+        _log(c.vmem_bytes),
+        float(c.padding_waste), float(shape.rbits), float(not c.feasible),
+        _log(finite_t * 1e6),
+    ])
+
+
+@dataclass
+class CostModel:
+    """Ridge ensemble over ``featurize`` vectors; predicts microseconds."""
+    feature_names: tuple = FEATURE_NAMES
+    mean: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    scale: np.ndarray = field(default_factory=lambda: np.ones(0))
+    weights: np.ndarray = field(default_factory=lambda: np.zeros((0, 0)))
+    n_records: int = 0
+    ridge: float = 1e-3
+    target: str = "log_us"
+
+    @property
+    def n_members(self) -> int:
+        return int(self.weights.shape[0]) if self.weights.size else 0
+
+    def predict_rows(self, x: np.ndarray) -> np.ndarray:
+        """Feature matrix (n, f) -> predicted microseconds (n,)."""
+        if self.n_members == 0:
+            raise ValueError("CostModel has no fitted members")
+        z = (np.asarray(x, float) - self.mean) / self.scale
+        z1 = np.concatenate([z, np.ones((z.shape[0], 1))], axis=1)
+        log_us = z1 @ self.weights.T            # (n, members)
+        return np.exp(np.clip(log_us.mean(axis=1), -60.0, 60.0))
+
+    def predict(self, shape: GemmShape, tiles: Sequence) -> np.ndarray:
+        """Predicted cost (us) per candidate tile, one model eval each —
+        no scorer involved."""
+        x = np.stack([featurize(shape, t) for t in tiles])
+        return self.predict_rows(x)
+
+    def to_dict(self) -> dict:
+        return {
+            "version": MODEL_VERSION,
+            "feature_version": FEATURE_VERSION,
+            "feature_names": list(self.feature_names),
+            "mean": [float(v) for v in self.mean],
+            "scale": [float(v) for v in self.scale],
+            "weights": [[float(v) for v in row] for row in self.weights],
+            "n_records": self.n_records,
+            "ridge": self.ridge,
+            "target": self.target,
+        }
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostModel":
+        if d.get("version") != MODEL_VERSION:
+            raise ValueError(f"cost model: unknown version "
+                             f"{d.get('version')!r}")
+        if d.get("feature_version") != FEATURE_VERSION:
+            raise ValueError(
+                f"cost model was fit against feature layout "
+                f"v{d.get('feature_version')!r}, this code builds "
+                f"v{FEATURE_VERSION} — refit with `launch/tune.py --fit`")
+        return cls(feature_names=tuple(d["feature_names"]),
+                   mean=np.array(d["mean"], float),
+                   scale=np.array(d["scale"], float),
+                   weights=np.array(d["weights"], float),
+                   n_records=int(d.get("n_records", 0)),
+                   ridge=float(d.get("ridge", 1e-3)),
+                   target=d.get("target", "log_us"))
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def describe(self) -> str:
+        return (f"CostModel[{self.n_members} members x "
+                f"{len(self.feature_names)} features, "
+                f"fit on {self.n_records} records, ridge={self.ridge:g}]")
+
+
+MIN_FIT_RECORDS = 8
+
+
+def fit_records(records, *, ridge: float = 1e-3,
+                members: int = 3) -> CostModel:
+    """Least-squares fit of the ensemble from dataset records.
+
+    Target is ``log(measured_us)`` when the record carries a device
+    measurement, else ``log(analytic_us)`` — measurements refine the
+    analytic story wherever the corpus has them.  Records are taken in
+    corpus order; member j trains on the deterministic strided fold
+    ``index % members == j`` (a poor man's bagging with zero RNG).
+    """
+    rows = [r for r in records
+            if r.get("features") and r.get("analytic_us") is not None
+            and math.isfinite(float(r["analytic_us"]))]
+    if len(rows) < MIN_FIT_RECORDS:
+        raise ValueError(f"tuning dataset too small to fit: {len(rows)} "
+                         f"usable records < {MIN_FIT_RECORDS}")
+    x = np.array([r["features"] for r in rows], float)
+    if x.shape[1] != len(FEATURE_NAMES):
+        raise ValueError(f"feature width {x.shape[1]} != "
+                         f"{len(FEATURE_NAMES)} — refit from a corpus "
+                         f"logged at feature v{FEATURE_VERSION}")
+    y = np.array([_log((r["measured_us"] if r.get("measured_us") is not None
+                        else r["analytic_us"]))
+                  for r in rows])
+    mean = x.mean(axis=0)
+    scale = x.std(axis=0)
+    scale[scale < 1e-12] = 1.0
+    z = (x - mean) / scale
+    z1 = np.concatenate([z, np.ones((z.shape[0], 1))], axis=1)
+    members = max(1, min(members, len(rows)))
+    ws = []
+    for j in range(members):
+        zj, yj = z1[j::members], y[j::members]
+        a = zj.T @ zj + ridge * np.eye(z1.shape[1])
+        ws.append(np.linalg.solve(a, zj.T @ yj))
+    return CostModel(mean=mean, scale=scale, weights=np.stack(ws),
+                     n_records=len(rows), ridge=ridge)
+
+
+def fit_report(model: CostModel, records) -> str:
+    """Fit quality on the given records (relative error in time space)."""
+    rows = [r for r in records if r.get("features")]
+    if not rows:
+        return model.describe()
+    x = np.array([r["features"] for r in rows], float)
+    y = np.array([(r["measured_us"] if r.get("measured_us") is not None
+                   else r["analytic_us"]) for r in rows], float)
+    pred = model.predict_rows(x)
+    rel = np.abs(pred - y) / np.maximum(y, 1e-12)
+    return (f"{model.describe()}\n"
+            f"  relative error on {len(rows)} records: "
+            f"median={np.median(rel):.3f} p90={np.quantile(rel, 0.9):.3f} "
+            f"max={rel.max():.3f}")
+
+
+def model_for(path: Optional[str]) -> Optional[CostModel]:
+    """Load a model if the file exists, else None (callers fall back to
+    exhaustive search and say why)."""
+    if path and os.path.exists(path):
+        return CostModel.load(path)
+    return None

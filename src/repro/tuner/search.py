@@ -10,16 +10,30 @@ and keeps the cheapest total.  Winners thread into the compiled program
 (``compile_program(tuning=...)``) as strategy overrides + per-phase
 ``PEWord.tiling`` entries, so the tuned mapping is what executes.
 
+The per-gemm search itself is a pluggable pipeline of two seams:
+
+    CandidateSource ──▶ candidates ──▶ Scorer ──▶ ranked TileCosts
+         (GridSource)                 (AnalyticScorer | measurement)
+
+:class:`ExhaustiveSearch` is the default — every candidate through the
+scorer, bit-identical to the pre-seam tuner.  :class:`GuidedSearch`
+consults a learned cost model (``tuner/learned.py``) to propose top-K
+candidates, scores only those, and certifies the pick against the
+analytic floor of the whole grid — falling back to the exhaustive sweep
+(and logging the disagreement as fresh training data) when the model's
+top-K provably missed.  Both log their evaluations to a
+``tuner/dataset.py`` corpus when given one.
+
 Optionally the top-K model candidates are re-ranked by on-device timing
 (``measure=``, a ``tile -> seconds`` callable); results persist in a
-:class:`~repro.tuner.cache.TuningCache` keyed by op shape/phase/mesh/
-backend, so a tuned config pays the search once.
+:class:`~repro.tuner.cache.TuningCache` keyed by op shape/phase/mesh
+(topology folded in)/backend, so a tuned config pays the search once.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Protocol
 
 from repro.core.dataflow import (MeshSpec, OpSpec, Strategy, _divisible,
                                  _shardable_dim, plan_model, plan_op,
@@ -29,6 +43,8 @@ from repro.tuner.cache import TuningCache, mesh_tag
 from repro.tuner.cost import (DEFAULT_TILE, GemmShape, TileCost,
                               candidate_tiles, comm_time_s, fused_decode_cost,
                               gemm_for_phase, per_op_decode_cost, tile_cost)
+from repro.tuner.dataset import TuningDataset, make_record
+from repro.tuner.learned import FEATURE_VERSION, featurize
 
 PHASES_FOR_KIND = {
     "train": (Phase.FF, Phase.BP, Phase.UP),
@@ -42,6 +58,222 @@ PHASES_FOR_KIND = {
 FUSED_DECODE_OPS = ("attn_qkv", "attn_o", "ffn_in", "ffn_out")
 
 
+# ---------------------------------------------------------------------------
+# Search seams: candidate generation x scoring, both injectable
+# ---------------------------------------------------------------------------
+
+
+class CandidateSource(Protocol):
+    """Generates the (tm, tn, tk) candidates one search considers."""
+
+    def candidates(self, shape: GemmShape, extra: tuple = ()) -> list:
+        ...
+
+
+class Scorer(Protocol):
+    """Prices one candidate.  THE expensive seam: the default is the
+    analytic model, but a measured scorer (interpret-mode probe, device
+    timing) plugs in here — which is why searches count scorer calls."""
+
+    def score(self, shape: GemmShape, tile: tuple) -> TileCost:
+        ...
+
+
+@dataclass
+class GridSource:
+    """The exhaustive power-of-two grid (``cost.candidate_tiles``),
+    deduplicated — extras that clip onto the generated grid are not
+    counted or evaluated twice."""
+
+    def candidates(self, shape: GemmShape, extra: tuple = ()) -> list:
+        return candidate_tiles(shape, extra=extra)
+
+
+@dataclass
+class AnalyticScorer:
+    """``cost.tile_cost`` with an evaluation counter (the gated metric)."""
+    calls: int = 0
+
+    def score(self, shape: GemmShape, tile: tuple) -> TileCost:
+        self.calls += 1
+        return tile_cost(shape, tile)
+
+
+@dataclass(frozen=True)
+class SearchResult:
+    """What one per-gemm search produced and what it cost to produce."""
+    ranked: tuple                     # scored TileCosts, cheapest first
+    n_candidates: int                 # unique candidates considered
+    n_evals: int                      # scorer evaluations actually spent
+    mode: str                         # exhaustive | guided | fallback
+
+    @property
+    def best(self) -> TileCost:
+        return self.ranked[0]
+
+
+def _rank(costs) -> tuple:
+    return tuple(sorted(costs, key=lambda c: (c.time_s, c.grid_steps)))
+
+
+def _analytic_us(shape: GemmShape, tile: tuple) -> float:
+    t = tile_cost(shape, tile).time_s
+    return t * 1e6 if math.isfinite(t) else math.inf
+
+
+class ExhaustiveSearch:
+    """Score every candidate.  The default search — bit-identical winners
+    to the pre-seam tuner (same grid, same scorer, same sort key)."""
+
+    def __init__(self, source: Optional[CandidateSource] = None,
+                 scorer: Optional[Scorer] = None,
+                 log: Optional[TuningDataset] = None):
+        self.source = source if source is not None else GridSource()
+        self.scorer = scorer if scorer is not None else AnalyticScorer()
+        self.log = log
+        self.searches = 0
+        self.evals = 0
+        self.candidates_seen = 0
+        self.fallbacks = 0                 # always 0; mirrors GuidedSearch
+
+    @property
+    def mode(self) -> str:
+        return "exhaustive"
+
+    def search(self, shape: GemmShape, extra: tuple = (),
+               context: Optional[dict] = None) -> SearchResult:
+        cands = self.source.candidates(shape, extra)
+        ranked = _rank(self.scorer.score(shape, t) for t in cands)
+        self.searches += 1
+        self.evals += len(cands)
+        self.candidates_seen += len(cands)
+        if self.log is not None:
+            for c in ranked:
+                self._log_one(shape, c, context)
+        return SearchResult(ranked=ranked, n_candidates=len(cands),
+                            n_evals=len(cands), mode="exhaustive")
+
+    def _log_one(self, shape, c: TileCost, context) -> None:
+        self.log.append(make_record(
+            shape=shape, tile=c.tile, features=featurize(shape, c.tile),
+            analytic_us=(c.time_s * 1e6 if math.isfinite(c.time_s)
+                         else math.inf),
+            source="exhaustive", context=context,
+            feature_version=FEATURE_VERSION))
+
+
+class GuidedSearch:
+    """Model-proposed top-K, scored only where it counts, certified.
+
+    1. The learned model ranks every candidate (model evals are free —
+       a numpy dot per tile; no scorer involved).
+    2. Only the ``top_k`` cheapest-predicted candidates go through the
+       scorer.
+    3. The pick is certified against the ANALYTIC floor of the full
+       grid: if the best analytic cost inside the top-K exceeds
+       ``(1 + tolerance) x min(analytic cost over all candidates)``,
+       the model's shortlist provably missed the analytic optimum — the
+       search falls back to the exhaustive sweep, and the disagreement
+       (every candidate's features + predicted + analytic cost) is
+       logged as new training data.
+
+    The certificate prices candidates with the free static cost
+    arithmetic, never the scorer, so with the default analytic scorer
+    the returned mapping's analytic cost NEVER exceeds the exhaustive
+    winner's by more than ``tolerance`` — by construction, for any
+    model, any dataset (the property `tests/test_learned_tuner.py`
+    pins).  What guided search economizes is scorer evaluations: the
+    seam a measured scorer (device probes) plugs into.
+    """
+
+    def __init__(self, model, *, top_k: int = 4, tolerance: float = 0.02,
+                 source: Optional[CandidateSource] = None,
+                 scorer: Optional[Scorer] = None,
+                 log: Optional[TuningDataset] = None):
+        if top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        if tolerance < 0:
+            raise ValueError(f"tolerance must be >= 0, got {tolerance}")
+        self.model = model
+        self.top_k = top_k
+        self.tolerance = tolerance
+        self.source = source if source is not None else GridSource()
+        self.scorer = scorer if scorer is not None else AnalyticScorer()
+        self.log = log
+        self.searches = 0
+        self.evals = 0
+        self.candidates_seen = 0
+        self.fallbacks = 0
+
+    @property
+    def mode(self) -> str:
+        return "guided"
+
+    def search(self, shape: GemmShape, extra: tuple = (),
+               context: Optional[dict] = None) -> SearchResult:
+        cands = self.source.candidates(shape, extra)
+        self.searches += 1
+        self.candidates_seen += len(cands)
+        if len(cands) <= self.top_k:
+            # grid already tiny (smoke shapes collapse the clip sets):
+            # guided degenerates to the sweep, honestly accounted
+            return self._sweep(shape, cands, context, mode="exhaustive")
+        preds = self.model.predict(shape, cands)
+        order = sorted(range(len(cands)), key=lambda i: (preds[i], cands[i]))
+        top = [cands[i] for i in order[:self.top_k]]
+        floor_us = min(_analytic_us(shape, t) for t in cands)
+        best_top_us = min(_analytic_us(shape, t) for t in top)
+        if best_top_us <= (1.0 + self.tolerance) * floor_us:
+            ranked = _rank(self.scorer.score(shape, t) for t in top)
+            self.evals += len(top)
+            if self.log is not None:
+                by_tile = {cands[i]: preds[i] for i in order[:self.top_k]}
+                for c in ranked:
+                    self._log_one(shape, c.tile, by_tile.get(c.tile),
+                                  context, "guided")
+            return SearchResult(ranked=ranked, n_candidates=len(cands),
+                                n_evals=len(top), mode="guided")
+        # disagreement: the model's shortlist missed the analytic optimum
+        # beyond tolerance — sweep, and feed the miss back to the corpus
+        self.fallbacks += 1
+        if self.log is not None:
+            for i, t in enumerate(cands):
+                self._log_one(shape, t, float(preds[i]), context, "fallback")
+        return self._sweep(shape, cands, context, mode="fallback")
+
+    def _sweep(self, shape, cands, context, *, mode: str) -> SearchResult:
+        ranked = _rank(self.scorer.score(shape, t) for t in cands)
+        self.evals += len(cands)
+        if self.log is not None and mode == "exhaustive":
+            for c in ranked:
+                self._log_one(shape, c.tile, None, context, mode)
+        return SearchResult(ranked=ranked, n_candidates=len(cands),
+                            n_evals=len(cands), mode=mode)
+
+    def _log_one(self, shape, tile, pred_us, context, source) -> None:
+        self.log.append(make_record(
+            shape=shape, tile=tile, features=featurize(shape, tile),
+            analytic_us=_analytic_us(shape, tile), pred_us=pred_us,
+            source=source, context=context,
+            feature_version=FEATURE_VERSION))
+
+
+def search_stats(search) -> dict:
+    """Aggregate counters of one search instance (rides ProgramTuning)."""
+    return {
+        "mode": search.mode,
+        "searches": search.searches,
+        "n_candidates": search.candidates_seen,
+        "n_evals": search.evals,
+        "fallbacks": search.fallbacks,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-gemm / per-op / per-program tuning on top of the seams
+# ---------------------------------------------------------------------------
+
+
 @dataclass(frozen=True)
 class TunedGemm:
     shape: GemmShape
@@ -49,12 +281,19 @@ class TunedGemm:
     n_candidates: int
     measured_us: Optional[float] = None   # on-device time of `best.tile`
     source: str = "model"                 # model | measured | cache
+    n_evals: int = 0                      # scorer evaluations spent
+    mode: str = "exhaustive"              # exhaustive | guided | fallback
 
 
 def tune_gemm(shape: GemmShape, *, top_k: int = 0,
               measure: Optional[Callable] = None,
-              extra_tiles: tuple = ()) -> TunedGemm:
+              extra_tiles: tuple = (),
+              search=None,
+              context: Optional[dict] = None) -> TunedGemm:
     """Pick the cheapest feasible tiling for one gemm.
+
+    search: an ``ExhaustiveSearch`` (default) or ``GuidedSearch``; the
+    seam every caller up to ``tune_program`` threads through.
 
     measure: optional ``tile -> seconds`` callable; when given, the top_k
     candidates by model cost are re-RANKED by measured time.  The
@@ -63,22 +302,27 @@ def tune_gemm(shape: GemmShape, *, top_k: int = 0,
     interpret mode on CPU), so its absolute seconds are not on the same
     scale as the model estimates the strategy comparison sums.
     """
-    cands = candidate_tiles(shape, extra=extra_tiles)
-    scored = sorted((tile_cost(shape, t) for t in cands),
-                    key=lambda c: (c.time_s, c.grid_steps))
-    best = scored[0]
+    if search is None:
+        search = ExhaustiveSearch()
+    res = search.search(shape, extra=extra_tiles, context=context)
+    best = res.best
     if measure is None or top_k <= 1:
-        return TunedGemm(shape=shape, best=best, n_candidates=len(cands))
+        return TunedGemm(shape=shape, best=best,
+                         n_candidates=res.n_candidates,
+                         n_evals=res.n_evals, mode=res.mode)
     timed = []
-    for c in scored[:top_k]:
+    for c in res.ranked[:top_k]:
         if not c.feasible:
             continue
         timed.append((measure(c.tile), c))
     if not timed:
-        return TunedGemm(shape=shape, best=best, n_candidates=len(cands))
+        return TunedGemm(shape=shape, best=best,
+                         n_candidates=res.n_candidates,
+                         n_evals=res.n_evals, mode=res.mode)
     t_s, c = min(timed, key=lambda tc: tc[0])
-    return TunedGemm(shape=shape, best=c, n_candidates=len(cands),
-                     measured_us=t_s * 1e6, source="measured")
+    return TunedGemm(shape=shape, best=c, n_candidates=res.n_candidates,
+                     measured_us=t_s * 1e6, source="measured",
+                     n_evals=res.n_evals, mode=res.mode)
 
 
 @dataclass
@@ -111,12 +355,16 @@ class ProgramTuning:
     backend: str
     ops: dict = field(default_factory=dict)          # name -> OpTuning
     fused_decode: Optional[dict] = None              # tune_fused_decode result
+    search: Optional[dict] = None                    # search_stats() summary
 
     def as_overrides(self) -> dict:
         return {name: t.strategy for name, t in self.ops.items()}
 
     def as_tilings(self) -> dict:
         return {name: dict(t.tiles) for name, t in self.ops.items()}
+
+    def search_meta(self) -> Optional[dict]:
+        return self.search
 
     def to_dict(self) -> dict:
         d = {
@@ -129,6 +377,8 @@ class ProgramTuning:
             fd = dict(self.fused_decode)
             fd["tile"] = list(fd["tile"])
             d["fused_decode"] = fd
+        if self.search is not None:
+            d["search"] = dict(self.search)
         return d
 
     def describe(self) -> str:
@@ -142,6 +392,10 @@ class ProgramTuning:
                         f"(comm={t.comm_s*1e6:8.1f}us) {tiles} [{t.source}]")
         hdr = (f"ProgramTuning kind={self.kind} backend={self.backend} "
                f"mesh={mesh_tag(self.mesh)}")
+        if self.search is not None:
+            s = self.search
+            hdr += (f"\n  search: {s['mode']} evals={s['n_evals']}/"
+                    f"{s['n_candidates']} fallbacks={s['fallbacks']}")
         return "\n".join([hdr] + rows)
 
 
@@ -161,7 +415,8 @@ def _score_strategy(op: OpSpec, mesh: MeshSpec, force: Optional[Strategy], *,
                     seq_shardable: bool, backend: str, sr_update: bool,
                     cache: Optional[TuningCache],
                     measure: Optional[Callable],
-                    top_k: int, microbatch: int) -> OpTuning:
+                    top_k: int, microbatch: int,
+                    search=None) -> OpTuning:
     """Tile every phase of one op under one strategy; price comm + kernels."""
     phases = PHASES_FOR_KIND[kind]
     tag = mesh_tag(mesh)
@@ -185,7 +440,11 @@ def _score_strategy(op: OpSpec, mesh: MeshSpec, force: Optional[Strategy], *,
             t_s = float(hit["time_s"])
             cand.source = "cache"
         else:
-            tuned = tune_gemm(shape, top_k=top_k, measure=measure)
+            tuned = tune_gemm(shape, top_k=top_k, measure=measure,
+                              search=search,
+                              context={"op": op.name, "phase": phase,
+                                       "mesh": tag, "kind": kind,
+                                       "strategy": plan.strategy})
             tile = tuned.best.tile
             # model time even when measured: the probe's absolute seconds
             # are a different scale (capped shape, interpret mode) — the
@@ -209,7 +468,8 @@ def tune_op(op: OpSpec, mesh: MeshSpec, *, kind: str,
             backend: str = "pallas", sr_update: bool = True,
             cache: Optional[TuningCache] = None,
             measure: Optional[Callable] = None,
-            top_k: int = 3, microbatch: int = 1) -> Optional[OpTuning]:
+            top_k: int = 3, microbatch: int = 1,
+            search=None) -> Optional[OpTuning]:
     """Joint strategy x tiling search for one op.  None for VPU-path ops
     ('state' role: router logits, conv taps — never on the MAC array)."""
     if op.role == "state":
@@ -221,38 +481,71 @@ def tune_op(op: OpSpec, mesh: MeshSpec, *, kind: str,
             tokens_per_dp_shard=tokens_per_dp_shard,
             seq_shardable=seq_shardable, backend=backend,
             sr_update=sr_update, cache=cache, measure=measure,
-            top_k=top_k, microbatch=microbatch)
+            top_k=top_k, microbatch=microbatch, search=search)
         if best is None or cand.total_s < best.total_s:
             best = cand
     return best
 
 
+def _fused_candidates(shapes, extra_tiles: tuple) -> list:
+    cands: set = set()
+    for s in shapes:
+        cands.update(candidate_tiles(s, extra=extra_tiles))
+    return sorted(cands)
+
+
 def tune_fused_decode(ops: list, *, tokens: float,
-                      extra_tiles: tuple = ()) -> Optional[dict]:
+                      extra_tiles: tuple = (), search=None) -> Optional[dict]:
     """Search the decode megakernel's SHARED LoopNest tile.
 
     The fused launch runs the layer's attention-unit gemms back-to-back
     with one (tm, tn, tk) nest, so the search scores each candidate tile
     against ALL of them at once (``cost.fused_decode_cost``) instead of
-    per-gemm.  Returns {"tile", "fused_s", "per_op_s", "pred_speedup",
-    "ops"} or None when the model has no fused-unit op (pure-SSM decode
-    paths keep per-op words).
+    per-gemm.  A ``GuidedSearch`` prunes the same way it does per-gemm:
+    the model ranks candidates by SUMMED predicted per-gemm cost, only
+    the top-K are priced through ``fused_decode_cost``, and the pick is
+    certified against the full grid's analytic fused floor (fallback to
+    the sweep past tolerance).  Returns {"tile", "fused_s", "per_op_s",
+    "pred_speedup", "ops", "n_candidates", "n_evals", "mode"} or None
+    when the model has no fused-unit op (pure-SSM decode paths keep
+    per-op words).
     """
     fused = [op for op in ops if op.name in FUSED_DECODE_OPS]
     if not fused:
         return None
     shapes = [gemm_for_phase(op, Phase.DECODE, tokens=tokens)
               for op in fused]
-    cands: set = set()
-    for s in shapes:
-        cands.update(candidate_tiles(s, extra=extra_tiles))
-    best_s, best_t = min((fused_decode_cost(shapes, t), t)
-                         for t in sorted(cands))
+    cands = _fused_candidates(shapes, extra_tiles)
+    mode = "exhaustive"
+    n_evals = len(cands)
+    if isinstance(search, GuidedSearch) and len(cands) > search.top_k:
+        totals = None
+        for s in shapes:
+            p = search.model.predict(s, cands)
+            totals = p if totals is None else totals + p
+        order = sorted(range(len(cands)),
+                       key=lambda i: (totals[i], cands[i]))
+        top = [cands[i] for i in order[:search.top_k]]
+        floor = min(fused_decode_cost(shapes, t) for t in cands)
+        best_s, best_t = min((fused_decode_cost(shapes, t), t)
+                             for t in sorted(top))
+        if (math.isfinite(best_s)
+                and best_s <= (1.0 + search.tolerance) * floor):
+            mode, n_evals = "guided", len(top)
+        else:
+            search.fallbacks += 1
+            mode = "fallback"
+            best_s, best_t = min((fused_decode_cost(shapes, t), t)
+                                 for t in cands)
+    else:
+        best_s, best_t = min((fused_decode_cost(shapes, t), t)
+                             for t in cands)
     per_op = per_op_decode_cost(shapes)
     return {"tile": best_t, "fused_s": best_s, "per_op_s": per_op,
             "pred_speedup": per_op / best_s if best_s > 0
             and math.isfinite(best_s) else 0.0,
-            "ops": [op.name for op in fused]}
+            "ops": [op.name for op in fused],
+            "n_candidates": len(cands), "n_evals": n_evals, "mode": mode}
 
 
 def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
@@ -260,14 +553,21 @@ def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
                  sr_update: bool = True, cache: Optional[TuningCache] = None,
                  measure: Optional[Callable] = None, top_k: int = 3,
                  microbatch: int = 1,
-                 fused_decode: bool = False) -> ProgramTuning:
+                 fused_decode: bool = False,
+                 search=None) -> ProgramTuning:
     """Tune every MAC-array op of a model; mirrors plan_model's shape math
     so comm estimates line up with the plan the program will compile.
+
+    search: one ``ExhaustiveSearch``/``GuidedSearch`` instance shared by
+    every per-gemm search of this program (its counters become the
+    ProgramTuning's ``search`` stats — evaluations spent, fallbacks).
 
     fused_decode=True (decode kind) additionally searches the megakernel's
     shared tile and overwrites the fused ops' DECODE tiling with the
     winner — so ``as_tilings()`` -> ``compile_program(tuning=...)`` ->
     ``PEWord.tiling`` lands it in the kernel's BlockSpecs."""
+    if search is None:
+        search = ExhaustiveSearch()
     tokens, _ = step_tokens_per_shard(mesh, global_batch=global_batch,
                                       seq_len=seq_len, kind=kind)
     seq_shardable = kind != "decode" and _divisible(seq_len, mesh.tp)
@@ -276,7 +576,7 @@ def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
         t = tune_op(op, mesh, kind=kind, tokens_per_dp_shard=tokens,
                     seq_shardable=seq_shardable, backend=backend,
                     sr_update=sr_update, cache=cache, measure=measure,
-                    top_k=top_k, microbatch=microbatch)
+                    top_k=top_k, microbatch=microbatch, search=search)
         if t is not None:
             out.ops[op.name] = t
     # HBM-budget reconciliation: the planner's budget pass may flip per-op
@@ -296,15 +596,16 @@ def tune_program(ops: list, mesh: MeshSpec, *, global_batch: int,
                 op, mesh, final, kind=kind, tokens_per_dp_shard=tokens,
                 seq_shardable=seq_shardable, backend=backend,
                 sr_update=sr_update, cache=cache, measure=measure,
-                top_k=top_k, microbatch=microbatch)
+                top_k=top_k, microbatch=microbatch, search=search)
     if fused_decode and kind == "decode":
-        fd = tune_fused_decode(ops, tokens=tokens)
+        fd = tune_fused_decode(ops, tokens=tokens, search=search)
         if fd is not None:
             out.fused_decode = fd
             for name in fd["ops"]:
                 ot = out.ops.get(name)
                 if ot is not None:
                     ot.tiles[Phase.DECODE] = tuple(fd["tile"])
+    out.search = search_stats(search)
     return out
 
 

@@ -1,0 +1,367 @@
+"""Learned cost model + guided mapping search (tuner/{learned,dataset}).
+
+Acceptance gates:
+  * ``search=ExhaustiveSearch()`` is bit-identical to the pre-seam tuner
+    (pinned PR 3 winners);
+  * guided search's certificate: for ANY model and ANY logged dataset,
+    the returned mapping's analytic cost never exceeds the exhaustive
+    winner's by more than the configured tolerance (hypothesis property
+    over arbitrary model weights + pinned adversarial fallback cases);
+  * the dataset layer logs (features, predicted, analytic) triples that
+    round-trip through JSONL and refit the model deterministically.
+
+The property suite runs under hypothesis when available; every property
+has a deterministic pinned case so bare containers stay covered.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import MeshSpec, Phase, compile_program, extract_ops
+from repro.tuner import (FEATURE_NAMES, FEATURE_VERSION, AnalyticScorer,
+                         CostModel, ExhaustiveSearch, GemmShape, GuidedSearch,
+                         TuningDataset, candidate_tiles, conv_im2col_gemm,
+                         featurize, fit_records, fit_report, load_records,
+                         make_record, model_for, tile_cost, tune_fused_decode,
+                         tune_gemm, tune_program)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: pinned cases only
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):           # decorator shims so the property class
+        return lambda f: f          # still *defines* (it is skipped whole)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        floats = integers = sampled_from = lists = staticmethod(
+            lambda *_a, **_k: None)
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1}, batch_axes=("data",))
+
+# The PR 3 paper-net gemms and their exhaustive winners (pinned: the
+# seam refactor must not move them).
+PINNED_WINNERS = (
+    (GemmShape(m=2560, n=2560, k=2560), (512, 512, 512), 48),
+    (conv_im2col_gemm(batch=32, out_hw=27, kernel=5, in_ch=96,
+                      out_ch=256), (512, 256, 512), 32),
+    (GemmShape(m=4096, n=4864, k=896), (512, 512, 896), 48),
+    (GemmShape(m=2560, n=2560, k=2560, rbits=8), (512, 512, 512), 48),
+    (GemmShape(m=4096, n=4096, k=4096), (512, 512, 1024), 48),
+)
+
+CORPUS_SHAPES = tuple(s for s, _, _ in PINNED_WINNERS) + (
+    GemmShape(m=1024, n=2048, k=512), GemmShape(m=512, n=1024, k=4096))
+
+
+def _corpus(path=None) -> TuningDataset:
+    ds = TuningDataset(path)
+    search = ExhaustiveSearch(log=ds)
+    for s in CORPUS_SHAPES:
+        search.search(s, context={"kind": "test-corpus"})
+    return ds
+
+
+@pytest.fixture(scope="module")
+def model():
+    return fit_records(_corpus().records)
+
+
+class _StubModel:
+    """predict() = an arbitrary callable — the adversarial seams."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def predict(self, shape, tiles):
+        return np.array([self.fn(shape, t) for t in tiles], float)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive parity (the refactor moved nothing)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,tile,n", PINNED_WINNERS,
+                         ids=[s.tag() for s, _, _ in PINNED_WINNERS])
+def test_exhaustive_search_matches_pr3_winners(shape, tile, n):
+    tuned = tune_gemm(shape, search=ExhaustiveSearch())
+    assert tuned.best.tile == tile
+    assert tuned.n_candidates == n
+    assert tuned.n_evals == n            # exhaustive scores everything
+    assert tuned.mode == "exhaustive"
+    # and the default-path call (search=None) is the same object
+    assert tune_gemm(shape).best.tile == tile
+
+
+def test_exhaustive_counts_scorer_calls():
+    scorer = AnalyticScorer()
+    search = ExhaustiveSearch(scorer=scorer)
+    shape = GemmShape(m=512, n=512, k=512)
+    res = search.search(shape)
+    assert scorer.calls == res.n_candidates == res.n_evals
+    assert search.evals == res.n_evals and search.searches == 1
+
+
+# ---------------------------------------------------------------------------
+# Dataset layer
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_logs_every_evaluation(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    ds = TuningDataset(path)
+    shape = GemmShape(m=512, n=512, k=512)
+    res = ExhaustiveSearch(log=ds).search(
+        shape, context={"op": "ffn_in", "phase": Phase.FF, "kind": "train"})
+    assert len(ds) == res.n_candidates
+    rec = ds.records[0]
+    assert rec["shape"] == shape.tag() and rec["fv"] == FEATURE_VERSION
+    assert len(rec["features"]) == len(FEATURE_NAMES)
+    assert rec["op"] == "ffn_in" and rec["phase"] == "FF"
+    assert rec["analytic_us"] > 0 and rec["pred_us"] is None
+    # JSONL round-trip
+    loaded = load_records(path, feature_version=FEATURE_VERSION)
+    assert len(loaded) == len(ds)
+    assert loaded[0] == json.loads(json.dumps(ds.records[0]))
+    # corrupt line is skipped, wrong feature version filtered
+    with open(path, "a") as f:
+        f.write("{truncated\n")
+        f.write(json.dumps(dict(rec, fv=99)) + "\n")
+    assert len(load_records(path, feature_version=FEATURE_VERSION)) == len(ds)
+    assert len(load_records(str(tmp_path))) == len(ds) + 1   # dir, unfiltered
+
+
+def test_featurize_matches_cost_model_arithmetic():
+    shape = GemmShape(m=1024, n=1024, k=1024)
+    tile = (256, 256, 512)
+    x = featurize(shape, tile)
+    assert x.shape == (len(FEATURE_NAMES),)
+    c = tile_cost(shape, tile)
+    i = FEATURE_NAMES.index("log_roofline_us")
+    assert math.isclose(float(x[i]), math.log(c.time_s * 1e6))
+    # infeasible tiles keep finite features + the indicator
+    big = featurize(GemmShape(m=4096, n=4096, k=4096), (4096, 4096, 1024))
+    assert np.isfinite(big).all()
+    assert big[FEATURE_NAMES.index("infeasible")] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Model fit / serialization
+# ---------------------------------------------------------------------------
+
+
+def test_fit_is_deterministic_and_roundtrips(tmp_path, model):
+    records = _corpus().records
+    again = fit_records(records)
+    shape = GemmShape(m=2560, n=2560, k=2560)
+    tiles = candidate_tiles(shape)
+    np.testing.assert_array_equal(model.predict(shape, tiles),
+                                  again.predict(shape, tiles))
+    path = str(tmp_path / "model.json")
+    model.save(path)
+    loaded = CostModel.load(path)
+    np.testing.assert_array_equal(model.predict(shape, tiles),
+                                  loaded.predict(shape, tiles))
+    assert loaded.to_dict() == model.to_dict()
+    assert model_for(path) is not None
+    assert model_for(str(tmp_path / "missing.json")) is None
+    assert "relative error" in fit_report(loaded, records)
+
+
+def test_fit_on_analytic_targets_recovers_roofline(model):
+    """Fit on analytic targets, the model must RANK like the analytic
+    cost on a shape it never saw (that is the whole premise)."""
+    shape = GemmShape(m=3072, n=5120, k=640)
+    tiles = candidate_tiles(shape)
+    pred = model.predict(shape, tiles)
+    best_pred = tiles[int(np.argmin(pred))]
+    best_true = min(tiles, key=lambda t: tile_cost(shape, t).time_s)
+    assert (tile_cost(shape, best_pred).time_s
+            <= 1.02 * tile_cost(shape, best_true).time_s)
+
+
+def test_model_version_validation(model):
+    d = model.to_dict()
+    with pytest.raises(ValueError, match="unknown version"):
+        CostModel.from_dict(dict(d, version=99))
+    with pytest.raises(ValueError, match="refit"):
+        CostModel.from_dict(dict(d, feature_version=99))
+
+
+def test_fit_rejects_tiny_corpus():
+    shape = GemmShape(m=64, n=128, k=128)
+    recs = [make_record(shape=shape, tile=(64, 128, 128),
+                        features=featurize(shape, (64, 128, 128)),
+                        analytic_us=1.0)]
+    with pytest.raises(ValueError, match="too small"):
+        fit_records(recs)
+
+
+# ---------------------------------------------------------------------------
+# Guided search: modes, certificate, fallback logging
+# ---------------------------------------------------------------------------
+
+
+def test_guided_prunes_evals_and_matches_exhaustive(model):
+    for shape, tile, n in PINNED_WINNERS:
+        g = tune_gemm(shape, search=GuidedSearch(model, top_k=4))
+        assert g.mode == "guided"
+        assert g.n_evals == 4 and g.n_candidates == n
+        assert g.best.tile == tile           # gap is exactly zero here
+
+
+def test_guided_falls_back_on_adversarial_model():
+    """A model that ranks candidates WORST-first must trip the
+    certificate: exhaustive fallback, disagreement logged as data."""
+    bad = _StubModel(lambda s, t: -tile_cost(s, t).time_s)
+    ds = TuningDataset()
+    search = GuidedSearch(bad, top_k=4, log=ds)
+    shape = GemmShape(m=2560, n=2560, k=2560)
+    ex = tune_gemm(shape, search=ExhaustiveSearch())
+    g = tune_gemm(shape, search=search)
+    assert g.mode == "fallback" and search.fallbacks == 1
+    assert g.best.tile == ex.best.tile       # fallback = the full sweep
+    assert g.n_evals == g.n_candidates
+    # every candidate logged with its (bad) prediction for refitting
+    assert len(ds) == g.n_candidates
+    assert all(r["source"] == "fallback" and r["pred_us"] is not None
+               for r in ds.records)
+
+
+def test_guided_logs_predictions_in_guided_mode(model):
+    ds = TuningDataset()
+    g = tune_gemm(GemmShape(m=2560, n=2560, k=2560),
+                  search=GuidedSearch(model, top_k=4, log=ds))
+    assert g.mode == "guided" and len(ds) == 4
+    assert all(r["source"] == "guided" and r["pred_us"] is not None
+               for r in ds.records)
+
+
+def test_guided_degenerates_on_tiny_grids(model):
+    """Grid <= top_k: nothing to prune; honest exhaustive accounting."""
+    shape = GemmShape(m=64, n=128, k=128)
+    n = len(candidate_tiles(shape))
+    g = tune_gemm(shape, search=GuidedSearch(model, top_k=max(n, 8)))
+    assert g.mode == "exhaustive" and g.n_evals == n
+
+
+def test_guided_validates_params(model):
+    with pytest.raises(ValueError):
+        GuidedSearch(model, top_k=0)
+    with pytest.raises(ValueError):
+        GuidedSearch(model, tolerance=-0.1)
+
+
+GAP_SHAPES = (GemmShape(m=2560, n=2560, k=2560),
+              conv_im2col_gemm(batch=32, out_hw=27, kernel=5, in_ch=96,
+                               out_ch=256),
+              GemmShape(m=4096, n=4864, k=896),
+              GemmShape(m=512, n=1024, k=4096))
+
+
+def _assert_gap_bounded(model_obj, shape, top_k, tolerance):
+    ex = tune_gemm(shape, search=ExhaustiveSearch())
+    g = tune_gemm(shape,
+                  search=GuidedSearch(model_obj, top_k=top_k,
+                                      tolerance=tolerance))
+    assert g.best.feasible
+    gap = (g.best.time_s - ex.best.time_s) / ex.best.time_s
+    assert gap <= tolerance + 1e-12, (shape.tag(), g.mode, gap)
+
+
+@needs_hypothesis
+class TestGuidedCertificateProperty:
+    """THE acceptance property: for any model (any dataset it was fit
+    from — arbitrary weights subsume every reachable fit) the guided
+    winner's analytic cost is within tolerance of the exhaustive
+    winner's.  The certificate prices the full grid with free static
+    arithmetic, so this holds by construction, not by model quality."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(ws=st.lists(st.floats(-5, 5, allow_nan=False), min_size=15,
+                       max_size=15),
+           shape_i=st.integers(0, len(GAP_SHAPES) - 1),
+           top_k=st.integers(1, 8),
+           tolerance=st.floats(0, 0.5, allow_nan=False))
+    def test_gap_bounded_for_any_model(self, ws, shape_i, top_k, tolerance):
+        m = CostModel(mean=np.zeros(len(FEATURE_NAMES)),
+                      scale=np.ones(len(FEATURE_NAMES)),
+                      weights=np.array([ws]), n_records=1)
+        _assert_gap_bounded(m, GAP_SHAPES[shape_i], top_k, tolerance)
+
+
+@pytest.mark.parametrize("fn,fid", [
+    (lambda s, t: -tile_cost(s, t).time_s, "worst-first"),
+    (lambda s, t: float(sum(t)), "biggest-tile-last"),
+    (lambda s, t: 1.0, "constant"),
+    (lambda s, t: tile_cost(s, t).time_s, "oracle"),
+], ids=lambda x: x if isinstance(x, str) else "")
+def test_gap_bounded_pinned(fn, fid):
+    """Pinned adversarial/degenerate models (the property's backstop
+    when hypothesis is absent)."""
+    for shape in GAP_SHAPES:
+        for tol in (0.0, 0.02, 0.5):
+            _assert_gap_bounded(_StubModel(fn), shape, 4, tol)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end threading: tune_program / fused decode / compile_program
+# ---------------------------------------------------------------------------
+
+
+def test_tune_program_guided_matches_exhaustive_tiles(model):
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    ops = extract_ops(cfg)
+    kw = dict(global_batch=shape.global_batch, seq_len=shape.seq_len,
+              kind=shape.kind)
+    ex = tune_program(ops, MESH1, **kw)
+    g = tune_program(ops, MESH1, search=GuidedSearch(model, top_k=4), **kw)
+    assert g.as_tilings() == ex.as_tilings()
+    assert g.as_overrides() == ex.as_overrides()
+    assert ex.search["mode"] == "exhaustive"
+    assert g.search["mode"] == "guided"
+    assert g.search["n_evals"] <= ex.search["n_evals"]
+    assert "search" in g.to_dict() and "evals=" in g.describe()
+
+
+def test_tuning_search_meta_reaches_program(model):
+    cfg = get_reduced("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=2, kind="train")
+    tuning = tune_program(extract_ops(cfg), MESH1,
+                          global_batch=shape.global_batch,
+                          seq_len=shape.seq_len, kind=shape.kind,
+                          search=GuidedSearch(model, top_k=4))
+    for t in (tuning, tuning.to_dict()):
+        prog = compile_program(cfg, shape, MESH1, tuning=t)
+        assert prog.tuning_search is not None
+        assert prog.tuning_search["mode"] == "guided"
+        assert "tuning: guided search" in prog.describe()
+        assert json.loads(prog.to_json())["tuning_search"]["mode"] == "guided"
+    assert compile_program(cfg, shape, MESH1).tuning_search is None
+
+
+def test_tune_fused_decode_guided(model):
+    ops = extract_ops(get_reduced("qwen2-0.5b"))
+    ex = tune_fused_decode(ops, tokens=8)
+    assert ex["mode"] == "exhaustive"
+    assert ex["n_evals"] == ex["n_candidates"]
+    g = tune_fused_decode(ops, tokens=8,
+                          search=GuidedSearch(model, top_k=4))
+    assert g["n_evals"] <= ex["n_evals"]
+    assert g["fused_s"] <= 1.02 * ex["fused_s"]
+    if g["mode"] == "guided":
+        assert g["n_evals"] == 4

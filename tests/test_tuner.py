@@ -23,8 +23,9 @@ from repro.core.program import PEWord
 from repro.engine import PEContext, pe_dot
 from repro.models import transformer as tfm
 from repro.tuner import (DEFAULT_TILE, GemmShape, TuningCache, cache_key,
-                         conv_im2col_gemm, default_tile_for, gemm_for_phase,
-                         mesh_tag, tile_cost, tune_gemm, tune_program)
+                         candidate_tiles, conv_im2col_gemm, default_tile_for,
+                         gemm_for_phase, mesh_tag, tile_cost, tune_gemm,
+                         tune_program)
 
 KEY = jax.random.PRNGKey(11)
 MESH1 = MeshSpec(axis_sizes={"data": 1, "model": 1}, batch_axes=("data",))
@@ -296,6 +297,87 @@ def test_cache_key_includes_sr_flag():
     assert (cache_key(a, Phase.UP, "m", "pallas")
             != cache_key(b, Phase.UP, "m", "pallas"))
     assert mesh_tag(MESH) == "data16-model16"
+
+
+def test_mesh_tag_folds_in_topology(tmp_path):
+    """REGRESSION (PR 7 follow-up): comm cost is topology-dependent, so a
+    winner tuned on a 1-module mesh must NOT be reused on a 4-module
+    topology — the cache tag has to differ."""
+    import dataclasses
+
+    from repro.core import ModuleTopology
+
+    flat = MESH
+    topo4 = dataclasses.replace(
+        MESH, topology=ModuleTopology(n_modules=4, pes_per_module=64))
+    topo8 = dataclasses.replace(
+        MESH, topology=ModuleTopology(n_modules=8, pes_per_module=32))
+    assert mesh_tag(flat) == "data16-model16"       # v1 tag preserved
+    assert mesh_tag(topo4) != mesh_tag(flat)
+    assert mesh_tag(topo4) != mesh_tag(topo8)
+    # the degenerate 1-module topology is bit-identical to the flat
+    # planner (PR 7), so it keeps the flat tag — old entries still hit
+    topo1 = dataclasses.replace(
+        MESH, topology=ModuleTopology(n_modules=1, pes_per_module=256))
+    assert mesh_tag(topo1) == mesh_tag(flat)
+    # same module split, different link bandwidths: different winners
+    slow = dataclasses.replace(
+        MESH, topology=ModuleTopology(n_modules=4, pes_per_module=64,
+                                      inter_bw=1e9))
+    assert mesh_tag(slow) != mesh_tag(topo4)
+    # a cache populated under one topology misses under another
+    cache = TuningCache(str(tmp_path / "c.json"))
+    shape = GemmShape(m=128, n=128, k=128)
+    cache.put(shape, Phase.FF, mesh_tag(flat), "pallas",
+              tile=(64, 64, 128), time_s=1e-6)
+    assert cache.get(shape, Phase.FF, mesh_tag(flat), "pallas") is not None
+    assert cache.get(shape, Phase.FF, mesh_tag(topo4), "pallas") is None
+
+
+def test_cache_v1_files_still_load(tmp_path):
+    """Back-compat: a version-1 cache file (flat mesh tags) loads under
+    the v2 reader and its entries keep hitting for flat meshes."""
+    import json as _json
+
+    path = str(tmp_path / "old.json")
+    key = cache_key(GemmShape(m=128, n=128, k=128), Phase.FF,
+                    "data16-model16", "pallas")
+    with open(path, "w") as f:
+        _json.dump({"version": 1, "entries": {
+            key: {"tile": [64, 64, 128], "time_s": 1e-6,
+                  "source": "model"}}}, f)
+    cache = TuningCache(path)
+    hit = cache.get(GemmShape(m=128, n=128, k=128), Phase.FF,
+                    "data16-model16", "pallas")
+    assert hit is not None and tuple(hit["tile"]) == (64, 64, 128)
+    # new files write v2; unknown versions still refuse to load
+    saved = cache.save(str(tmp_path / "new.json"))
+    with open(saved) as f:
+        assert _json.load(f)["version"] == 2
+    with open(path, "w") as f:
+        _json.dump({"version": 99, "entries": {}}, f)
+    with pytest.raises(ValueError, match="unknown version"):
+        TuningCache(path)
+
+
+def test_candidate_tiles_dedupe_extras():
+    """REGRESSION: extras that clip onto the generated grid (or the same
+    tile spelled as list / numpy ints) must not inflate n_candidates —
+    the perf gate counts evaluations by it."""
+    shape = GemmShape(m=2560, n=2560, k=2560)
+    base = candidate_tiles(shape)
+    assert len(base) == len(set(base))
+    # in-grid extras, list spelling, numpy ints, and a clipping duplicate
+    extras = ((256, 256, 512), [256, 256, 512],
+              (np.int64(256), np.int64(256), np.int64(512)),
+              (4096, 4096, 4096), (8192, 8192, 8192))
+    with_extras = candidate_tiles(shape, extra=extras)
+    assert len(with_extras) == len(set(with_extras))
+    # the two oversized extras clip to the SAME (2560, 2560, 2560) tile
+    assert len(with_extras) == len(base) + 1
+    assert all(isinstance(x, int) for t in with_extras for x in t)
+    tuned = tune_gemm(shape, extra_tiles=extras)
+    assert tuned.n_candidates == len(with_extras)
 
 
 # ---------------------------------------------------------------------------
